@@ -1,0 +1,67 @@
+"""Paper Fig. 7 — ALS: Datasets vs ds-arrays.
+
+Measured: dense reduced-scale ALS (the Netflix matrix is sparse; see
+DESIGN.md §2 for the density adaptation) with identical math on both data
+structures; the Dataset variant pays the up-front N^2+N transposed copy, the
+ds-array variant uses the O(N)-task transpose view.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.algorithms import ALS, als_dataset
+from repro.core import Dataset, costmodel, from_array
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    f = 8
+    n, m = 512, 384
+    r = (rng.normal(size=(n, f)) @ rng.normal(size=(f, m))).astype(np.float32)
+
+    for parts in [4, 8, 16]:
+        ds = Dataset.from_array(r, parts)
+        t0 = time.perf_counter()
+        u, v = als_dataset(ds, n_factors=f, max_iter=5)
+        t_base = (time.perf_counter() - t0) * 1e6
+        rmse_b = float(np.sqrt((((u @ v.T) - r) ** 2).mean()))
+
+        # steady state: warm the jit cache with one fit, then time
+        est = ALS(n_factors=f, max_iter=5, check_convergence=False)
+        arr = from_array(r, (n // parts, m // parts))
+        est.fit(arr)  # compile
+        t0 = time.perf_counter()
+        als = est.fit(arr)
+        t_da = (time.perf_counter() - t0) * 1e6
+        rec = np.asarray((als.u_ @ als.v_.transpose()).collect())
+        rmse_a = float(np.sqrt(((rec - r) ** 2).mean()))
+
+        rows.append((f"fig7/measured/dataset/N={parts}", t_base,
+                     f"rmse={rmse_b:.4f};transpose_tasks="
+                     f"{costmodel.dataset_transpose_tasks(parts)}"))
+        rows.append((f"fig7/measured/dsarray/N={parts}", t_da,
+                     f"rmse={rmse_a:.4f};transpose_tasks="
+                     f"{costmodel.dsarray_transpose_tasks(parts, parts)}"))
+
+    # paper scale (192 partitions, Netflix 17,770 x 480,189)
+    tasks_ds = costmodel.dataset_als_tasks(192, 10)
+    tasks_da = costmodel.dsarray_als_tasks(192, 10)
+    rows.append(("fig7/model/task_ratio", 0.0,
+                 f"dataset={tasks_ds};dsarray={tasks_da}"))
+    # memory: Dataset ALS doubles the input matrix footprint
+    bytes_in = 17770 * 480189 * 4
+    rows.append(("fig7/model/memory", 0.0,
+                 f"dataset={2 * bytes_in / 2**30:.1f}GiB;"
+                 f"dsarray={bytes_in / 2**30:.1f}GiB"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

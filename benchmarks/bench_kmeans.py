@@ -1,0 +1,65 @@
+"""Paper Fig. 9 — K-means: the control experiment.
+
+The paper's point: K-means is representation-neutral, so ds-arrays must show
+NO regression vs Datasets.  Measured at matching partition counts; also
+benchmarks the fused Pallas kernel path (interpret mode — correctness/
+structure, not TPU wall-time).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row
+from repro.algorithms import KMeans, kmeans_dataset
+from repro.core import Dataset, from_array
+from repro.kernels.kmeans.ops import kmeans_assign
+from repro.kernels.kmeans.ref import kmeans_assign_ref
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    k, d = 8, 32
+    centers = rng.normal(size=(k, d)).astype(np.float32) * 6
+    pts = np.concatenate([
+        rng.normal(c, 0.5, size=(2000, d)).astype(np.float32)
+        for c in centers])
+    rng.shuffle(pts)
+
+    for parts in [8, 16]:
+        arr = from_array(pts, (pts.shape[0] // parts, d))
+        est = KMeans(n_clusters=k, max_iter=10, seed=0)
+        est.fit(arr)  # compile (steady-state timing below)
+        t0 = time.perf_counter()
+        est.fit(arr)
+        t_da = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        kmeans_dataset(Dataset.from_array(pts, parts), k, max_iter=10, seed=0)
+        t_ds = (time.perf_counter() - t0) * 1e6
+        ratio = t_da / t_ds
+        rows.append((f"fig9/measured/dsarray/N={parts}", t_da,
+                     f"ratio_vs_dataset={ratio:.2f}"))
+        rows.append((f"fig9/measured/dataset/N={parts}", t_ds, ""))
+
+    # fused-kernel inner loop vs oracle (structure check)
+    x = jnp_x = jax.numpy.asarray(pts[:4096])
+    c = jax.numpy.asarray(centers)
+    t0 = time.perf_counter()
+    l1, s1, c1 = kmeans_assign(jnp_x, c, block_n=512, interpret=True)
+    jax.block_until_ready(s1)
+    t_kernel = (time.perf_counter() - t0) * 1e6
+    l2, s2, c2 = kmeans_assign_ref(jnp_x, c)
+    ok = bool((np.asarray(l1) == np.asarray(l2)).all())
+    rows.append(("fig9/kernel/fused_assign(interpret)", t_kernel,
+                 f"allclose={ok};flops={2 * 4096 * k * d:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

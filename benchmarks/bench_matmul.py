@@ -1,0 +1,53 @@
+"""Beyond-paper table — distributed matmul schedules for ds-array ``@``.
+
+The paper's conclusions call out matmul as the op that makes dislib 'a
+distributed NumPy'; on TPU the schedule choice (GSPMD einsum vs explicit
+SUMMA vs Cannon) decides the collective pattern.  This bench reports the
+analytic per-device collective bytes per schedule at pod scale and measures
+small-scale correctness timing (single device).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, time_call
+from repro.core import costmodel, from_array
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(1024, 1024)).astype(np.float32)
+    y = rng.normal(size=(1024, 1024)).astype(np.float32)
+    a = from_array(x, (128, 128))
+    b = from_array(y, (128, 128))
+    f = jax.jit(lambda a, b: a @ b)
+    t = time_call(lambda: f(a, b).blocks)
+    out = np.asarray(f(a, b).collect())
+    ok = np.allclose(out, x @ y, atol=1e-2)
+    rows.append(("matmul/measured/blocked_1dev", t,
+                 f"allclose={ok};flops={2 * 1024**3:.2e}"))
+
+    # pod-scale analytic bytes per device (16x16 mesh, bf16)
+    n = k = m = 46080
+    summa = costmodel.tpu_summa_bytes(n, k, m, 2, 16, 16)
+    rows.append(("matmul/model/summa_bytes_per_dev", 0.0,
+                 f"{summa:.3e}B={costmodel.collective_time_s(summa)*1e3:.1f}ms"))
+    # Cannon: same volume, nearest-neighbour only (overlap-friendly)
+    rows.append(("matmul/model/cannon_bytes_per_dev", 0.0,
+                 f"{summa:.3e}B;neighbour_only=True"))
+    compute_s = 2.0 * n * k * m / 256 / 197e12
+    rows.append(("matmul/model/compute_per_dev", 0.0,
+                 f"{compute_s*1e3:.1f}ms;comm/compute="
+                 f"{costmodel.collective_time_s(summa)/compute_s:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,61 @@
+"""Paper Fig. 8 — shuffle weak scaling: Datasets vs ds-arrays.
+
+Measured: wall time at increasing partition counts (300 rows x 2 features
+per 'core', as the paper).  Modeled: the task-count laws
+N·min(N,S)+N vs 2N under the scheduler model at 1,536 cores.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, time_call
+from repro.core import Dataset, costmodel, from_array
+from repro.core.shuffle import pseudo_shuffle
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+
+    for n in [4, 8, 16, 32]:
+        x = rng.normal(size=(300 * n, 2)).astype(np.float32)  # weak scaling
+        ds = Dataset.from_array(x, n)
+        t0 = time.perf_counter()
+        out = ds.shuffle(np.random.default_rng(1))
+        t_dataset = (time.perf_counter() - t0) * 1e6
+        assert np.allclose(np.sort(out.collect(), 0), np.sort(x, 0))
+
+        a = from_array(x, (300, 2))
+        key = jax.random.PRNGKey(0)
+        f = jax.jit(lambda k, a: pseudo_shuffle(k, a))
+        t_dsarray = time_call(lambda: f(key, a).blocks)
+        size = x.shape[0] // n
+        rows.append((f"fig8/measured/dataset/N={n}", t_dataset,
+                     f"tasks={costmodel.dataset_shuffle_tasks(n, size)}"))
+        rows.append((f"fig8/measured/dsarray/N={n}", t_dsarray,
+                     f"tasks={costmodel.dsarray_shuffle_tasks(n)}"))
+
+    # paper scale: 1,536 cores, 300 samples/core
+    n = 1536
+    per_task = 300 * 2 * 4 / 2e9
+    t_ds = costmodel.pycompss_time(costmodel.dataset_shuffle_tasks(n, 300),
+                                   per_task, n)
+    t_da = costmodel.pycompss_time(costmodel.dsarray_shuffle_tasks(n),
+                                   per_task, n)
+    rows.append((f"fig8/model/dataset/cores={n}", t_ds * 1e6,
+                 f"seconds={t_ds:.1f}"))
+    rows.append((f"fig8/model/dsarray/cores={n}", t_da * 1e6,
+                 f"seconds={t_da:.1f}"))
+    rows.append(("fig8/model/improvement", 0.0,
+                 f"{(1 - t_da / t_ds) * 100:.0f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,71 @@
+"""Paper Fig. 6 — transpose: Datasets vs ds-arrays.
+
+Measured (container scale): wall time of the Dataset N^2+N task transpose vs
+the ds-array fused transpose at increasing partition counts.
+Modeled (MareNostrum scale): the calibrated PyCOMPSs scheduler model at the
+paper's 1,536 partitions, plus the TPU collective-byte cost of the same op.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, time_call
+from repro.core import Dataset, costmodel, from_array
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+
+    # ---- measured: strong scaling in partition count, fixed 1024x1024 ----
+    x = rng.normal(size=(1024, 1024)).astype(np.float32)
+    for n in [4, 8, 16, 32]:
+        ds = Dataset.from_array(x, n)
+        t0 = time.perf_counter()
+        out = ds.transpose()
+        t_dataset = (time.perf_counter() - t0) * 1e6
+        assert np.allclose(out.collect(), x.T)
+
+        a = from_array(x, (1024 // n, 1024 // n))
+        f = jax.jit(lambda a: a.transpose())
+        t_dsarray = time_call(lambda: f(a).blocks)
+        rows.append((f"fig6/measured/dataset/N={n}", t_dataset,
+                     f"tasks={costmodel.dataset_transpose_tasks(n)}"))
+        rows.append((f"fig6/measured/dsarray/N={n}", t_dsarray,
+                     f"tasks={costmodel.dsarray_transpose_tasks(n, n)}"))
+
+    # ---- modeled: the paper's strong-scaling experiment ----
+    n_sub = 1536
+    per_task_s = (46080 * 46080 * 4 / 1536) / 2e9   # bytes/task over ~2GB/s
+    for cores in [48, 96, 192, 384, 768]:
+        t_ds = costmodel.pycompss_time(
+            costmodel.dataset_transpose_tasks(n_sub), per_task_s, cores)
+        t_da = costmodel.pycompss_time(
+            costmodel.dsarray_transpose_tasks(n_sub, 1), per_task_s, cores)
+        rows.append((f"fig6/model/dataset/cores={cores}", t_ds * 1e6,
+                     f"hours={t_ds/3600:.2f}"))
+        rows.append((f"fig6/model/dsarray/cores={cores}", t_da * 1e6,
+                     f"seconds={t_da:.1f}"))
+
+    # paper claim: 4.5 h -> seconds at 768 cores (>=2 orders of magnitude)
+    speedup = (costmodel.pycompss_time(costmodel.dataset_transpose_tasks(n_sub),
+                                       per_task_s, 768)
+               / costmodel.pycompss_time(
+                   costmodel.dsarray_transpose_tasks(n_sub, 1), per_task_s, 768))
+    rows.append(("fig6/model/speedup@768cores", 0.0, f"x{speedup:.0f}"))
+
+    # ---- TPU analogue: collective bytes for the same matrix ----
+    b = costmodel.tpu_transpose_bytes(46080, 46080, 4, 16, 16)
+    rows.append(("fig6/tpu/collective_bytes_per_dev", 0.0,
+                 f"{b:.3e}B={costmodel.collective_time_s(b)*1e3:.2f}ms"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

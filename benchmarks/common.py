@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: timing, CSV rows."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time of fn(*args) in microseconds (jax-blocking)."""
+    import jax
+
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or \
+            isinstance(out, (list, tuple, dict)) else None
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        try:
+            jax.block_until_ready(out)
+        except Exception:                                    # noqa: BLE001
+            pass
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,352 @@
+"""Optimized-HLO analyzer: FLOPs / HBM bytes / collective bytes with
+while-loop trip-count multipliers.
+
+XLA's ``compiled.cost_analysis()`` counts every while-loop body ONCE
+(verified in this container: a 10-step scan reports 1/10th the flops of the
+unrolled version), which would understate a 64-layer scanned model by 64x.
+This module re-derives the three roofline inputs directly from
+``compiled.as_text()``:
+
+* **flops** — 2 · prod(result dims) · prod(contracting dims) per ``dot``
+  (recursing into fusion subcomputations), times the product of enclosing
+  loop trip counts (``backend_config known_trip_count``; falls back to the
+  loop-condition constant).
+* **hbm bytes** — Σ (operand + result bytes) over top-level data-moving
+  instructions.  In optimized HLO the fusion is the memory unit: every
+  fusion reads its operands from HBM and writes its result, so this is a
+  faithful post-fusion traffic model (elementwise chains inside a fusion
+  cost nothing extra).
+* **collective bytes** — Σ result bytes per collective kind (per-device
+  shard sizes, since SPMD HLO is the single-device program).
+
+All figures are PER DEVICE (the SPMD module is the per-device program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "token": 0, "u1": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s+"
+                       r"([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->.*{")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "domain", "iota"}
+
+# Ops a TPU compile fuses into neighbours (the CPU backend emits them as
+# standalone instructions, which would overcount HBM traffic ~10x).  The
+# "fused bytes" metric skips these entirely — the producer/consumer dots,
+# reduces and data-movement ops still charge their operands/results.
+_FUSIBLE = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+            "tanh", "exponential", "log", "rsqrt", "sqrt", "negate", "abs",
+            "compare", "select", "and", "or", "not", "xor", "convert",
+            "clamp", "power", "sign", "floor", "ceil", "round-nearest-even",
+            "round-nearest-afz", "broadcast", "reshape", "copy", "exp",
+            "expm1", "log-plus-one", "logistic", "cosine", "sine",
+            "is-finite", "shift-left", "shift-right-logical",
+            "shift-right-arithmetic", "popcnt", "clz", "real", "imag",
+            "atan2", "cbrt", "erf", "remainder", "map", "pad", "slice",
+            "concatenate", "reverse", "stochastic-convert"}
+
+
+def _shape_elems_bytes(dt: str, dims: str) -> Tuple[int, int]:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n, n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        _, b = _shape_elems_bytes(*m.groups())
+        total += b
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    rest: str          # everything after the opening paren
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    fused_bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_sites: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Totals", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.fused_bytes += other.fused_bytes * mult
+        for k in _COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+            self.coll_counts[k] += other.coll_counts[k] * mult
+        for site, b in other.coll_sites.items():
+            self.coll_sites[site] = self.coll_sites.get(site, 0.0) + b * mult
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._cache: Dict[str, Totals] = {}
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr:
+                cur = hdr.group(1)
+                self.computations[cur] = []
+                if line.startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                name, rtype, op, rest = m.groups()
+                self.computations[cur].append(Instr(name, rtype, op, rest))
+
+    # -- per-computation symbol table ---------------------------------------
+    def _sym(self, comp: str) -> Dict[str, str]:
+        return {i.name: i.result_type for i in self.computations.get(comp, [])}
+
+    def _dot_flops(self, instr: Instr, sym: Dict[str, str]) -> float:
+        out_dims = _shape_dims(instr.result_type) or []
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+        if not m:
+            return 0.0
+        cdims = [int(d) for d in m.group(1).split(",")] if m.group(1) else []
+        ops = _OPERAND_RE.findall(instr.rest.split(")", 1)[0])
+        if not ops:
+            return 0.0
+        lhs_type = sym.get(ops[0])
+        lhs_dims = _shape_dims(lhs_type or "") or []
+        k = 1
+        for d in cdims:
+            if d < len(lhs_dims):
+                k *= lhs_dims[d]
+        n_out = 1
+        for d in out_dims:
+            n_out *= d
+        return 2.0 * n_out * k
+
+    def analyze(self, comp: Optional[str] = None) -> Totals:
+        comp = comp or self.entry
+        if comp in self._cache:
+            return self._cache[comp]
+        t = Totals()
+        sym = self._sym(comp)
+        for instr in self.computations.get(comp, []):
+            op = instr.op
+            if op == "while":
+                trip = 1
+                mt = _TRIP_RE.search(instr.rest)
+                if mt:
+                    trip = int(mt.group(1))
+                else:
+                    trip = self._trip_from_cond(instr) or 1
+                mb = _BODY_RE.search(instr.rest)
+                if mb:
+                    t.add(self.analyze(mb.group(1)), trip)
+                mc = _COND_RE.search(instr.rest)
+                if mc:
+                    t.add(self.analyze(mc.group(1)), trip)
+                continue
+            if op in ("call", "async-start"):
+                mcalls = _CALLS_RE.search(instr.rest)
+                if mcalls:
+                    t.add(self.analyze(mcalls.group(1)))
+
+            # collectives (count -start, skip -done halves)
+            base = None
+            for kind in _COLLECTIVES:
+                if op == kind or (op.startswith(kind) and
+                                  not op.endswith("-done")):
+                    base = kind
+                    break
+            if base is not None:
+                b = _type_bytes(instr.result_type)
+                t.coll[base] += b
+                t.coll_counts[base] += 1
+                t.bytes += b + self._operand_bytes(instr, sym)
+                t.fused_bytes += b
+                site = f"{base}:{self._site(instr)}"
+                t.coll_sites[site] = t.coll_sites.get(site, 0.0) + b
+                continue
+            if op.endswith("-done"):
+                continue
+
+            if op == "dot":
+                t.flops += self._dot_flops(instr, sym)
+                b = (_type_bytes(instr.result_type)
+                     + self._operand_bytes(instr, sym))
+                t.bytes += b
+                t.fused_bytes += b
+                continue
+            if op == "fusion":
+                mcalls = _CALLS_RE.search(instr.rest)
+                inner_comp = mcalls.group(1) if mcalls else None
+                if inner_comp:
+                    inner = self.analyze(inner_comp)
+                    t.flops += inner.flops          # dots inside fusions
+                b = (_type_bytes(instr.result_type)
+                     + self._fusion_operand_bytes(instr, sym, inner_comp))
+                t.bytes += b
+                t.fused_bytes += b
+                continue
+            if op in ("dynamic-slice", "dynamic-update-slice", "gather"):
+                # reads/writes touch only the slice, not the (possibly
+                # loop-invariant stacked) full operand
+                b = 2 * _type_bytes(instr.result_type if op != "gather"
+                                    else instr.result_type)
+                t.bytes += b
+                t.fused_bytes += b
+                continue
+            if op in _NO_TRAFFIC:
+                continue
+            # generic data-moving op (copy, slice, reduce, scatter, ...)
+            b = (_type_bytes(instr.result_type)
+                 + self._operand_bytes(instr, sym))
+            t.bytes += b
+            if op not in _FUSIBLE:
+                t.fused_bytes += b
+        self._cache[comp] = t
+        return t
+
+    def _fusion_operand_bytes(self, instr: Instr, sym: Dict[str, str],
+                              inner_comp: Optional[str]) -> int:
+        """Operand bytes for a fusion, charging parameters that are consumed
+        ONLY via dynamic-slice / dynamic-update-slice / gather inside the
+        fused computation at their SLICE size (the actual read), not the full
+        (often loop-invariant stacked-weight) array size."""
+        args = instr.rest.split(")", 1)[0]
+        names = _OPERAND_RE.findall(args)
+        if not inner_comp or inner_comp not in self.computations:
+            return sum(_type_bytes(sym.get(n, "")) for n in names)
+        inner = self.computations[inner_comp]
+        # param name -> operand position
+        param_order = [i.name for i in inner if i.op == "parameter"]
+        sliced_only: Dict[str, int] = {}   # param name -> slice bytes
+        used_full = set()
+        for ii in inner:
+            ops_used = _OPERAND_RE.findall(ii.rest.split(")", 1)[0])
+            if ii.op in ("dynamic-slice", "gather"):
+                if ops_used:
+                    first, rest_ops = ops_used[0], ops_used[1:]
+                    sliced_only[first] = (sliced_only.get(first, 0)
+                                          + _type_bytes(ii.result_type))
+                    used_full.update(rest_ops)
+            elif ii.op == "dynamic-update-slice":
+                if ops_used:
+                    # operand 0 updated in place; charge update size
+                    first = ops_used[0]
+                    upd = ops_used[1] if len(ops_used) > 1 else None
+                    if upd:
+                        sliced_only[first] = (sliced_only.get(first, 0)
+                                              + _type_bytes(sym.get(upd, "")
+                                                            or ""))
+                    used_full.update(ops_used[2:])
+            elif ii.op != "parameter":
+                used_full.update(ops_used)
+        total = 0
+        for pos, pname in enumerate(param_order):
+            if pos >= len(names):
+                break
+            full = _type_bytes(sym.get(names[pos], ""))
+            if pname in sliced_only and pname not in used_full:
+                total += min(full, sliced_only[pname])
+            else:
+                total += full
+        return total
+
+    @staticmethod
+    def _site(instr: Instr) -> str:
+        m = re.search(r'op_name="([^"]*)"', instr.rest)
+        if m:
+            # keep the tail of the op_name path (most informative)
+            parts = m.group(1).split("/")
+            return "/".join(parts[-3:])[:90]
+        return instr.name[:40]
+
+    def _operand_bytes(self, instr: Instr, sym: Dict[str, str]) -> int:
+        args = instr.rest.split(")", 1)[0]
+        total = 0
+        for name in _OPERAND_RE.findall(args):
+            tstr = sym.get(name)
+            if tstr:
+                total += _type_bytes(tstr)
+        return total
+
+    def _trip_from_cond(self, instr: Instr) -> Optional[int]:
+        mc = _COND_RE.search(instr.rest)
+        if not mc:
+            return None
+        for ci in self.computations.get(mc.group(1), []):
+            if ci.op == "constant":
+                mval = re.search(r"constant\((\d+)\)", ci.op + "(" + ci.rest)
+                if mval:
+                    return int(mval.group(1))
+        return None
+
+
+def analyze_hlo(text: str, top_sites: int = 12) -> Dict[str, float]:
+    mod = HloModule(text)
+    t = mod.analyze()
+    out = {"flops": t.flops, "hbm_bytes": t.bytes,
+           "hbm_bytes_fused": t.fused_bytes,
+           "collective_bytes": sum(t.coll.values())}
+    for k in _COLLECTIVES:
+        out[f"{k}_bytes"] = t.coll[k]
+        out[f"{k}_count"] = t.coll_counts[k]
+    sites = sorted(t.coll_sites.items(), key=lambda kv: -kv[1])[:top_sites]
+    out["top_collective_sites"] = [
+        {"site": s, "bytes": b} for s, b in sites]
+    return out

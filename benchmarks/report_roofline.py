@@ -1,0 +1,79 @@
+"""Render the §Roofline table from dry-run JSON artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report_roofline \
+        results/dryrun_1pod.json [--md]
+
+Per (arch × shape): three roofline terms (s), dominant bottleneck, and the
+MODEL_FLOPS / HLO_FLOPs usefulness ratio.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks.roofline import model_flops, roofline_terms
+from repro.configs import get_config
+from repro.models.config import get_shape_cell
+
+
+def render(path: str, md: bool = False) -> list:
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for r in results:
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": r.get("status"),
+                         "reason": r.get("reason", r.get("error", ""))[:60]})
+            continue
+        hlo = r["hlo"]
+        terms = roofline_terms(hlo["flops"], hlo["hbm_bytes"],
+                               hlo["collective_bytes"])
+        cfg = get_config(r["arch"])
+        cell = get_shape_cell(r["shape"])
+        chips = r.get("chips", 256)
+        mf = model_flops(cfg, cell, r["kind"])
+        if r["kind"] == "train":
+            mf *= 1  # 6ND already includes bwd
+        hlo_total = hlo["flops"] * chips
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "kind": r["kind"],
+            "compute_s": terms["compute_s"], "memory_s": terms["memory_s"],
+            "collective_s": terms["collective_s"],
+            "dominant": terms["dominant"],
+            "roofline_fraction": terms["roofline_fraction"],
+            "model_flops_ratio": mf / hlo_total if hlo_total else 0.0,
+            "temp_gib": (r["memory"]["temp_bytes"] or 0) / 2**30,
+        })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = render(args.path, args.md)
+    if args.md:
+        print("| arch | shape | compute_s | memory_s | collective_s | "
+              "dominant | roofline | 6ND/HLO | temp GiB |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            if r["status"] != "ok":
+                print(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                      f"{r['status']} | — | — | — |")
+                continue
+            print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+                  f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+                  f"{r['dominant']} | {r['roofline_fraction']:.2f} | "
+                  f"{r['model_flops_ratio']:.2f} | {r['temp_gib']:.1f} |")
+    else:
+        for r in rows:
+            print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs / (chips · 197e12 bf16 FLOP/s)
+    memory     = HLO_bytes / (chips · 819e9 B/s HBM)
+    collective = Σ per-collective operand bytes / (chips · 50e9 B/s ICI link)
+
+``cost_analysis`` supplies FLOPs/bytes for the whole (already partitioned)
+module — i.e. totals across devices — so we divide by chip count.
+Collective bytes are NOT in cost_analysis: ``collective_bytes_from_hlo``
+parses the post-SPMD optimized HLO and sums operand sizes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute ops (these are
+per-PARTICIPANT shard sizes, i.e. already per-device).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'dtype[dims]' spec."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _result_bytes(result_part: str) -> int:
+    """Bytes of an op's result type (handles tuple results)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(result_part):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in the optimized HLO.
+
+    Using the RESULT shape is the per-device received-bytes convention:
+    all-gather result = full gathered tensor (bytes that land on each
+    device), reduce-scatter result = the scattered shard, all-to-all /
+    collective-permute results = shard moved per device.  For all-reduce the
+    result equals the input; ring traffic is 2·(P-1)/P · bytes — we report
+    raw result bytes and let the roofline term apply the ring factor via
+    ``ring_factor``.
+    """
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVE_KINDS}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match "%name = <type> <op>(" or fused kinds like all-reduce-start
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        result_part, op = m.groups()
+        base = None
+        for kind in _COLLECTIVE_KINDS:
+            if op == kind or op.startswith(kind + "-"):
+                base = kind
+                break
+        if base is None:
+            continue
+        if op.endswith("-done"):
+            continue  # async pair: count only the -start
+        out[base] += _result_bytes(result_part)
+        counts[base] += 1
+    total = sum(out.values())
+    return {**{f"{k}_bytes": v for k, v in out.items()},
+            **{f"{k}_count": counts[k] for k in counts},
+            "total_bytes": total}
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   collective_bytes_per_dev: float) -> Dict[str, float]:
+    """All inputs are PER-DEVICE (the SPMD module is the per-device program;
+    see benchmarks/hlo_analysis.py)."""
+    compute = flops_per_dev / PEAK_FLOPS
+    memory = bytes_per_dev / HBM_BW
+    collective = collective_bytes_per_dev / ICI_BW
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    total = max(compute, memory, collective)
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": collective, "dominant": dominant,
+            "bound_s": total,
+            "roofline_fraction": compute / total if total > 0 else 0.0}
+
+
+def model_flops(cfg, cell, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (fwd-only), N = active params."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * cell.global_batch

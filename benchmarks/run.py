@@ -1,0 +1,23 @@
+"""Benchmark driver — one section per paper figure (+ beyond-paper tables).
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline tables come from the
+dry-run artifacts (see ``benchmarks/report_roofline.py``), not from here,
+since they require the 512-device lowering.
+"""
+
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import (bench_als, bench_kmeans, bench_matmul,
+                            bench_shuffle, bench_transpose)
+    from benchmarks.common import emit
+
+    print("name,us_per_call,derived")
+    for mod in (bench_transpose, bench_als, bench_shuffle, bench_kmeans,
+                bench_matmul):
+        emit(mod.run())
+
+
+if __name__ == "__main__":
+    main()

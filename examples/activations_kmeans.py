@@ -1,0 +1,41 @@
+"""Cluster LM hidden states with distributed K-means — the ds-array data
+plane composing with the LM framework (paper §5.5 + DESIGN.md §4).
+
+Runs the qwen smoke model over synthetic batches, collects final hidden
+states as a ds-array, and clusters them.
+
+    PYTHONPATH=src python examples/activations_kmeans.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.algorithms import KMeans
+from repro.configs import get_smoke_config
+from repro.core import from_array
+from repro.data import PipelineConfig, SyntheticPipeline
+from repro.models.model import build_model
+
+cfg = get_smoke_config("qwen1.5-0.5b")
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+pipe = SyntheticPipeline(PipelineConfig(global_batch=8, seq_len=32,
+                                        vocab_size=cfg.vocab_size))
+
+hidden_fn = jax.jit(lambda p, t: model.module.forward_hidden(p, cfg, t)[0])
+states = []
+for step in range(4):
+    batch = pipe.batch_at(step)
+    h = hidden_fn(params, batch.tokens)          # (B, S, D)
+    states.append(np.asarray(h).reshape(-1, cfg.d_model))
+acts = np.concatenate(states)                     # (4*8*32, D)
+
+x = from_array(acts, (256, cfg.d_model))          # ds-array of activations
+km = KMeans(n_clusters=5, max_iter=25, seed=0).fit(x)
+labels = np.asarray(km.predict(x).collect()).ravel()
+sizes = np.bincount(labels, minlength=5)
+print(f"clustered {acts.shape[0]} hidden states (d={cfg.d_model}) "
+      f"into 5 groups, sizes={sizes.tolist()}, inertia={-km.score(x):.1f}")
+assert sizes.sum() == acts.shape[0]
+print("done.")

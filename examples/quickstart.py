@@ -1,0 +1,38 @@
+"""Quickstart: the ds-array NumPy-like API (paper §4.2.3).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import Dataset, from_array, random_array
+from repro.core import costmodel
+
+print("== ds-array quickstart ==")
+
+# create a blocked distributed array (blocks are the unit of distribution)
+key = jax.random.PRNGKey(0)
+x = random_array(key, shape=(1000, 400), block_shape=(250, 100))
+print("x:", x)
+
+# NumPy-like expressions run block-parallel (and through jax.jit):
+w = x[100:400, :200]                       # indexing -> new ds-array
+expr = (w.transpose().norm(axis=1) ** 2).sqrt()   # the paper's example
+print("paper expression result shape:", expr.shape)
+
+# matmul + reductions
+gram = x.transpose() @ x                   # (400, 400), SUMMA under a mesh
+col_mean = x.mean(axis=0)                  # paper Fig. 5 pattern
+print("gram:", gram.shape, "col_mean:", col_mean.shape)
+
+# compare with the Dataset (row-partitioned) baseline the paper replaces
+data = np.asarray(x.collect())
+ds = Dataset.from_array(data, 8)
+t = ds.transpose()
+print(f"Dataset transpose used {ds.counter.tasks} tasks "
+      f"(law: N^2+N = {costmodel.dataset_transpose_tasks(8)}), "
+      f"ds-array needs {costmodel.dsarray_transpose_tasks(8, 8)}")
+
+np.testing.assert_allclose(np.asarray(x.T.collect()), t.collect(), atol=1e-5)
+print("same result, two orders of magnitude fewer tasks at scale. done.")

@@ -1,0 +1,36 @@
+"""ALS recommender on ds-arrays (paper §5.3, reduced-scale dense).
+
+Builds a synthetic low-rank ratings matrix, factorizes it with the
+distributed ALS estimator, and reports reconstruction error + top-items
+for a user — the collaborative-filtering workflow the paper runs on the
+Netflix data.
+
+    PYTHONPATH=src python examples/recommender_als.py
+"""
+
+import numpy as np
+
+from repro.algorithms import ALS
+from repro.core import from_array
+
+rng = np.random.default_rng(0)
+n_items, n_users, rank = 300, 240, 6
+
+# ground-truth preferences + noisy observed ratings
+item_f = rng.normal(size=(n_items, rank)).astype(np.float32)
+user_f = rng.normal(size=(n_users, rank)).astype(np.float32)
+ratings = item_f @ user_f.T + 0.05 * rng.normal(size=(n_items, n_users)).astype(np.float32)
+
+r = from_array(ratings, (64, 64))
+als = ALS(n_factors=rank, reg=1e-2, max_iter=20, tol=1e-5).fit(r)
+
+rec = np.asarray((als.u_ @ als.v_.transpose()).collect())
+rmse = float(np.sqrt(((rec - ratings) ** 2).mean()))
+print(f"ALS: rank={rank} iters={als.n_iter_} rmse={rmse:.4f}")
+assert rmse < 0.1
+
+user = 17
+scores = rec[:, user]
+top = np.argsort(-scores)[:5]
+print(f"top-5 items for user {user}: {top.tolist()}")
+print("truth ranking head:      ", np.argsort(-(item_f @ user_f[user]))[:5].tolist())

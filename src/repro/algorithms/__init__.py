@@ -1,0 +1,6 @@
+"""Distributed ML algorithms built on ds-arrays (paper §5)."""
+
+from repro.algorithms.kmeans import KMeans, kmeans_dataset
+from repro.algorithms.als import ALS, als_dataset
+
+__all__ = ["KMeans", "kmeans_dataset", "ALS", "als_dataset"]

@@ -1,0 +1,125 @@
+"""Alternating Least Squares on ds-arrays (paper §5.3).
+
+The paper's point: ALS alternates row- and column-access to the ratings
+matrix.  Datasets (row-partitioned) must materialize a transposed COPY
+(N^2+N tasks + 2x memory); ds-arrays block both axes, so the column pass is
+just the transpose view — on TPU, grid-dim swaps that XLA lowers to a single
+collective (or zero, since ``R.T @ U`` contracts over the SAME axis layout).
+
+Model: weighted-regularized dense ALS (Hu/Koren/Volinsky form with uniform
+weights at container scale; the Netflix run in the paper is sparse — see
+DESIGN.md §2 for the density adaptation note):
+
+    U <- R  V (VᵀV + λI)⁻¹
+    V <- Rᵀ U (UᵀU + λI)⁻¹
+
+``f`` (latent factors) is small, so the Gram matrices are replicated; the
+big products R@V / Rᵀ@U are ds-array matmuls (SUMMA/Cannon under the mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dsarray import DsArray, from_array, random_array
+from repro.core.dataset_baseline import Dataset
+
+
+def _solve_gram(y: jnp.ndarray, reg: float) -> jnp.ndarray:
+    """(YᵀY + λI)⁻¹ for a small dense factor matrix Y (f×f solve)."""
+    f = y.shape[1]
+    gram = y.T @ y + reg * jnp.eye(f, dtype=y.dtype)
+    return jnp.linalg.inv(gram)
+
+
+@dataclasses.dataclass
+class ALS:
+    """dislib-style estimator: ``ALS(...).fit(r)`` with r an (n×m) ds-array."""
+
+    n_factors: int = 16
+    reg: float = 0.1
+    max_iter: int = 10
+    tol: float = 1e-4
+    seed: int = 0
+    check_convergence: bool = True
+
+    u_: Optional[DsArray] = None
+    v_: Optional[DsArray] = None
+    n_iter_: int = 0
+
+    def fit(self, r: DsArray) -> "ALS":
+        n, m = r.shape
+        f = self.n_factors
+        key = jax.random.PRNGKey(self.seed)
+        ku, kv = jax.random.split(key)
+        bn = r.block_shape[0]
+        bm = r.block_shape[1]
+        # factor matrices blocked along their long axis only
+        u = random_array(ku, (n, f), (bn, f)) * 0.1
+        v = random_array(kv, (m, f), (bm, f)) * 0.1
+        rt = r.transpose()  # ds-array transpose: grid swap, one fused op
+
+        prev = jnp.float32(jnp.inf)
+        it = 0
+        for it in range(1, self.max_iter + 1):
+            u, v = self._step(r, rt, u, v)
+            if self.check_convergence:
+                err = self._rmse(r, u, v)
+                if abs(prev - err) < self.tol:
+                    prev = err
+                    break
+                prev = err
+        self.u_, self.v_, self.n_iter_ = u, v, it
+        return self
+
+    @staticmethod
+    @jax.jit
+    def _step_jit(r: DsArray, rt: DsArray, u: DsArray, v: DsArray,
+                  reg: float) -> Tuple[DsArray, DsArray]:
+        vg = _solve_gram(v.collect(), reg)      # (f, f) replicated
+        u_new = (r @ v) @ from_array(vg, (v.block_shape[1], v.block_shape[1]))
+        ug = _solve_gram(u_new.collect(), reg)
+        v_new = (rt @ u_new) @ from_array(ug, (u_new.block_shape[1],
+                                               u_new.block_shape[1]))
+        return u_new, v_new
+
+    def _step(self, r, rt, u, v):
+        return ALS._step_jit(r, rt, u, v, self.reg)
+
+    def _rmse(self, r: DsArray, u: DsArray, v: DsArray) -> float:
+        pred = u @ v.transpose()
+        diff = pred - r
+        return float(jnp.sqrt((diff * diff).sum() / (r.shape[0] * r.shape[1])))
+
+    def predict(self, i: int, j: int) -> float:
+        """Predicted rating for (row i, col j)."""
+        return float((self.u_[i] @ self.v_[j].transpose()).collect()[0, 0])
+
+
+# ---------------------------------------------------------------------------
+# Dataset-baseline ALS: identical math, but the column pass must build the
+# transposed Dataset via the N^2+N task path (the paper's bottleneck).
+# ---------------------------------------------------------------------------
+
+
+def als_dataset(ds: Dataset, n_factors: int = 16, reg: float = 0.1,
+                max_iter: int = 10, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    r = ds.collect()
+    n, m = r.shape
+    u = rng.normal(size=(n, n_factors)).astype(r.dtype) * 0.1
+    v = rng.normal(size=(m, n_factors)).astype(r.dtype) * 0.1
+    ds_t = ds.transpose()  # N^2 + N tasks, 2x memory (the paper's complaint)
+    for _ in range(max_iter):
+        vg = np.linalg.inv(v.T @ v + reg * np.eye(n_factors, dtype=r.dtype))
+        partial_u = ds.map_subsets(lambda x: x @ v)
+        u = np.concatenate(partial_u, axis=0) @ vg
+        ug = np.linalg.inv(u.T @ u + reg * np.eye(n_factors, dtype=r.dtype))
+        partial_v = ds_t.map_subsets(lambda x: x @ u)
+        v = np.concatenate(partial_v, axis=0) @ ug
+    return u, v

@@ -1,0 +1,182 @@
+"""K-means on ds-arrays (paper §5.5) + the Dataset-baseline variant.
+
+The paper uses K-means as the control experiment: its parallelization
+(per-partition partial sums + a reduction) is representation-neutral, so
+ds-arrays must match Datasets.  Here the per-block-row "tasks" are one fused
+SPMD op over the stacked block tensor; the reduction tree becomes a psum over
+the `data` mesh axis when sharded.
+
+The hot inner loop (pairwise distances + argmin + one-hot partial sums) is
+also available as a fused Pallas kernel (``repro.kernels.kmeans``) — that is
+the TPU adaptation of the paper's per-Subset task.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dsarray import DsArray, from_array
+from repro.core.dataset_baseline import Dataset
+
+
+def _center_stats(blocks: jnp.ndarray, row_valid: jnp.ndarray,
+                  centers: jnp.ndarray, block_shape: Tuple[int, int],
+                  n_cols: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Distance + assign + partial sums over the stacked block tensor.
+
+    blocks:    (gn, gm, bn, bm) feature-blocked samples (pad = 0)
+    row_valid: (gn, bn) bool
+    centers:   (k, m_padded)    pad columns zero
+    returns (labels (gn, bn), sums (k, m_padded), counts (k,))
+    """
+    gn, gm, bn, bm = blocks.shape
+    k = centers.shape[0]
+    c_blocks = centers.reshape(k, gm, bm)
+    # x . c^T summed over feature blocks: (gn, bn, k)
+    dots = jnp.einsum("ijab,kjb->iak", blocks, c_blocks,
+                      preferred_element_type=jnp.float32)
+    x_sq = jnp.einsum("ijab,ijab->ia", blocks, blocks,
+                      preferred_element_type=jnp.float32)
+    c_sq = jnp.einsum("km,km->k", centers, centers,
+                      preferred_element_type=jnp.float32)
+    dist = x_sq[..., None] - 2.0 * dots + c_sq[None, None, :]
+    labels = jnp.argmin(dist, axis=-1)                      # (gn, bn)
+    onehot = jax.nn.one_hot(labels, k, dtype=blocks.dtype)  # (gn, bn, k)
+    onehot = onehot * row_valid[..., None].astype(blocks.dtype)
+    sums = jnp.einsum("iak,ijab->kjb", onehot, blocks,
+                      preferred_element_type=jnp.float32)
+    sums = sums.reshape(k, gm * bm)
+    counts = onehot.sum(axis=(0, 1))
+    return labels, sums, counts
+
+
+@functools.partial(jax.jit, static_argnames=("n_cols", "tol", "max_iter"))
+def _kmeans_run(blocks, centers0, row_valid, n_cols, tol, max_iter):
+    """Lloyd iterations as a jitted while_loop (module-level so repeated
+    ``fit`` calls hit the jit cache)."""
+
+    def cond(state):
+        _, shift, it = state
+        return (shift > tol) & (it < max_iter)
+
+    def body(state):
+        centers, _, it = state
+        _, sums, counts = _center_stats(blocks, row_valid, centers,
+                                        None, n_cols)
+        safe = jnp.maximum(counts, 1.0)[:, None]
+        new = jnp.where(counts[:, None] > 0, sums / safe, centers)
+        shift = jnp.sqrt(((new - centers) ** 2).sum())
+        return new, shift, it + 1
+
+    return jax.lax.while_loop(cond, body, (centers0, jnp.float32(jnp.inf), 0))
+
+
+def _kmeanspp_init(x: np.ndarray, k: int, rng: np.random.Generator) -> np.ndarray:
+    """k-means++ seeding (Arthur & Vassilvitskii) — D² sampling."""
+    n = x.shape[0]
+    centers = [x[rng.integers(n)]]
+    d2 = ((x - centers[0]) ** 2).sum(-1)
+    for _ in range(1, k):
+        p = d2 / max(d2.sum(), 1e-12)
+        centers.append(x[rng.choice(n, p=p)])
+        d2 = np.minimum(d2, ((x - centers[-1]) ** 2).sum(-1))
+    return np.stack(centers).astype(x.dtype)
+
+
+@dataclasses.dataclass
+class KMeans:
+    """dislib-style estimator: ``KMeans(...).fit(x)`` with x a ds-array."""
+
+    n_clusters: int = 8
+    max_iter: int = 20
+    tol: float = 1e-4
+    seed: int = 0
+
+    centers_: Optional[jnp.ndarray] = None
+    n_iter_: int = 0
+
+    def _row_valid(self, x: DsArray) -> jnp.ndarray:
+        gn, gm, bn, bm = x.blocks.shape
+        gi = jax.lax.broadcasted_iota(jnp.int32, (gn, bn), 0)
+        bi = jax.lax.broadcasted_iota(jnp.int32, (gn, bn), 1)
+        return (gi * bn + bi) < x.shape[0]
+
+    def fit(self, x: DsArray) -> "KMeans":
+        n, m = x.shape
+        gn, gm, bn, bm = x.blocks.shape
+        m_pad = gm * bm
+        # k-means++ init (k passes over the data; k is small)
+        init = jnp.pad(
+            jnp.asarray(_kmeanspp_init(np.asarray(x.collect()), self.n_clusters,
+                                       np.random.default_rng(self.seed))),
+            ((0, 0), (0, m_pad - m)))
+        row_valid = self._row_valid(x)
+        centers, _, iters = _kmeans_run(x.blocks, init, row_valid, m,
+                                        self.tol, self.max_iter)
+        self.centers_ = centers[:, :m]
+        self.n_iter_ = int(iters)
+        return self
+
+    def predict(self, x: DsArray) -> DsArray:
+        """Labels as a new (n, 1) ds-array — the paper's API fix (predict
+        returns a NEW distributed array instead of mutating the input)."""
+        if self.centers_ is None:
+            raise RuntimeError("call fit first")
+        gn, gm, bn, bm = x.blocks.shape
+        m_pad = gm * bm
+        centers = jnp.pad(self.centers_, ((0, 0), (0, m_pad - self.centers_.shape[1])))
+        labels, _, _ = _center_stats(x.blocks, self._row_valid(x), centers,
+                                     x.block_shape, x.shape[1])
+        flat = labels.reshape(-1, 1).astype(jnp.int32)[: x.shape[0]]
+        return from_array(flat, (x.block_shape[0], 1))
+
+    def score(self, x: DsArray) -> float:
+        """Negative inertia (sum of squared distances to nearest center)."""
+        gn, gm, bn, bm = x.blocks.shape
+        m_pad = gm * bm
+        centers = jnp.pad(self.centers_, ((0, 0), (0, m_pad - self.centers_.shape[1])))
+        c_blocks = centers.reshape(-1, gm, bm)
+        dots = jnp.einsum("ijab,kjb->iak", x.blocks, c_blocks)
+        x_sq = jnp.einsum("ijab,ijab->ia", x.blocks, x.blocks)
+        c_sq = jnp.einsum("km,km->k", centers, centers)
+        dist = x_sq[..., None] - 2 * dots + c_sq[None, None, :]
+        best = dist.min(axis=-1)
+        best = best * self._row_valid(x)
+        return float(-best.sum())
+
+
+# ---------------------------------------------------------------------------
+# Dataset-baseline K-means (paper Fig. 9 parity experiment)
+# ---------------------------------------------------------------------------
+
+
+def kmeans_dataset(ds: Dataset, n_clusters: int, max_iter: int = 20,
+                   tol: float = 1e-4, seed: int = 0) -> np.ndarray:
+    """K-means with the Dataset task structure: one partial-sum task per
+    Subset + a binary reduction tree per iteration (paper Fig. 3)."""
+    rng = np.random.default_rng(seed)
+    all_rows = ds.collect()
+    centers = _kmeanspp_init(all_rows, n_clusters, rng)
+    for _ in range(max_iter):
+        def partial(x, centers=centers):
+            d = ((x[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
+            lab = d.argmin(1)
+            oh = np.eye(n_clusters, dtype=x.dtype)[lab]
+            return np.concatenate([oh.T @ x, oh.sum(0)[:, None]], axis=1)
+
+        partials = ds.map_subsets(partial)
+        tot = ds.reduce(partials, np.add)
+        sums, counts = tot[:, :-1], tot[:, -1]
+        new = np.where(counts[:, None] > 0, sums / np.maximum(counts, 1)[:, None],
+                       centers)
+        shift = float(np.sqrt(((new - centers) ** 2).sum()))
+        centers = new
+        if shift < tol:
+            break
+    return centers

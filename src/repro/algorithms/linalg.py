@@ -1,0 +1,92 @@
+"""Blocked linear algebra on ds-arrays.
+
+The paper's conclusion: "ds-arrays extend dislib's functionality to common
+mathematical operations, such as matrix multiplication and decomposition, in
+a more natural way than using Datasets".  This module provides the
+decomposition side:
+
+* ``pca``        — top-k principal components by subspace (block power)
+  iteration: the data matrix is touched ONLY through ds-array matmuls
+  (Gram-vector products), so every pass is block-parallel / SUMMA-ready.
+* ``frobenius``  — blocked norm.
+* ``tsqr``       — tall-skinny QR: per-block-row local QRs + a reduction
+  tree over R factors (the paper's Fig. 3 pattern applied to factorization).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dsarray import DsArray, from_array
+
+
+def frobenius(a: DsArray) -> float:
+    return float(jnp.sqrt((a * a).sum()))
+
+
+def pca(x: DsArray, n_components: int, n_iter: int = 30, seed: int = 0
+        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k PCA of (n_samples × n_features) ds-array.
+
+    Returns (components (k, m), explained_variance (k,)).  Centers the data
+    via the ds-array mean (paper Fig. 5 column reduction), then runs
+    orthogonal (power) iteration on the Gram operator — only ds-array
+    matmuls touch the distributed data.
+    """
+    n, m = x.shape
+    mean = x.mean(axis=0)                         # (1, m) ds-array
+    xc = x - _broadcast_rows(mean, n)
+    q = jnp.linalg.qr(
+        jax.random.normal(jax.random.PRNGKey(seed), (m, n_components)))[0]
+    bq = (x.block_shape[1], n_components)
+    for _ in range(n_iter):
+        y = xc.transpose() @ (xc @ from_array(q, bq))   # (m, k) ds-array
+        q, _ = jnp.linalg.qr(y.collect())
+    proj = xc @ from_array(q, bq)                 # (n, k)
+    var = jnp.asarray((proj * proj).sum(axis=0).collect()).ravel() / (n - 1)
+    order = jnp.argsort(-var)
+    return q.T[order], var[order]
+
+
+def _broadcast_rows(row: DsArray, n: int) -> DsArray:
+    """(1, m) -> (n, m) ds-array with the row repeated (block-local)."""
+    g = row.collect()
+    return from_array(jnp.broadcast_to(g, (n, g.shape[1])), (
+        max(1, n // max(1, row.stacked_grid[1])), row.block_shape[1]))
+
+
+def tsqr(x: DsArray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Tall-skinny QR: local QR per block-row + an R-merge reduction tree.
+
+    Requires m <= block rows; returns (q (n, m) dense, r (m, m)).
+    """
+    n, m = x.shape
+    gn = x.stacked_grid[0]
+    # local QR per block-row (one 'task' per block-row)
+    blocks = np.array_split(np.asarray(x.collect()), gn, axis=0)
+    qs, rs = zip(*[np.linalg.qr(b) for b in blocks])
+    # reduction tree over stacked R factors (paper Fig. 3)
+    level_q = list(qs)
+    level_r = list(rs)
+    while len(level_r) > 1:
+        nq, nr = [], []
+        for i in range(0, len(level_r) - 1, 2):
+            stacked = np.concatenate([level_r[i], level_r[i + 1]], axis=0)
+            q2, r2 = np.linalg.qr(stacked)
+            nq.append((q2[:m], q2[m:]))
+            nr.append(r2)
+        merged_q = []
+        for j, (qa, qb) in enumerate(nq):
+            merged_q.append(np.concatenate(
+                [level_q[2 * j] @ qa, level_q[2 * j + 1] @ qb], axis=0))
+        if len(level_r) % 2:
+            merged_q.append(level_q[-1])
+            nr.append(level_r[-1])
+        level_q = merged_q
+        level_r = nr
+    q = np.concatenate(level_q, axis=0)
+    return jnp.asarray(q), jnp.asarray(level_r[0])

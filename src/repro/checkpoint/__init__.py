@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_step,
+                                         manifest_extra, restore, save)

@@ -1,0 +1,150 @@
+"""Sharded checkpointing with elastic resharding and async save.
+
+Layout (one directory per step)::
+
+    <root>/step_000100.tmp/       # written first
+        manifest.json             # tree structure, shapes, dtypes, step
+        leaf_00000.npy ...        # one file per pytree leaf
+    <root>/step_000100/           # atomic rename == commit
+
+Restore may target a DIFFERENT mesh than the save (elastic up/down-scaling):
+leaves are read on host and ``jax.device_put`` re-shards them to the
+requested sharding tree.  On a real multi-host pod each host writes only its
+addressable shards (per-shard files keyed by shard index — the layout keeps a
+``shards`` field for that; in this single-process container every leaf has
+one shard).
+
+``AsyncCheckpointer`` snapshots to host memory synchronously (cheap) and
+writes in a background thread so the train step is never blocked on disk.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save(root: str, step: int, tree: Params,
+         extra: Optional[Dict[str, Any]] = None) -> str:
+    """Synchronous checkpoint write with atomic commit."""
+    paths, leaves, _ = _flatten_with_paths(tree)
+    final = os.path.join(root, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({
+            "path": p, "file": fname, "shape": list(arr.shape),
+            "dtype": str(arr.dtype), "shards": 1,
+        })
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)          # commit
+    return final
+
+
+def latest_step(root: str) -> Optional[int]:
+    if not os.path.isdir(root):
+        return None
+    steps = []
+    for name in os.listdir(root):
+        if name.startswith("step_") and not name.endswith(".tmp") and \
+                os.path.exists(os.path.join(root, name, "manifest.json")):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(root: str, step: int, like: Params,
+            shardings: Optional[Params] = None) -> Params:
+    """Restore into the structure of ``like``; if ``shardings`` (a pytree of
+    NamedSharding / None) is given, leaves are placed accordingly — this is
+    the elastic-resharding path (the saved mesh is irrelevant)."""
+    d = os.path.join(root, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    paths, like_leaves, treedef = _flatten_with_paths(like)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    shard_leaves = (jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: x is None) if shardings is not None
+        else [None] * len(like_leaves))
+    out = []
+    for p, proto, sh in zip(paths, like_leaves, shard_leaves):
+        entry = by_path.get(p)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {p}")
+        arr = np.load(os.path.join(d, entry["file"]))
+        if list(arr.shape) != list(proto.shape):
+            raise ValueError(f"shape mismatch for {p}: {arr.shape} vs "
+                             f"{proto.shape}")
+        arr = arr.astype(proto.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jnp.asarray(arr))
+    return treedef.unflatten(out)
+
+
+def manifest_extra(root: str, step: int) -> Dict[str, Any]:
+    d = os.path.join(root, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        return json.load(f)["extra"]
+
+
+class AsyncCheckpointer:
+    """Snapshot-on-call, write-in-background.  ``wait()`` joins the writer
+    (call before process exit and before reading the checkpoint back)."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_committed: Optional[int] = None
+
+    def save(self, step: int, tree: Params,
+             extra: Optional[Dict[str, Any]] = None) -> None:
+        self.wait()
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            save(self.root, step, host_tree, extra)
+            self.last_committed = step
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.root):
+            return
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.root)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:08d}"),
+                          ignore_errors=True)

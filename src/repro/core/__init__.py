@@ -1,0 +1,28 @@
+"""repro.core — the ds-array distributed data structure (the paper's contribution).
+
+Public API mirrors the paper's NumPy-like interface (§4.2.3): creation
+routines, indexing, elementwise algebra, reductions, transpose, matmul,
+shuffles, plus explicit-collective variants for performance work.
+"""
+
+from repro.core.blocking import BlockGrid, ceil_div, round_up
+from repro.core.dsarray import (
+    DsArray,
+    concat_rows,
+    eye,
+    from_array,
+    full,
+    identity_like,
+    random_array,
+    zeros,
+)
+from repro.core.shuffle import exact_shuffle, pseudo_shuffle
+from repro.core import costmodel
+from repro.core.dataset_baseline import Dataset, Subset, TaskCounter
+
+__all__ = [
+    "BlockGrid", "DsArray", "Dataset", "Subset", "TaskCounter",
+    "from_array", "zeros", "full", "eye", "identity_like", "random_array",
+    "concat_rows", "pseudo_shuffle", "exact_shuffle", "costmodel",
+    "ceil_div", "round_up",
+]

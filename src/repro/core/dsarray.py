@@ -1,0 +1,452 @@
+"""DsArray: the paper's distributed array, adapted to JAX/TPU.
+
+A ds-array is a 2-D array divided into blocks of arbitrary size that live on
+different workers and are operated on by per-block parallel tasks behind a
+NumPy-like API (paper §4.2).  The TPU-native representation used here is a
+single **stacked block tensor** of shape ``(gn, gm, bn, bm)`` — grid dims
+first, block dims last — which is the direct SPMD analogue of the paper's
+list-of-lists-of-blocks:
+
+* grid cell (i, j)               <->  paper block (i, j)
+* sharding grid dims over a mesh <->  PyCOMPSs placing blocks on workers
+* vectorized op over grid dims   <->  one PyCOMPSs task per block
+* XLA collective                 <->  inter-worker future transfer
+
+Everything is a pure function of the stacked tensor, so a DsArray traces
+through ``jax.jit`` and shards with ``NamedSharding(P(axis0, axis1))`` on the
+grid dims.  Edge blocks are zero-padded; the **pad-is-zero invariant** is
+maintained by every public op (re-masking is a fused, nearly-free op under
+jit) so reductions and matmuls never see garbage.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Callable, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.blocking import BlockGrid, ceil_div, round_up
+
+Number = Union[int, float]
+
+
+def _valid_mask(grid: BlockGrid, stacked_grid: Tuple[int, int]) -> jnp.ndarray:
+    """Boolean mask over the stacked tensor marking logically-valid elements.
+
+    ``stacked_grid`` may exceed ``grid.grid`` when the grid was padded to a
+    mesh multiple; the extra all-pad blocks mask out naturally because their
+    global indices exceed the logical shape.
+    """
+    n, m = grid.shape
+    bn, bm = grid.block_shape
+    gn, gm = stacked_grid
+    shape = (gn, gm, bn, bm)
+    gi = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    gj = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    bi = jax.lax.broadcasted_iota(jnp.int32, shape, 2)
+    bj = jax.lax.broadcasted_iota(jnp.int32, shape, 3)
+    return ((gi * bn + bi) < n) & ((gj * bm + bj) < m)
+
+
+@jax.tree_util.register_pytree_node_class
+class DsArray:
+    """2-D blocked distributed array with a NumPy-like API (paper §4.2.3).
+
+    Do not call the constructor with unpadded data; use :func:`from_array`,
+    :func:`zeros`, :func:`random_array` etc.
+    """
+
+    __slots__ = ("blocks", "grid")
+
+    def __init__(self, blocks: jnp.ndarray, grid: BlockGrid):
+        if blocks.ndim != 4:
+            raise ValueError(f"stacked block tensor must be rank 4, got {blocks.shape}")
+        bn, bm = grid.block_shape
+        if blocks.shape[2:] != (bn, bm):
+            raise ValueError(
+                f"block dims {blocks.shape[2:]} != block_shape {grid.block_shape}"
+            )
+        gn, gm = grid.grid
+        if blocks.shape[0] < gn or blocks.shape[1] < gm:
+            raise ValueError(
+                f"stacked grid {blocks.shape[:2]} smaller than logical grid {grid.grid}"
+            )
+        self.blocks = blocks
+        self.grid = grid
+
+    # -- pytree protocol ------------------------------------------------------
+    def tree_flatten(self):
+        return (self.blocks,), self.grid
+
+    @classmethod
+    def tree_unflatten(cls, grid, children):
+        (blocks,) = children
+        return cls(blocks, grid)
+
+    # -- basic properties -----------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.grid.shape
+
+    @property
+    def block_shape(self) -> Tuple[int, int]:
+        return self.grid.block_shape
+
+    @property
+    def stacked_grid(self) -> Tuple[int, int]:
+        return self.blocks.shape[:2]
+
+    @property
+    def dtype(self):
+        return self.blocks.dtype
+
+    @property
+    def ndim(self) -> int:
+        return 2
+
+    @property
+    def T(self) -> "DsArray":
+        return self.transpose()
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"DsArray(shape={self.shape}, block_shape={self.block_shape}, "
+            f"grid={self.stacked_grid}, dtype={self.dtype})"
+        )
+
+    # -- masking --------------------------------------------------------------
+    def _mask(self) -> jnp.ndarray:
+        return _valid_mask(self.grid, self.stacked_grid)
+
+    def _remask(self, fill: Number = 0) -> jnp.ndarray:
+        """Blocks with the pad region forced to ``fill``."""
+        fill_v = jnp.asarray(fill, dtype=self.blocks.dtype)
+        return jnp.where(self._mask(), self.blocks, fill_v)
+
+    def _with_blocks(self, blocks: jnp.ndarray, grid: Optional[BlockGrid] = None) -> "DsArray":
+        return DsArray(blocks, grid if grid is not None else self.grid)
+
+    # -- materialization ------------------------------------------------------
+    def collect(self) -> jnp.ndarray:
+        """Paper §4.2.3 ``collect``: merge the blocks into one local array."""
+        gn, gm, bn, bm = self.blocks.shape
+        n, m = self.shape
+        global_form = self.blocks.transpose(0, 2, 1, 3).reshape(gn * bn, gm * bm)
+        return global_form[:n, :m]
+
+    def _global_padded(self) -> jnp.ndarray:
+        """Global layout including pad (pad guaranteed zero)."""
+        gn, gm, bn, bm = self.blocks.shape
+        return self.blocks.transpose(0, 2, 1, 3).reshape(gn * bn, gm * bm)
+
+    # -- elementwise ----------------------------------------------------------
+    def _binary(self, other, op: Callable, reverse: bool = False) -> "DsArray":
+        if isinstance(other, DsArray):
+            if other.shape != self.shape or other.block_shape != self.block_shape:
+                if other.shape != self.shape:
+                    raise ValueError(
+                        f"shape mismatch {self.shape} vs {other.shape}")
+                other = other.rechunk(self.block_shape)
+            if other.stacked_grid != self.stacked_grid:
+                other = other._pad_grid_to(self.stacked_grid)
+            rhs = other.blocks
+        elif isinstance(other, (int, float, jnp.ndarray, np.ndarray)) and jnp.ndim(other) == 0:
+            rhs = other
+        else:
+            return NotImplemented
+        out = op(rhs, self.blocks) if reverse else op(self.blocks, rhs)
+        res = DsArray(out, BlockGrid(self.shape, self.block_shape))
+        return res._with_blocks(res._remask())
+
+    def __add__(self, o):
+        return self._binary(o, jnp.add)
+
+    __radd__ = __add__
+
+    def __sub__(self, o):
+        return self._binary(o, jnp.subtract)
+
+    def __rsub__(self, o):
+        return self._binary(o, jnp.subtract, reverse=True)
+
+    def __mul__(self, o):
+        return self._binary(o, jnp.multiply)
+
+    __rmul__ = __mul__
+
+    def __truediv__(self, o):
+        return self._binary(o, jnp.divide)
+
+    def __rtruediv__(self, o):
+        return self._binary(o, jnp.divide, reverse=True)
+
+    def __pow__(self, o):
+        return self._binary(o, jnp.power)
+
+    def __neg__(self):
+        return self.map_blocks(jnp.negative)
+
+    def map_blocks(self, fn: Callable[[jnp.ndarray], jnp.ndarray]) -> "DsArray":
+        """Apply an elementwise function to every block (one 'task' per block);
+        re-masks to preserve the pad-is-zero invariant."""
+        out = fn(self.blocks)
+        if out.shape != self.blocks.shape:
+            raise ValueError("map_blocks must preserve block shapes")
+        res = DsArray(out, self.grid)
+        return res._with_blocks(res._remask())
+
+    def sqrt(self) -> "DsArray":
+        return self.map_blocks(jnp.sqrt)
+
+    def exp(self) -> "DsArray":
+        return self.map_blocks(jnp.exp)
+
+    def abs(self) -> "DsArray":
+        return self.map_blocks(jnp.abs)
+
+    def astype(self, dtype) -> "DsArray":
+        return DsArray(self.blocks.astype(dtype), self.grid)
+
+    # -- structural ops ---------------------------------------------------------
+    def transpose(self) -> "DsArray":
+        """Paper §5.2: local per-block transpose + block-grid permutation.
+
+        One fused op over the stacked tensor; on a sharded array XLA lowers the
+        grid-dim swap to a single all-to-all (vs. the Dataset baseline's
+        N^2 + N scatter/gather — see core/dataset_baseline.py).
+        """
+        out = jnp.swapaxes(jnp.swapaxes(self.blocks, 0, 1), 2, 3)
+        return DsArray(out, self.grid.transpose())
+
+    def _pad_grid_to(self, stacked_grid: Tuple[int, int]) -> "DsArray":
+        gn, gm = self.stacked_grid
+        tn, tm = stacked_grid
+        if (tn, tm) == (gn, gm):
+            return self
+        if tn < gn or tm < gm:
+            raise ValueError("can only grow the stacked grid")
+        out = jnp.pad(self.blocks, ((0, tn - gn), (0, tm - gm), (0, 0), (0, 0)))
+        return DsArray(out, self.grid)
+
+    def rechunk(self, block_shape: Tuple[int, int]) -> "DsArray":
+        """Re-block to a new block size (the paper's 'arbitrary block size'
+        flexibility; Datasets cannot do this at all)."""
+        if tuple(block_shape) == self.block_shape:
+            return self
+        return from_array(self._global_padded()[: self.shape[0], : self.shape[1]],
+                          block_shape)
+
+    def __matmul__(self, other: "DsArray") -> "DsArray":
+        """Blocked matmul: C[i,j] = sum_k A[i,k] @ B[k,j].
+
+        The einsum over (grid-k, block-k) is exactly the paper's per-block
+        task graph; under pjit the grid contraction becomes a psum/SUMMA
+        schedule chosen by SPMD partitioning (see core/shmap_ops.py for the
+        explicitly-scheduled version used in §Perf).
+        """
+        if not isinstance(other, DsArray):
+            return NotImplemented
+        if self.shape[1] != other.shape[0]:
+            raise ValueError(f"matmul shape mismatch {self.shape} @ {other.shape}")
+        if self.block_shape[1] != other.block_shape[0]:
+            other = other.rechunk((self.block_shape[1], other.block_shape[1]))
+        if self.stacked_grid[1] != other.stacked_grid[0]:
+            k = max(self.stacked_grid[1], other.stacked_grid[0])
+            a = self._pad_grid_to((self.stacked_grid[0], k))
+            b = other._pad_grid_to((k, other.stacked_grid[1]))
+        else:
+            a, b = self, other
+        out = jnp.einsum("ikab,kjbc->ijac", a.blocks, b.blocks,
+                         preferred_element_type=jnp.promote_types(a.dtype, jnp.float32)
+                         if jnp.issubdtype(a.dtype, jnp.floating) else None)
+        out = out.astype(jnp.promote_types(a.dtype, b.dtype))
+        grid = BlockGrid((self.shape[0], other.shape[1]),
+                         (self.block_shape[0], other.block_shape[1]))
+        return DsArray(out, grid)
+
+    # -- reductions ---------------------------------------------------------
+    def _reduce(self, op: str, axis: Optional[int]) -> Union["DsArray", jnp.ndarray]:
+        fill = {"sum": 0, "max": -jnp.inf, "min": jnp.inf}[op]
+        if jnp.issubdtype(self.dtype, jnp.integer):
+            fill = {"sum": 0,
+                    "max": jnp.iinfo(self.dtype).min,
+                    "min": jnp.iinfo(self.dtype).max}[op]
+        x = self._remask(fill)
+        red = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min}[op]
+        if axis is None:
+            return red(x)
+        if axis == 0:
+            # Paper Fig. 5: one task per *column* of blocks, then a psum over
+            # the `data` mesh axis — possible only because ds-arrays block
+            # both axes (Datasets must gather everything; Fig. 3).
+            out = red(x, axis=(0, 2))  # (gm, bm)
+            gm, bm = out.shape
+            blocks = out.reshape(1, gm, 1, bm)
+            grid = BlockGrid((1, self.shape[1]), (1, bm))
+        elif axis == 1:
+            out = red(x, axis=(1, 3))  # (gn, bn)
+            gn, bn = out.shape
+            blocks = out.reshape(gn, 1, bn, 1)
+            grid = BlockGrid((self.shape[0], 1), (bn, 1))
+        else:
+            raise ValueError(f"axis must be 0, 1 or None, got {axis}")
+        res = DsArray(blocks, grid)
+        return res._with_blocks(res._remask())
+
+    def sum(self, axis: Optional[int] = None):
+        return self._reduce("sum", axis)
+
+    def max(self, axis: Optional[int] = None):
+        return self._reduce("max", axis)
+
+    def min(self, axis: Optional[int] = None):
+        return self._reduce("min", axis)
+
+    def mean(self, axis: Optional[int] = None):
+        n, m = self.shape
+        denom = {None: n * m, 0: n, 1: m}[axis]
+        s = self.sum(axis)
+        if isinstance(s, DsArray):
+            return s / float(denom)
+        return s / denom
+
+    def norm(self, axis: Optional[int] = None):
+        """Euclidean norm along an axis (paper's ``w.norm(axis=1)`` example)."""
+        sq = self._binary(self, jnp.multiply)  # x*x keeps pad zero
+        s = sq.sum(axis)
+        if isinstance(s, DsArray):
+            return s.sqrt()
+        return jnp.sqrt(s)
+
+    # -- indexing ------------------------------------------------------------
+    def __getitem__(self, key) -> "DsArray":
+        """NumPy-style indexing returning a new ds-array (paper §4.2.3).
+
+        Supports ``A[r]``, ``A[r0:r1]``, ``A[r0:r1, c0:c1]``, integer rows/
+        cols, and integer-array row selection (the paper's 'filtering').
+        """
+        if not isinstance(key, tuple):
+            key = (key, slice(None))
+        if len(key) != 2:
+            raise IndexError("ds-arrays are 2-D")
+        rows, cols = key
+        g = self._global_padded()[: self.shape[0], : self.shape[1]]
+
+        def norm_idx(k, size):
+            if isinstance(k, slice):
+                start, stop, step = k.indices(size)
+                if step != 1:
+                    return np.arange(start, stop, step)
+                return slice(start, stop)
+            if isinstance(k, int):
+                if k < 0:
+                    k += size
+                return slice(k, k + 1)
+            return np.asarray(k)
+
+        r = norm_idx(rows, self.shape[0])
+        c = norm_idx(cols, self.shape[1])
+        sub = g[r][:, c] if not isinstance(r, slice) else g[r, c]
+        if sub.ndim == 1:
+            sub = sub.reshape(-1, 1)
+        bn = min(self.block_shape[0], max(1, sub.shape[0]))
+        bm = min(self.block_shape[1], max(1, sub.shape[1]))
+        return from_array(sub, (bn, bm))
+
+    # -- distribution ---------------------------------------------------------
+    def distribute(self, mesh: Mesh, axes: Tuple[Optional[str], Optional[str]] = ("data", "model")) -> "DsArray":
+        """Place blocks onto a device mesh: grid dims sharded over named axes.
+
+        Pads the grid to mesh-axis multiples first (all-pad blocks mask out),
+        the SPMD analogue of PyCOMPSs assigning whole blocks to workers.
+        """
+        dn = mesh.shape[axes[0]] if axes[0] else 1
+        dm = mesh.shape[axes[1]] if axes[1] else 1
+        gn, gm = self.stacked_grid
+        padded = self._pad_grid_to((round_up(gn, dn), round_up(gm, dm)))
+        sharding = NamedSharding(mesh, P(axes[0], axes[1], None, None))
+        blocks = jax.device_put(padded.blocks, sharding)
+        return DsArray(blocks, self.grid)
+
+    def sharding_spec(self, axes=("data", "model")) -> P:
+        return P(axes[0], axes[1], None, None)
+
+
+# ---------------------------------------------------------------------------
+# Creation routines (paper §4.2.2: "one task per block", here one fused op).
+# ---------------------------------------------------------------------------
+
+
+def from_array(arr, block_shape: Tuple[int, int]) -> DsArray:
+    """Block a local 2-D array into a ds-array."""
+    arr = jnp.asarray(arr)
+    if arr.ndim == 1:
+        arr = arr.reshape(-1, 1)
+    if arr.ndim != 2:
+        raise ValueError(f"ds-arrays are 2-D, got shape {arr.shape}")
+    grid = BlockGrid(tuple(arr.shape), tuple(block_shape))
+    (gn, gm), (bn, bm) = grid.grid, grid.block_shape
+    pn, pm = grid.padded_shape
+    padded = jnp.pad(arr, ((0, pn - arr.shape[0]), (0, pm - arr.shape[1])))
+    blocks = padded.reshape(gn, bn, gm, bm).transpose(0, 2, 1, 3)
+    return DsArray(blocks, grid)
+
+
+def zeros(shape: Tuple[int, int], block_shape: Tuple[int, int], dtype=jnp.float32) -> DsArray:
+    grid = BlockGrid(tuple(shape), tuple(block_shape))
+    return DsArray(jnp.zeros(grid.stacked_shape, dtype), grid)
+
+
+def full(shape, block_shape, fill_value, dtype=jnp.float32) -> DsArray:
+    z = zeros(shape, block_shape, dtype)
+    return z + fill_value
+
+
+def eye(n: int, block_shape: Tuple[int, int], dtype=jnp.float32) -> DsArray:
+    grid = BlockGrid((n, n), tuple(block_shape))
+    gn, gm, bn, bm = grid.stacked_shape
+    shape = (gn, gm, bn, bm)
+    gi = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    gj = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    bi = jax.lax.broadcasted_iota(jnp.int32, shape, 2)
+    bj = jax.lax.broadcasted_iota(jnp.int32, shape, 3)
+    row = gi * bn + bi
+    col = gj * bm + bj
+    blocks = ((row == col) & (row < n)).astype(dtype)
+    return DsArray(blocks, grid)
+
+
+def random_array(key, shape: Tuple[int, int], block_shape: Tuple[int, int],
+                 dtype=jnp.float32, distribution: str = "uniform") -> DsArray:
+    """Paper §4.2.2 ``random_array``: one independent RNG stream per block
+    ("one task per block"), so the result is identical however the grid is
+    later re-distributed."""
+    grid = BlockGrid(tuple(shape), tuple(block_shape))
+    gn, gm = grid.grid
+    bn, bm = grid.block_shape
+    keys = jax.random.split(key, gn * gm)
+    keys = keys.reshape((gn, gm) + keys.shape[1:])  # raw uint32 keys keep a trailing dim
+    sampler = {"uniform": jax.random.uniform, "normal": jax.random.normal}[distribution]
+    blocks = jax.vmap(jax.vmap(lambda k: sampler(k, (bn, bm), dtype)))(keys)
+    res = DsArray(blocks, grid)
+    return res._with_blocks(res._remask())
+
+
+def identity_like(a: DsArray) -> DsArray:
+    if a.shape[0] != a.shape[1]:
+        raise ValueError("identity_like needs a square array")
+    return eye(a.shape[0], a.block_shape, a.dtype)
+
+
+def concat_rows(arrays: Sequence[DsArray]) -> DsArray:
+    """Vertical concatenation (the paper Dataset ``append`` generalized)."""
+    first = arrays[0]
+    bs = first.block_shape
+    parts = [a.rechunk(bs) if a.block_shape != bs else a for a in arrays]
+    glob = jnp.concatenate([p.collect() for p in parts], axis=0)
+    return from_array(glob, bs)

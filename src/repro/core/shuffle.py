@@ -1,0 +1,50 @@
+"""Row shuffles for ds-arrays (paper §5.4).
+
+The paper's pseudo-shuffle splits every partition into random parts and
+re-merges one part from each into new partitions; with COLLECTION multi-I/O
+tasks it costs 2N tasks vs N·min(N,S)+N for Datasets.  On TPU the analogue is:
+
+* ``pseudo_shuffle``   — two stages: (1) permute block-rows (grid metadata →
+  a collective-permute when sharded), (2) an independent row permutation
+  inside every block-row (local).  Exactly the paper's 2-stage structure,
+  one all_to_all + one local op.
+* ``exact_shuffle``    — a single global row permutation (gather), for when
+  callers need a uniform shuffle; costs a full all-to-all like the paper's
+  "extremely costly" exact shuffle.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dsarray import DsArray, from_array
+
+
+def pseudo_shuffle(key, a: DsArray) -> DsArray:
+    """Paper's 2-stage pseudo shuffle: permute block-rows, then rows within
+    each block-row.  Not a uniform permutation, but 'sufficient for most use
+    cases' (paper §5.4); every row keeps exactly one copy."""
+    if a.shape[0] != a.grid.padded_shape[0]:
+        # rows must tile evenly for the in-block stage to be a permutation
+        return exact_shuffle(key, a)
+    k1, k2 = jax.random.split(key)
+    gn = a.stacked_grid[0]
+    # stage 1: one "task" moving whole block-rows (a ppermute when sharded)
+    perm = jax.random.permutation(k1, gn)
+    blocks = a.blocks[perm]
+    # stage 2: one task per block-row permuting rows locally across its blocks
+    bn = a.block_shape[0]
+    row_perms = jax.vmap(lambda k: jax.random.permutation(k, bn))(
+        jax.random.split(k2, gn))
+    blocks = jax.vmap(lambda b, p: b[:, p, :])(blocks, row_perms)
+    return DsArray(blocks, a.grid)
+
+
+def exact_shuffle(key, a: DsArray) -> DsArray:
+    """Uniform random permutation of rows (global gather)."""
+    g = a.collect()
+    perm = jax.random.permutation(key, a.shape[0])
+    return from_array(jnp.take(g, perm, axis=0), a.block_shape)

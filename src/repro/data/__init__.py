@@ -1,0 +1,2 @@
+from repro.data.pipeline import (Batch, PipelineConfig, SyntheticPipeline,
+                                 pipeline_for_model)

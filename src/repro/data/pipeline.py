@@ -1,0 +1,117 @@
+"""Deterministic, sharded, synthetic data pipeline (ds-array-backed).
+
+Paper alignment: dislib "loads data in parallel … Subsets are not stored in
+local memory but remotely" (§3.2.1).  Here every global batch is generated
+SPMD-sharded — each device materializes only its own (B/dp, S) block, exactly
+the ds-array creation discipline (one task per block; see
+``DsArray.random_array``).  ``as_dsarray`` exposes the batch as a ds-array so
+the algorithm layer (K-means/ALS over activations etc.) composes.
+
+Determinism/fault tolerance: batch ``i`` depends only on (seed, i), so
+restart-at-step-k needs no replay — the cursor is one integer in the
+checkpoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.dsarray import DsArray, from_array
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    seed: int = 0
+    global_batch: int = 8
+    seq_len: int = 128
+    vocab_size: int = 256
+    frontend: str = "none"          # none | vision | audio
+    frontend_dim: int = 0
+    frontend_tokens: int = 0
+
+
+import functools
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["tokens", "labels", "patches"],
+                   meta_fields=[])
+@dataclasses.dataclass
+class Batch:
+    tokens: jnp.ndarray                    # (B, S) int32
+    labels: jnp.ndarray                    # (B, S) int32  (next-token)
+    patches: Optional[jnp.ndarray] = None  # (B, P, F) frontend embeddings
+
+    def as_dsarray(self, block_rows: Optional[int] = None) -> DsArray:
+        br = block_rows or max(1, self.tokens.shape[0] // 8)
+        return from_array(self.tokens, (br, self.tokens.shape[1]))
+
+
+def _gen_batch(key, cfg: PipelineConfig) -> Batch:
+    """Markov-ish synthetic tokens: mixes a random walk with noise so the
+    next-token task is learnable (loss visibly decreases in the examples)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    b, s, v = cfg.global_batch, cfg.seq_len, cfg.vocab_size
+    base = jax.random.randint(k1, (b, 1), 0, v, jnp.int32)
+    steps = jax.random.randint(k2, (b, s), -3, 4, jnp.int32)
+    tokens = jnp.mod(base + jnp.cumsum(steps, axis=1), v)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    patches = None
+    if cfg.frontend != "none":
+        patches = jax.random.normal(
+            k3, (b, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32)
+    return Batch(tokens=tokens, labels=labels, patches=patches)
+
+
+class SyntheticPipeline:
+    """Stateless-per-step pipeline; ``state`` is just the step cursor."""
+
+    def __init__(self, cfg: PipelineConfig, mesh: Optional[Mesh] = None,
+                 dp_axes: Tuple[str, ...] = ("data",)):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.dp_axes = dp_axes
+        out_shardings = None
+        if mesh is not None:
+            spec2 = NamedSharding(mesh, P(dp_axes, None))
+            spec3 = NamedSharding(mesh, P(dp_axes, None, None))
+            out_shardings = Batch(
+                tokens=spec2, labels=spec2,
+                patches=spec3 if cfg.frontend != "none" else None)
+        self._gen = jax.jit(lambda k: _gen_batch(k, cfg),
+                            out_shardings=out_shardings) \
+            if mesh is not None else jax.jit(lambda k: _gen_batch(k, cfg))
+
+    def batch_at(self, step: int) -> Batch:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed), step)
+        return self._gen(key)
+
+    def iterate(self, start_step: int = 0) -> Iterator[Tuple[int, Batch]]:
+        step = start_step
+        while True:
+            yield step, self.batch_at(step)
+            step += 1
+
+
+def pipeline_for_model(mcfg: ModelConfig, global_batch: int, seq_len: int,
+                       mesh: Optional[Mesh] = None,
+                       dp_axes: Tuple[str, ...] = ("data",),
+                       seed: int = 0) -> SyntheticPipeline:
+    ft = mcfg.frontend
+    f_tokens = mcfg.frontend_tokens
+    if ft == "audio":
+        f_tokens = seq_len  # encoder frames track the shape cell's seq_len
+        seq_len = min(seq_len, 4096)  # decoder text length (DESIGN.md note)
+    if ft == "vision":
+        seq_len = max(8, seq_len - f_tokens)  # patch prefix + text = cell seq
+    pcfg = PipelineConfig(seed=seed, global_batch=global_batch,
+                          seq_len=seq_len, vocab_size=mcfg.vocab_size,
+                          frontend=ft, frontend_dim=mcfg.frontend_dim,
+                          frontend_tokens=f_tokens)
+    return SyntheticPipeline(pcfg, mesh, dp_axes)

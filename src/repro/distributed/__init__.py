@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (opt_state_shardings, param_shardings,
+                                        param_specs, spec_for_path)
+from repro.distributed.compression import compressed_psum
+from repro.distributed.fault_tolerance import (Heartbeat, run_with_restarts)

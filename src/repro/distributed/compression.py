@@ -1,0 +1,56 @@
+"""int8 stochastic-rounding gradient compression for the slow cross-pod axis.
+
+``compressed_psum`` reproduces ring-all-reduce semantics at ~1/4 the bytes of
+a bf16 reduce: int8 all_to_all (reduce-scatter phase, dequant-accumulate in
+fp32 locally) + int8 all_gather (broadcast phase).  Stochastic rounding keeps
+the quantizer unbiased, so SGD sees zero-mean noise rather than bias.
+
+Used inside ``shard_map`` over the ``pod`` axis (validated in
+``tests/test_distributed.py::test_compressed_psum_unbiased``); intra-pod
+reductions stay uncompressed.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(x: jnp.ndarray, key) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Unbiased int8 quantization with per-tensor scale."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    y = xf / scale
+    noise = jax.random.uniform(key, y.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(y + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum(x: jnp.ndarray, axis: str, key,
+                    axis_size: int) -> jnp.ndarray:
+    """Sum ``x`` over mesh axis ``axis`` with int8 transport.
+
+    Call inside shard_map. x: identical-shape local tensor per device.
+    """
+    n = x.size
+    pad = (-n) % axis_size
+    flat = jnp.pad(x.astype(jnp.float32).reshape(-1), (0, pad))
+    chunks = flat.reshape(axis_size, -1)
+
+    q, scale = _quantize(chunks, key)
+    # reduce-scatter phase: device i collects chunk i from every peer
+    recv = jax.lax.all_to_all(q, axis, split_axis=0, concat_axis=0,
+                              tiled=True)                    # (P, chunk)
+    scales = jax.lax.all_gather(scale, axis)                 # (P,)
+    partial = jnp.sum(recv.astype(jnp.float32)
+                      * scales[:, None], axis=0)             # (chunk,)
+
+    # broadcast phase
+    q2, s2 = _quantize(partial, jax.random.fold_in(key, 1))
+    full = jax.lax.all_gather(q2, axis)                      # (P, chunk)
+    s2a = jax.lax.all_gather(s2, axis)                       # (P,)
+    out = (full.astype(jnp.float32) * s2a[:, None]).reshape(-1)
+    return out[:n].reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,175 @@
+"""Name-based parameter sharding rules (DP/FSDP/TP/EP over logical axes).
+
+Strategy (per DESIGN.md §3):
+
+* batch over the data-parallel axes ``("pod", "data")`` (pod optional),
+* FSDP (ZeRO-3): parameters AND optimizer state sharded over ``"data"``,
+  all-gathered on use by GSPMD,
+* TP (Megatron): attention heads / MLP hidden / vocab over ``"model"``,
+* the embedding & head tables are ds-array-style 2-D blocked:
+  (vocab × d_model) over ("model" × "data") — the paper's 2-D blocking
+  applied to the largest tables (gemma2/nemotron: 256k vocab),
+* experts: TP over d_ff within each expert + FSDP over d_model (expert count
+  8 does not divide the 16-wide model axis, so pure EP is not used; see
+  DESIGN.md §Arch-applicability),
+* cross-pod: parameters are REPLICATED over "pod" — the only cross-pod
+  traffic is the gradient reduction (optionally int8-compressed).
+
+Rules match on the path suffix of each parameter leaf; leading stacked-layer
+dims (from scan-over-layers) are padded with None automatically.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (regex on leaf path, spec on the leaf's LAST len(spec) dims)
+_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # embeddings / heads: 2-D ds-array blocking (vocab x d_model)
+    (r"embed$",                    ("model", "data")),
+    (r"lm_head$",                  ("data", "model")),
+    (r"frontend_proj$",            (None, "model")),
+    (r"mm_proj/w1$",               (None, "model")),
+    (r"mm_proj/w2$",               ("data", "model")),
+    # attention: FSDP on d_model, TP on heads
+    (r"attn/w[qkv]$",              ("data", "model")),
+    (r"(self|cross)_attn/w[qkv]$", ("data", "model")),
+    (r"attn/wo$",                  ("model", "data")),
+    (r"(self|cross)_attn/wo$",     ("model", "data")),
+    (r"attn/b[qkv]$",              ("model",)),
+    # dense MLP
+    (r"mlp/w_(gate|up)$",          ("data", "model")),
+    (r"mlp/w_down$",               ("model", "data")),
+    # MoE: experts replicated on E, FSDP on d, TP on f
+    (r"moe/router$",               ("data", None)),
+    (r"moe/w_(gate|up)$",          (None, "data", "model")),
+    (r"moe/w_down$",               (None, "model", "data")),
+    # mamba2
+    (r"in_proj$",                  ("data", "model")),
+    (r"out_proj$",                 ("model", "data")),
+    (r"conv_w$",                   (None, "model")),
+    (r"conv_b$",                   ("model",)),
+    (r"gate_norm$",                ("model",)),
+    # everything else (norms, scalars, A_log, ...) replicated
+)
+
+
+def spec_for_path(path: str, ndim: int) -> P:
+    for pat, suffix in _RULES:
+        if re.search(pat, path):
+            if len(suffix) > ndim:
+                return P()
+            pad = (None,) * (ndim - len(suffix))
+            return P(*(pad + tuple(suffix)))
+    return P()
+
+
+def tree_paths(tree) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    return paths, [leaf for _, leaf in flat], treedef
+
+
+def _axis_extent(mesh: Mesh, names) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Replicate any dim the mesh extent does not divide evenly."""
+    out = []
+    for i, names in enumerate(spec):
+        if names is not None and (i >= len(shape)
+                                  or shape[i] % _axis_extent(mesh, names) != 0):
+            out.append(None)
+        else:
+            out.append(names)
+    return P(*out)
+
+
+def param_specs(params, mesh: Optional[Mesh] = None) -> Any:
+    """Pytree of PartitionSpec matching ``params`` (sanitized if mesh given)."""
+    paths, leaves, treedef = tree_paths(params)
+    specs = [spec_for_path(p, getattr(l, "ndim", 0)) for p, l in zip(paths, leaves)]
+    if mesh is not None:
+        specs = [sanitize_spec(s, getattr(l, "shape", ()), mesh)
+                 for s, l in zip(specs, leaves)]
+    return treedef.unflatten(specs)
+
+
+def param_shardings(params, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  param_specs(params, mesh),
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+# -- activation / batch / cache shardings -------------------------------------
+
+_CACHE_RULES = (
+    (r"(attn_k|attn_v|k|v)$", (None, "dp", None, "model", None)),  # (L,B,H,T,hd)
+    (r"enc_out$",             ("dp", None, "model")),              # (B,T,D)
+    (r"conv$",                (None, "dp", None, "model")),        # (L,B,K,C)
+    (r"h$",                   (None, "dp", "model", None, None)),  # (L,B,H,S,P)
+)
+
+
+def _expand_dp(names, dp: Tuple[str, ...]):
+    if names == "dp":
+        return dp
+    return names
+
+
+def cache_specs(cache, mesh: Mesh, dp: Tuple[str, ...]) -> Any:
+    paths, leaves, treedef = tree_paths(cache)
+    out = []
+    for p, l in zip(paths, leaves):
+        ndim = getattr(l, "ndim", 0)
+        spec = P()
+        for pat, suffix in _CACHE_RULES:
+            if re.search(pat, p) and len(suffix) == ndim:
+                spec = P(*[_expand_dp(n, dp) for n in suffix])
+                break
+        out.append(sanitize_spec(spec, getattr(l, "shape", ()), mesh))
+    return treedef.unflatten(out)
+
+
+def batch_specs(batch, mesh: Mesh, dp: Tuple[str, ...]) -> Any:
+    """Shard every batch leaf's leading dim over the dp axes."""
+    def spec(leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        s = P(dp, *([None] * (ndim - 1))) if ndim >= 1 else P()
+        return sanitize_spec(s, getattr(leaf, "shape", ()), mesh)
+    return jax.tree_util.tree_map(spec, batch)
+
+
+def to_shardings(specs, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_shardings(opt_state, params, mesh: Mesh) -> Any:
+    """Optimizer-state leaves inherit the sharding of the matching param by
+    SHAPE (moments are param-shaped; scalars/factored vectors replicate)."""
+    pspecs = {tuple(l.shape): s for l, s in zip(
+        jax.tree_util.tree_leaves(params),
+        jax.tree_util.tree_leaves(param_specs(params, mesh),
+                                  is_leaf=lambda x: isinstance(x, P)))}
+
+    def pick(leaf):
+        spec = pspecs.get(tuple(getattr(leaf, "shape", ())), P())
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(pick, opt_state)

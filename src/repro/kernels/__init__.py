@@ -1,0 +1,13 @@
+"""TPU Pallas kernels for the perf-critical compute layers.
+
+Each kernel lives in its own subpackage with the contract:
+
+* ``kernel.py`` -- the ``pl.pallas_call`` body + BlockSpec VMEM tiling,
+* ``ops.py``    -- the jit'd public wrapper (padding, dtype policy,
+  ``interpret=`` plumbing so CPU CI validates the kernel body),
+* ``ref.py``    -- a pure-jnp oracle used by the allclose test sweeps.
+
+Kernels: ``matmul`` (ds-array block GEMM), ``flash_attention`` (causal/GQA/
+sliding-window/softcap), ``kmeans`` (fused assign+partial-sum, paper 5.5),
+``ssd`` (Mamba-2 state-space-duality chunk scan).
+"""

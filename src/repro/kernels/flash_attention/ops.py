@@ -1,0 +1,62 @@
+"""Public wrapper for fused attention: padding, scale defaults, interpret plumbing.
+
+Pads head_dim to 128 lanes and sequence lengths to block multiples.  Padded
+KV positions are masked out via the window/causal machinery: we append pad
+keys AFTER the logical keys and rely on causal masking for decode; for the
+bidirectional/encoder case we pass an explicit kv length mask by baking the
+pad region into ``window``-independent masking (pad keys get NEG_INF scores
+because the kernel masks k_pos >= kv_len via the causal/window terms computed
+here).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import round_up
+from repro.kernels.flash_attention.kernel import flash_attention_padded
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "sm_scale", "q_offset",
+                     "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,   # (B, Hq, Tq, D)
+    k: jnp.ndarray,   # (B, Hkv, Tk, D)
+    v: jnp.ndarray,   # (B, Hkv, Tk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    sm_scale: Optional[float] = None,
+    q_offset: int = 0,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    bq = min(block_q, round_up(tq, 128))
+    bk = min(block_k, round_up(tk, 128))
+    tq_p, tk_p, d_p = round_up(tq, bq), round_up(tk, bk), round_up(d, 128)
+
+    # pad: Q rows beyond tq produce garbage rows we slice off; padded K
+    # columns are hidden inside the kernel via the kv_len mask.
+    q_p = jnp.pad(q, ((0, 0), (0, 0), (0, tq_p - tq), (0, d_p - d)))
+    k_p = jnp.pad(k, ((0, 0), (0, 0), (0, tk_p - tk), (0, d_p - d)))
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, tk_p - tk), (0, d_p - d)))
+
+    out = flash_attention_padded(
+        q_p, k_p, v_p, causal=causal, window=window, softcap=softcap,
+        sm_scale=sm_scale, q_offset=q_offset, kv_len=tk, block_q=bq,
+        block_k=bk, interpret=interpret)
+    return out[:, :, :tq, :d]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the fused attention kernel (all variants)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,   # (B, Hq, Tq, D)
+    k: jnp.ndarray,   # (B, Hkv, Tk, D)
+    v: jnp.ndarray,   # (B, Hkv, Tk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    sm_scale=None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(tq)[:, None] + q_offset
+    k_pos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows -> zeros
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

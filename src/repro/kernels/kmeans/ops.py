@@ -1,0 +1,44 @@
+"""Public wrapper for the fused K-means assignment kernel.
+
+Pads N to block multiples and K/D to lane multiples.  Padded center rows are
+placed at +1e15 so no real sample ever selects them; padded sample rows are
+masked inside the kernel via ``n``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import round_up
+from repro.kernels.kmeans.kernel import kmeans_assign_padded
+
+_FAR = 1e15
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_assign(
+    x: jnp.ndarray,        # (n, d)
+    centers: jnp.ndarray,  # (k, d)
+    *,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    n, d = x.shape
+    k = centers.shape[0]
+    bn = min(block_n, round_up(n, 128))
+    n_pad = round_up(n, bn)
+    d_pad = round_up(d, 128)
+    k_pad = round_up(k, 8)
+    x_p = jnp.pad(x, ((0, n_pad - n), (0, d_pad - d)))
+    c_p = jnp.pad(centers.astype(x.dtype), ((0, k_pad - k), (0, d_pad - d)),
+                  constant_values=0)
+    if k_pad != k:
+        far = jnp.zeros((k_pad, 1), x.dtype).at[k:].set(_FAR)
+        c_p = c_p + far  # padded centers sit at (1e15, 0, ...): never nearest
+    labels, sums, counts = kmeans_assign_padded(
+        x_p, c_p, n=n, block_n=bn, interpret=interpret)
+    return (labels[:n, 0], sums[:k, :d], counts[:k, 0])

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused K-means assignment kernel."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(x: jnp.ndarray, centers: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """labels (n,), per-cluster sums (k, d), counts (k,)."""
+    d2 = (jnp.sum(x ** 2, 1, keepdims=True)
+          - 2.0 * x @ centers.T
+          + jnp.sum(centers ** 2, 1)[None, :])
+    labels = jnp.argmin(d2, axis=1)
+    onehot = jax.nn.one_hot(labels, centers.shape[0], dtype=jnp.float32)
+    sums = onehot.T @ x.astype(jnp.float32)
+    counts = onehot.sum(0)
+    return labels.astype(jnp.int32), sums, counts

@@ -1,0 +1,69 @@
+"""Tiled MXU matmul kernel — the local GEMM under every ds-array ``@``.
+
+Tiling: C is computed one (block_m × block_n) VMEM tile at a time; the K
+reduction runs as the innermost (sequential) grid dimension with an fp32
+accumulator tile resident in VMEM, so each C tile is written to HBM exactly
+once.  Block sizes default to 512×512×512 fp32-equivalents; all dims must be
+multiples of 128 to keep the MXU systolic array full (the ops.py wrapper pads
+arbitrary shapes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_padded(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_m: int = 512,
+    block_n: int = 512,
+    block_k: int = 512,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """C = A @ B for shapes already padded to block multiples."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        (m, n, k), (block_m, block_n, block_k))
+    out_dtype = out_dtype or a.dtype
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b)

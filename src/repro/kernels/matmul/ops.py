@@ -1,0 +1,54 @@
+"""Public wrapper for the tiled matmul kernel: padding + dtype policy.
+
+``matmul(a, b)`` accepts arbitrary (m, k) x (k, n) shapes; inputs are padded
+to MXU-aligned block multiples (pad contributes zeros to the K reduction, so
+results are exact) and the output is sliced back.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import round_up
+from repro.kernels.matmul.kernel import matmul_padded
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest multiple-of-128 block <= target that keeps padding small."""
+    if dim <= 128:
+        return 128
+    return min(target, round_up(dim, 128))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_m: int = 512,
+    block_n: int = 512,
+    block_k: int = 512,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"matmul shape mismatch {a.shape} @ {b.shape}")
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    out = matmul_padded(
+        a_p, b_p, block_m=bm, block_n=bn, block_k=bk,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[:m, :n]

@@ -1,0 +1,87 @@
+"""Public SSD op: chunk kernel + inter-chunk associative scan + combine.
+
+    y = y_intra + (C ⊙ decay) @ h_prev_chunk
+
+The inter-chunk recurrence over (decay, state) pairs is associative:
+    (d1, s1) ∘ (d2, s2) = (d1·d2, d2·s1 + s2)
+so it runs as ``lax.associative_scan`` over the (tiny) per-chunk states —
+O(log NC) depth, bytes ≈ NC·S·P — the same trick the paper uses for
+reduction trees (Fig. 3), applied along the sequence axis.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import round_up
+from repro.kernels.ssd.kernel import ssd_chunk_padded
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jnp.ndarray,    # (BH, T, P)
+    dt: jnp.ndarray,   # (BH, T)
+    a: jnp.ndarray,    # (BH,)
+    b: jnp.ndarray,    # (BH, T, S)
+    c: jnp.ndarray,    # (BH, T, S)
+    h0: Optional[jnp.ndarray] = None,   # (BH, S, P)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (BH,T,P), h_final (BH,S,P))."""
+    bh, t, p = x.shape
+    s = b.shape[-1]
+    t_pad = round_up(t, chunk)
+    if t_pad != t:
+        # pad with dt=0 steps: decay=exp(0)=1, input contribution 0 -> no-ops
+        x = jnp.pad(x, ((0, 0), (0, t_pad - t), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, t_pad - t)))
+        b = jnp.pad(b, ((0, 0), (0, t_pad - t), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, t_pad - t), (0, 0)))
+    nc = t_pad // chunk
+
+    y_intra, states, c_dec, chunk_dec = ssd_chunk_padded(
+        x, dt[..., None], a[:, None], b, c, chunk=chunk, interpret=interpret)
+    decays = chunk_dec[:, :, 0, 0]                       # (BH, NC)
+
+    # inclusive associative scan over chunks: h_after[c]
+    def combine(lhs, rhs):
+        d1, s1 = lhs
+        d2, s2 = rhs
+        return d1 * d2, d2[..., None, None] * s1 + s2
+
+    if h0 is not None:
+        states = states.at[:, 0].add(decays[:, 0, None, None] * h0)
+    d_acc, h_after = jax.lax.associative_scan(combine, (decays, states), axis=1)
+    # h entering chunk c  =  h_after[c-1]  (h0-adjusted above)
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h_after[:, :1]), h_after[:, :-1]], axis=1)
+    if h0 is not None:
+        h_prev = h_prev.at[:, 0].set(h0)
+
+    # y_inter[t] = (C_t exp(ell_t)) @ h_prev_chunk(t)
+    c_dec_c = c_dec.reshape(bh, nc, chunk, s)
+    y_inter = jnp.einsum("bnls,bnsp->bnlp", c_dec_c.astype(jnp.float32),
+                         h_prev).reshape(bh, t_pad, p)
+    y = (y_intra.astype(jnp.float32) + y_inter).astype(x.dtype)
+    return y[:, :t], h_after[:, -1]
+
+
+def ssd_decode_step(
+    x: jnp.ndarray,    # (BH, P) one token
+    dt: jnp.ndarray,   # (BH,)
+    a: jnp.ndarray,    # (BH,)
+    b: jnp.ndarray,    # (BH, S)
+    c: jnp.ndarray,    # (BH, S)
+    h: jnp.ndarray,    # (BH, S, P) carried state
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrence for serving (no kernel needed: O(S·P) FMA)."""
+    decay = jnp.exp(a * dt)[:, None, None]
+    h = decay * h + dt[:, None, None] * (b[..., None] * x[:, None, :])
+    y = jnp.einsum("bs,bsp->bp", c, h)
+    return y.astype(x.dtype), h

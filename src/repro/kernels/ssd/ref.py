@@ -1,0 +1,44 @@
+"""Naive sequential-recurrence oracle for the SSD kernel.
+
+    h_t = exp(A dt_t) h_{t-1} + dt_t B_t x_tᵀ ;  y_t = C_t h_t
+
+Runs as an O(T) ``lax.scan`` per (batch·head); exact (up to fp) and
+independent of the chunked/dual formulation.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jnp.ndarray,    # (BH, T, P)
+    dt: jnp.ndarray,   # (BH, T)
+    a: jnp.ndarray,    # (BH,)
+    b: jnp.ndarray,    # (BH, T, S)
+    c: jnp.ndarray,    # (BH, T, S)
+    h0: Optional[jnp.ndarray] = None,  # (BH, S, P)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (BH, T, P), h_final (BH, S, P))."""
+    bh, t, p = x.shape
+    s = b.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bh, s, p), jnp.float32)
+
+    def per_head(xh, dth, ah, bh_, ch, h0h):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            h = jnp.exp(ah * dtt) * h + dtt * (bt[:, None] * xt[None, :])
+            return h, ct @ h
+
+        h_fin, y = jax.lax.scan(step, h0h, (xh.astype(jnp.float32),
+                                            dth.astype(jnp.float32),
+                                            bh_.astype(jnp.float32),
+                                            ch.astype(jnp.float32)))
+        return y, h_fin
+
+    y, h_fin = jax.vmap(per_head)(x, dt, a, b, c, h0)
+    return y.astype(x.dtype), h_fin

@@ -1,0 +1,273 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the production mesh (16×16 single-pod or 2×16×16
+multi-pod), constructs abstract inputs (ShapeDtypeStruct — zero allocation),
+jits the appropriate step with explicit in/out shardings, and runs
+``.lower().compile()``.  Success proves the distribution config is coherent;
+``memory_analysis()`` proves it fits; ``cost_analysis()`` + the HLO
+collective parse feed §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --multi-pod both --out results/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_arch_ids, get_config
+from repro.data.pipeline import Batch
+from repro.distributed import sharding as shlib
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.launch import specs as speclib
+from repro.models import common as cm
+from repro.models.config import get_shape_cell
+from repro.models.model import build_model
+from repro.optim import make_optimizer
+from repro.train.step import TrainState, make_train_step
+
+
+def pick_optimizer(cfg, total_params: int):
+    """Memory-driven optimizer policy (see EXPERIMENTS.md §Dry-run)."""
+    if total_params > 100e9:
+        return make_optimizer("adafactor"), "adafactor"
+    if total_params > 5e9:
+        return make_optimizer("adamw", moment_dtype="bfloat16"), "adamw-bf16"
+    return make_optimizer("adamw"), "adamw-fp32"
+
+
+def pick_accum(cfg) -> Tuple[int, str]:
+    """Per-arch microbatching policy for train_4k so activations + grad
+    accumulators fit 16 GiB HBM (derived empirically from memory_analysis;
+    recorded in EXPERIMENTS.md §Dry-run)."""
+    if cfg.param_count() > 100e9:           # grok-1-314b
+        return 16, "bfloat16"
+    if cfg.family == "moe":
+        return 2, "float32"                 # mixtral (tp_sp)
+    if cfg.family == "hybrid":
+        return 2, "float32"                 # zamba2 (tp_sp; fsdp needs >16G)
+    return 1, "float32"
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               banded: bool = True, accum_steps: Optional[int] = None,
+               compile_: bool = True, vocab_parallel: bool = True,
+               bf16_tp_reduce: bool = False,
+               gather_weights: bool = True,
+               mode: str = "auto") -> Dict[str, Any]:
+    t0 = time.time()
+    cfg = get_config(arch)
+    cell = get_shape_cell(shape)
+    ok, why = speclib.cell_supported(cfg, cell)
+    if not ok:
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = dp_axes(multi_pod)
+    if mode in ("fsdp", "auto"):
+        total = 1
+        for n in dp + ("model",):
+            total *= mesh.shape[n]
+        # fsdp mode: every MICROBATCH must cover the whole mesh, weight
+        # gathers must be cheaper than activation reshards (excludes MoE and
+        # >20B dense), and per-device activations must fit (excludes
+        # nemotron's 24k d_ff).  Policy derived from measured temp bytes —
+        # see EXPERIMENTS.md SS Dry-run.
+        accum_probe = accum_steps or pick_accum(cfg)[0]
+        micro = cell.global_batch // max(accum_probe, 1)
+        fsdp_ok = (cell.kind == "train" and micro % total == 0
+                   and cfg.family not in ("moe", "hybrid")
+                   and cfg.param_count() < 20e9 and cfg.d_ff <= 16384)
+        if mode == "auto":
+            mode = "fsdp" if fsdp_ok else "tp_sp"
+        elif not fsdp_ok:
+            mode = "tp_sp"   # fsdp prerequisites not met
+    env = cm.ShardEnv(mesh=mesh, dp=dp, tp="model",
+                      vocab_parallel=vocab_parallel,
+                      bf16_tp_reduce=bf16_tp_reduce,
+                      gather_weights=gather_weights, mode=mode)
+    batch_dp = env.batch_axes
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+
+    abstract_params = jax.eval_shape(model.init, key)
+    p_shardings = shlib.param_shardings(abstract_params, mesh)
+
+    result = {"arch": arch, "shape": shape,
+              "multi_pod": multi_pod, "kind": cell.kind,
+              "params_b": cfg.param_count() / 1e9,
+              "active_params_b": cfg.active_param_count() / 1e9}
+
+    if cell.kind == "train":
+        opt, opt_name = pick_optimizer(cfg, cfg.param_count())
+        auto_accum, accum_dtype = pick_accum(cfg)
+        if accum_steps is None:
+            accum_steps = auto_accum
+        # every microbatch must stay divisible by the dp extent, or the
+        # batch sharding sanitizes away and compute replicates
+        dp_total = 1
+        for n in dp:
+            dp_total *= mesh.shape[n]
+        while accum_steps > 1 and (cell.global_batch // accum_steps) % dp_total:
+            accum_steps //= 2
+        result["optimizer"] = opt_name
+        result["accum_steps"] = accum_steps
+        result["mode"] = mode
+        abstract_opt = jax.eval_shape(opt.init, abstract_params)
+        o_shardings = shlib.opt_state_shardings(abstract_opt, abstract_params,
+                                                mesh)
+        state_shardings = TrainState(params=p_shardings,
+                                     opt_state=o_shardings)
+        abstract_state = TrainState(params=abstract_params,
+                                    opt_state=abstract_opt)
+        batch = speclib.batch_spec(cfg, cell)
+        b_shardings = shlib.to_shardings(
+            shlib.batch_specs(batch, mesh, batch_dp), mesh)
+        step = make_train_step(model, opt, env, accum_steps=accum_steps,
+                               banded=banded, accum_dtype=accum_dtype)
+        jitted = jax.jit(step, in_shardings=(state_shardings, b_shardings),
+                         out_shardings=(state_shardings, None),
+                         donate_argnums=(0,))
+        with mesh:
+            lowered = jitted.lower(abstract_state, batch)
+    elif cell.kind == "prefill":
+        batch = speclib.batch_spec(cfg, cell)
+        b_shardings = shlib.to_shardings(
+            shlib.batch_specs(batch, mesh, dp), mesh)
+
+        def prefill_step(params, batch: Batch):
+            hidden, _ = model.module.forward_hidden(
+                params, cfg, batch.tokens, batch.patches, env, banded)
+            last = hidden[:, -1:, :]
+            head = (params["embed"].T if cfg.tie_embeddings
+                    else params["lm_head"])
+            logits = jnp.einsum("btd,dv->btv", last, head,
+                                preferred_element_type=jnp.float32)
+            return logits
+
+        jitted = jax.jit(prefill_step,
+                         in_shardings=(p_shardings, b_shardings))
+        with mesh:
+            lowered = jitted.lower(abstract_params, batch)
+    else:  # decode
+        dspec = speclib.decode_specs(model, cell)
+        cache, tokens = dspec["cache"], dspec["tokens"]
+        c_shardings = shlib.to_shardings(
+            shlib.cache_specs(cache, mesh, dp), mesh)
+        t_shardings = shlib.to_shardings(
+            shlib.batch_specs(tokens, mesh, dp), mesh)
+
+        def serve_step(params, cache, tokens):
+            return model.decode_step(params, cache, tokens, env)
+
+        jitted = jax.jit(serve_step, in_shardings=(p_shardings, c_shardings,
+                                                   t_shardings),
+                         out_shardings=(None, c_shardings),
+                         donate_argnums=(1,))
+        with mesh:
+            lowered = jitted.lower(abstract_params, cache, tokens)
+
+    result["lower_s"] = round(time.time() - t0, 1)
+    if not compile_:
+        result["status"] = "lowered"
+        return result
+
+    t1 = time.time()
+    with mesh:
+        compiled = lowered.compile()
+    result["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    result["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+    }
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    result["cost"] = {      # raw XLA numbers (loop bodies counted ONCE)
+        "flops": cost.get("flops"),
+        "bytes_accessed": cost.get("bytes accessed"),
+    }
+    # trip-count-aware per-device analysis from the post-SPMD optimized HLO
+    from benchmarks.hlo_analysis import analyze_hlo
+    try:
+        result["hlo"] = analyze_hlo(compiled.as_text())
+    except Exception as e:                                   # noqa: BLE001
+        result["hlo"] = {"error": str(e)}
+    result["chips"] = 512 if multi_pod else 256
+    result["status"] = "ok"
+    result["total_s"] = round(time.time() - t0, 1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", choices=["on", "off", "both"],
+                    default="off")
+    ap.add_argument("--no-banded", action="store_true",
+                    help="paper-faithful dense attention baseline")
+    ap.add_argument("--accum-steps", type=int, default=None)
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    args = ap.parse_args()
+
+    archs = all_arch_ids() if args.arch == "all" else [args.arch]
+    shapes = (["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+              if args.shape == "all" else [args.shape])
+    pods = {"on": [True], "off": [False], "both": [False, True]}[args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                tag = f"{arch} x {shape} x {'2pod' if mp else '1pod'}"
+                try:
+                    r = lower_cell(arch, shape, mp, banded=not args.no_banded,
+                                   accum_steps=args.accum_steps,
+                                   compile_=not args.no_compile)
+                except Exception as e:                       # noqa: BLE001
+                    r = {"arch": arch, "shape": shape, "multi_pod": mp,
+                         "status": "error", "error": str(e),
+                         "traceback": traceback.format_exc()}
+                results.append(r)
+                status = r["status"]
+                extra = ""
+                if status == "ok":
+                    peak = (r.get("memory") or {}).get("temp_bytes")
+                    hlo = r.get("hlo", {})
+                    extra = (f" flops/dev={hlo.get('flops', 0):.3e}"
+                             f" coll/dev={hlo.get('collective_bytes', 0):.3e}B"
+                             f" temp={peak/2**30 if peak else -1:.2f}GiB"
+                             f" ({r.get('total_s')}s)")
+                elif status == "error":
+                    extra = " " + r["error"][:200]
+                print(f"[{status:7s}] {tag}{extra}", flush=True)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print("wrote", args.out)
+    n_err = sum(1 for r in results if r["status"] == "error")
+    print(f"done: {len(results)} cells, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

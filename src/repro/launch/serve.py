@@ -1,0 +1,85 @@
+"""Batched serving driver: prefill + greedy decode with KV caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+        --batch 4 --prompt-len 32 --gen 32
+
+Demonstrates the full serving path for every family: transformer KV caches
+(with rolling buffers on sliding-window layers), SSM constant-size states,
+hybrid mixed caches, and enc-dec encoder-once decoding.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import common as cm
+from repro.models.model import build_model
+
+
+def prefill_into_cache(model, params, cache, tokens, env=cm.NO_SHARD):
+    """Feed a prompt token-by-token through decode_step (simple, exercises
+    the cache path; a production system would use the prefill kernel)."""
+    step = jax.jit(lambda p, c, t: model.decode_step(p, c, t, env))
+    logits = None
+    for i in range(tokens.shape[1]):
+        logits, cache = step(params, cache, tokens[:, i:i + 1])
+    return logits, cache
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    b = args.batch
+    max_len = args.prompt_len + args.gen
+
+    kw = {}
+    if cfg.family == "encdec":
+        kw["enc_len"] = args.prompt_len
+    cache = model.init_cache(b, max_len, **kw)
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        frames = jax.random.normal(key, (b, args.prompt_len,
+                                         cfg.frontend_dim), jnp.float32)
+        cache["enc_out"] = encdec.encode(params, cfg, frames)
+
+    prompt = jax.random.randint(key, (b, args.prompt_len), 0, cfg.vocab_size)
+    t0 = time.time()
+    logits, cache = prefill_into_cache(model, params, cache, prompt)
+    t_prefill = time.time() - t0
+
+    step = jax.jit(lambda p, c, t: model.decode_step(p, c, t))
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    gen = jnp.concatenate(out, axis=1)
+    t_gen = time.time() - t0
+    tps = b * (args.gen - 1) / max(t_gen, 1e-9)
+    print(f"arch={cfg.name} batch={b} prompt={args.prompt_len} "
+          f"gen={args.gen}")
+    print(f"prefill {t_prefill:.2f}s, decode {t_gen:.2f}s "
+          f"({tps:.1f} tok/s)")
+    print("sample:", gen[0, :16].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

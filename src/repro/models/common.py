@@ -1,0 +1,480 @@
+"""Shared model building blocks: norms, RoPE, attention (XLA paths), MLPs,
+init helpers, and the sharding environment.
+
+Everything is pure-functional over param pytrees (plain nested dicts); no
+framework.  All matmuls run in bf16 with fp32 accumulation
+(``preferred_element_type``); softmax/norm statistics are fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Sharding environment: names the mesh axes so model code can place
+# activation constraints without knowing the physical mesh.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardEnv:
+    mesh: Optional[Mesh] = None
+    dp: Tuple[str, ...] = ("data",)      # batch-parallel axes (pod+data)
+    tp: Optional[str] = "model"          # tensor-parallel axis
+    # §Perf toggles (False/off = paper-faithful baseline):
+    vocab_parallel: bool = True          # vocab-sharded chunked loss
+    bf16_tp_reduce: bool = False         # bf16 partials for TP all-reduces
+    gather_weights: bool = False         # explicit FSDP weight all-gather
+    mode: str = "tp_sp"                  # "tp_sp" | "fsdp" (§Perf iter 4)
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        """Axes the batch dim shards over.  In "fsdp" mode the batch covers
+        the WHOLE mesh (both named axes — the paper's block-both-axes idea
+        applied to parallelism): no TP/SP, weights are gathered per layer,
+        and the only collectives left are the FSDP param gathers + grad
+        reduce-scatter."""
+        if self.mode == "fsdp" and self.tp is not None:
+            return tuple(self.dp) + (self.tp,)
+        return tuple(self.dp)
+
+    def out_proj_dtype(self):
+        """Accumulation dtype for output projections (wo / w_down): bf16
+        halves the TP all-reduce bytes at a small precision cost."""
+        return jnp.bfloat16 if self.bf16_tp_reduce else jnp.float32
+
+    def weight(self, w: jnp.ndarray, tp_dim: int) -> jnp.ndarray:
+        """§Perf iteration 3: explicitly all-gather the FSDP ('data') shards
+        of a weight before use, keeping only its TP dim sharded.  Without
+        this GSPMD sometimes contracts over the FSDP-sharded dim and
+        ALL-REDUCES THE ACTIVATIONS — (B,S,F)-sized collectives instead of
+        weight-sized ones (measured 300x larger on yi-9b train_4k).
+        ``tp_dim``: which dim keeps the `model`-axis sharding (-1 = none)."""
+        if self.mesh is None:
+            return w
+        if self.mode == "fsdp":
+            return self.constrain(w, P(*([None] * w.ndim)))  # full gather
+        if not self.gather_weights:
+            return w
+        spec = [None] * w.ndim
+        if tp_dim >= 0:
+            spec[tp_dim] = self.tp
+        return self.constrain(w, P(*spec))
+
+    def _axis_size(self, names) -> int:
+        if names is None:
+            return 1
+        if isinstance(names, str):
+            names = (names,)
+        size = 1
+        for n in names:
+            size *= self.mesh.shape[n]
+        return size
+
+    def sanitize(self, spec: P, shape) -> P:
+        """Drop spec entries whose mesh extent does not divide the dim (the
+        non-divisible cases replicate rather than shard unevenly)."""
+        out = []
+        for i, names in enumerate(spec):
+            if names is not None and shape[i] % self._axis_size(names) != 0:
+                out.append(None)
+            else:
+                out.append(names)
+        return P(*out)
+
+    def constrain(self, x: jnp.ndarray, spec: P) -> jnp.ndarray:
+        if self.mesh is None:
+            return x
+        spec = self.sanitize(spec, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec))
+
+    # common activation layouts
+    def act_btd(self, x):    # (batch, seq, d_model) — sequence-parallel:
+        # the residual stream is sharded over the model axis between blocks
+        # (Megatron-SP), which is what keeps per-layer saved activations
+        # inside HBM at 1M-token global batches; GSPMD inserts the
+        # all-gather/reduce-scatter pair around each block's TP region.
+        if self.mode == "fsdp":
+            return self.constrain(x, P(self.batch_axes, None, None))
+        return self.constrain(x, P(self.dp, self.tp, None))
+
+    def act_bhtd(self, x):   # (batch, heads, seq, head_dim) -> TP over heads,
+        # falling back to TP over the sequence when the head count does not
+        # divide the model axis (gemma2's 8 q-heads on a 16-wide axis).
+        if self.mode == "fsdp":
+            return self.constrain(x, P(self.batch_axes, None, None, None))
+        if self.mesh is not None and x.shape[1] % self._axis_size(self.tp):
+            return self.constrain(x, P(self.dp, None, self.tp, None))
+        return self.constrain(x, P(self.dp, self.tp, None, None))
+
+    def act_btf(self, x):    # (batch, seq, d_ff) -> TP over hidden
+        if self.mode == "fsdp":
+            return self.constrain(x, P(self.batch_axes, None, None))
+        return self.constrain(x, P(self.dp, None, self.tp))
+
+    def act_btv(self, x):    # (batch, seq, vocab) -> TP over vocab
+        if self.mode == "fsdp":
+            return self.constrain(x, P(self.batch_axes, None, None))
+        return self.constrain(x, P(self.dp, None, self.tp))
+
+
+NO_SHARD = ShardEnv(mesh=None)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6,
+             plus_one: bool = False) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = (1.0 + scale.astype(jnp.float32)) if plus_one else scale.astype(jnp.float32)
+    return (y * w).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (B, H, T, D); positions: (B, T) or (T,)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                    # (D/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,T,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention — XLA paths (the Pallas kernel is the TPU-runtime fast path; the
+# dry-run/roofline lowers these).
+# ---------------------------------------------------------------------------
+
+
+def _mask_scores(s: jnp.ndarray, q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                 causal: bool, window: int) -> jnp.ndarray:
+    mask = jnp.ones(s.shape[-2:], dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(mask, s, -1e30)
+
+
+def _sdpa_block(q, k, v, q_pos, k_pos, *, causal, window, softcap, scale):
+    return _sdpa_block_dyn(q, k, v, q_pos, k_pos, causal=causal,
+                           window=window, softcap=softcap, scale=scale)
+
+
+def attention_xla(
+    q: jnp.ndarray,       # (B, Hq, Tq, D)
+    k: jnp.ndarray,       # (B, Hkv, Tk, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+    q_chunk: int = 1024,
+    banded: bool = True,
+) -> jnp.ndarray:
+    """Memory-bounded attention: scans over q chunks so the live score
+    buffer is (B,H,q_chunk,Tk); the scan body is remat'd so backward
+    recomputes scores chunk-by-chunk.  All chunking is static (reshape +
+    scan-over-xs + static gather indices), never traced dynamic-slice — this
+    is what lets GSPMD keep clean shardings through the loop.
+
+    With ``banded`` and a sliding window, each q chunk reads only its
+    (window + q_chunk) KV band via a precomputed gather — the sub-quadratic
+    local-attention path (beyond-paper §Perf optimization; ``banded=False``
+    is the dense paper-faithful baseline).
+    """
+    import numpy as np
+
+    b, hq, tq, d = q.shape
+    tk = k.shape[2]
+    scale = 1.0 / math.sqrt(d)
+    if tq <= q_chunk:
+        q_pos = jnp.arange(tq) + q_offset
+        return _sdpa_block(q, k, v, q_pos, jnp.arange(tk), causal=causal,
+                           window=window, softcap=softcap, scale=scale)
+
+    assert tq % q_chunk == 0, (tq, q_chunk)
+    nc = tq // q_chunk
+    use_band = banded and window > 0 and causal and tk > window + q_chunk
+
+    q5 = jnp.moveaxis(q.reshape(b, hq, nc, q_chunk, d), 2, 0)  # (nc,B,H,qc,D)
+    q_pos = (np.arange(nc)[:, None] * q_chunk + np.arange(q_chunk)[None, :]
+             + q_offset)                                        # (nc, qc) static
+
+    if use_band:
+        band = min(tk, ((window + q_chunk + 127) // 128) * 128)
+        starts = np.clip(q_pos[:, -1] + 1 - band, 0, tk - band)  # (nc,)
+        idx = starts[:, None] + np.arange(band)[None, :]         # (nc, band)
+        k_b = jnp.take(k, jnp.asarray(idx.reshape(-1)), axis=2)
+        k_b = jnp.moveaxis(k_b.reshape(k.shape[0], k.shape[1], nc, band, d),
+                           2, 0)                                 # (nc,B,Hkv,band,D)
+        v_b = jnp.take(v, jnp.asarray(idx.reshape(-1)), axis=2)
+        v_b = jnp.moveaxis(v_b.reshape(*k.shape[:2], nc, band, d), 2, 0)
+
+        def body(_, xs):
+            q_c, k_c, v_c, qp, kp = xs
+            return None, _sdpa_block_dyn(q_c, k_c, v_c, qp, kp, causal=causal,
+                                         window=window, softcap=softcap,
+                                         scale=scale)
+
+        xs = (q5, k_b, v_b, jnp.asarray(q_pos), jnp.asarray(idx))
+    else:
+        k_pos = jnp.arange(tk)
+
+        def body(_, xs):
+            q_c, qp = xs
+            return None, _sdpa_block_dyn(q_c, k, v, qp, k_pos, causal=causal,
+                                         window=window, softcap=softcap,
+                                         scale=scale)
+
+        xs = (q5, jnp.asarray(q_pos))
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    _, outs = jax.lax.scan(body, None, xs)
+    return jnp.moveaxis(outs, 0, 2).reshape(b, hq, tq, d)
+
+
+def _sdpa_block_dyn(q, k, v, q_pos, k_pos, *, causal, window, softcap, scale):
+    """Dense score block: q (B,H,qc,D) x k/v (B,Hkv,Tk,D).
+
+    KV heads are REPEATED to the full q-head count before the score einsum
+    (cheap: KV tensors are small) so that the (B,H,qc,Tk) score buffer keeps
+    a shardable head dim — a (Hkv, group) reshape would leave both factors
+    non-divisible by the 16-wide model axis on every GQA arch in the pool.
+    """
+    b, hq, qc, d = q.shape
+    hkv = k.shape[1]
+    if hkv != hq:
+        k = jnp.repeat(k, hq // hkv, axis=1)
+        v = jnp.repeat(v, hq // hkv, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,        # (B, Hq, 1, D)
+    k_cache: jnp.ndarray,  # (B, Hkv, Tmax, D)
+    v_cache: jnp.ndarray,
+    length: jnp.ndarray,   # scalar int32: number of valid cache slots
+    *,
+    softcap: float = 0.0,
+    rolling: bool = False,
+) -> jnp.ndarray:
+    """Single-token attention against a (possibly rolling) KV cache.
+
+    With ``rolling`` the cache is a circular buffer (sliding-window archs at
+    long context); validity is simply min(length, Tmax) slots, and RoPE has
+    already been applied at insert time so order does not matter.
+    """
+    b, hq, _, d = q.shape
+    hkv, tmax = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, hkv, group, d)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    n_valid = jnp.minimum(length, tmax) if rolling else length
+    valid = jnp.arange(tmax)[None, None, None, :] < n_valid
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_apply(params: Params, x: jnp.ndarray, mlp_type: str,
+              env: ShardEnv = NO_SHARD) -> jnp.ndarray:
+    if mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if mlp_type == "swiglu" else jax.nn.gelu
+        h = jnp.einsum("btd,df->btf", x, env.weight(params["w_gate"], 1),
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("btd,df->btf", x, env.weight(params["w_up"], 1),
+                       preferred_element_type=jnp.float32)
+        h = env.act_btf((act(h) * u).astype(x.dtype))
+    elif mlp_type == "relu2":  # nemotron squared-ReLU
+        h = jnp.einsum("btd,df->btf", x, env.weight(params["w_up"], 1),
+                       preferred_element_type=jnp.float32)
+        h = env.act_btf((jax.nn.relu(h) ** 2).astype(x.dtype))
+    elif mlp_type == "gelu":
+        h = jnp.einsum("btd,df->btf", x, env.weight(params["w_up"], 1),
+                       preferred_element_type=jnp.float32)
+        h = env.act_btf(jax.nn.gelu(h).astype(x.dtype))
+    else:
+        raise ValueError(mlp_type)
+    out = jnp.einsum("btf,fd->btd", h, env.weight(params["w_down"], 0),
+                     preferred_element_type=env.out_proj_dtype())
+    return out.astype(x.dtype)
+
+
+def mlp_init(key, d: int, f: int, mlp_type: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(f)
+    p = {"w_up": jax.random.normal(k2, (d, f), dtype) * scale_in,
+         "w_down": jax.random.normal(k3, (f, d), dtype) * scale_out}
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = jax.random.normal(k1, (d, f), dtype) * scale_in
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def _largest_divisor_leq(n: int, target: int) -> int:
+    target = max(1, min(n, target))
+    for c in range(target, 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def chunked_lm_loss(hidden: jnp.ndarray, head: jnp.ndarray,
+                    labels: jnp.ndarray, *, softcap: float = 0.0,
+                    z_loss: float = 1e-4, token_chunk: int = 8192,
+                    env: "ShardEnv" = None,
+                    vocab_parallel: bool = True) -> jnp.ndarray:
+    """Cross-entropy from final hidden states WITHOUT materializing the full
+    (B, T, V) logits: scans over sequence chunks, computing each chunk's
+    logits inside a remat'd body (so backward recomputes them too).  This is
+    what keeps the 256k-vocab archs inside HBM at 1M-token global batches.
+
+    ``vocab_parallel`` (§Perf iteration 1): re-layout the head ONCE to
+    (d replicated × vocab TP-sharded) outside the scan, so each chunk's
+    logits come out vocab-sharded with NO per-chunk collective; the gold
+    logit is picked Megatron-style (one-hot mask + sum) so no cross-shard
+    gather appears; only the tiny (b, sc) LSE reductions cross shards.  The
+    paper-faithful baseline (False) leaves the head 2-D blocked and pays a
+    per-chunk logits all-reduce (measured: ~40% of ALL collective bytes on
+    qwen train_4k).
+    """
+    b, t, d = hidden.shape
+    v = head.shape[-1]
+    if env is not None and env.mesh is not None and env.mode == "fsdp":
+        # §Perf iteration 5: the head GRADIENT is all-reduced once per loss
+        # chunk (the batch-sharded bsv,bsd->dv contraction in backward), so
+        # fewer/bigger chunks cut that traffic linearly; with batch fully
+        # sharded the per-device logits chunk stays small.
+        token_chunk = max(token_chunk, 65536)
+    sc = _largest_divisor_leq(t, max(1, token_chunk // max(b, 1)))
+    nc = t // sc
+    if vocab_parallel and env is not None and env.mesh is not None:
+        head = env.constrain(head, P(None, env.tp if env.mode == "tp_sp"
+                                     else None))
+    h = hidden.reshape(b, nc, sc, d).swapaxes(0, 1)      # (nc, b, sc, d)
+    lab = labels.reshape(b, nc, sc).swapaxes(0, 1)
+
+    def body(total, xs):
+        h_c, l_c = xs
+        logits = jnp.einsum("bsd,dv->bsv", h_c, head,
+                            preferred_element_type=jnp.float32)
+        if softcap > 0.0:
+            logits = softcap * jnp.tanh(logits / softcap)
+        if env is not None:
+            logits = env.act_btv(logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        if vocab_parallel:
+            onehot = jax.nn.one_hot(l_c, v, dtype=logits.dtype)
+            gold = jnp.sum(logits * onehot, axis=-1)
+        else:
+            gold = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        nll = lse - gold
+        if z_loss > 0.0:
+            nll = nll + z_loss * lse ** 2
+        return total + nll.sum(), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (h, lab))
+    return total / (b * t)
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 z_loss: float = 1e-4,
+                 mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token-mean cross-entropy (+ z-loss) in fp32. logits (..., V)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss > 0.0:
+        nll = nll + z_loss * lse ** 2
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape: Sequence[int], dtype, fan_in: Optional[int] = None):
+    fan_in = fan_in or shape[0]
+    return jax.random.normal(key, tuple(shape), dtype) / math.sqrt(fan_in)
+
+
+def stack_layer_params(keys, init_fn: Callable[[Any], Params]) -> Params:
+    """Initialize L layers and stack each leaf along a new leading axis
+    (the scan-over-layers layout)."""
+    layers = [init_fn(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, 0), *layers)

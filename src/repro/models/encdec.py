@@ -1,0 +1,235 @@
+"""Encoder–decoder transformer (seamless-m4t-medium backbone).
+
+The modality frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed speech-frame embeddings (B, T_enc, frontend_dim) which a linear
+adapter projects to d_model.  Encoder layers are bidirectional; decoder
+layers are causal self-attention + cross-attention over the encoder output.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _attn_init(key, cfg: ModelConfig, dtype) -> Params:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": cm.dense_init(ks[0], (d, h * hd), dtype),
+        "wk": cm.dense_init(ks[1], (d, hkv * hd), dtype),
+        "wv": cm.dense_init(ks[2], (d, hkv * hd), dtype),
+        "wo": cm.dense_init(ks[3], (h * hd, d), dtype, fan_in=h * hd),
+    }
+
+
+def _enc_layer_init(key, cfg: ModelConfig, dtype) -> Params:
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": _attn_init(ka, cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": cm.mlp_init(km, cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig, dtype) -> Params:
+    ka, kc, km = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "self_attn": _attn_init(ka, cfg, dtype),
+        "ln_cross": jnp.zeros((cfg.d_model,), dtype),
+        "cross_attn": _attn_init(kc, cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": cm.mlp_init(km, cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = cfg.activation_dtype
+    ke, kd, kemb, kfr, kh = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ke, cfg.enc_layers)
+    dec_keys = jax.random.split(kd, cfg.dec_layers)
+    return {
+        "frontend_proj": cm.dense_init(kfr, (cfg.frontend_dim, cfg.d_model),
+                                       dtype),
+        "embed": jax.random.normal(kemb, (cfg.vocab_size, cfg.d_model),
+                                   dtype) * 0.02,
+        "enc_layers": cm.stack_layer_params(
+            list(enc_keys), lambda k: _enc_layer_init(k, cfg, dtype)),
+        "dec_layers": cm.stack_layer_params(
+            list(dec_keys), lambda k: _dec_layer_init(k, cfg, dtype)),
+        "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+        "dec_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": cm.dense_init(kh, (cfg.d_model, cfg.vocab_size), dtype),
+    }
+
+
+def _mha(p: Params, xq: jnp.ndarray, xkv: jnp.ndarray, cfg: ModelConfig,
+         env: cm.ShardEnv, causal: bool, rope: bool,
+         q_positions=None, kv_positions=None) -> jnp.ndarray:
+    b, tq, d = xq.shape
+    tk = xkv.shape[1]
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("btd,dk->btk", xq, env.weight(p["wq"], 1),
+                   preferred_element_type=jnp.float32).astype(xq.dtype)
+    k = jnp.einsum("btd,dk->btk", xkv, env.weight(p["wk"], 1),
+                   preferred_element_type=jnp.float32).astype(xq.dtype)
+    v = jnp.einsum("btd,dk->btk", xkv, env.weight(p["wv"], 1),
+                   preferred_element_type=jnp.float32).astype(xq.dtype)
+    q = env.act_bhtd(q.reshape(b, tq, h, hd).transpose(0, 2, 1, 3))
+    k = env.act_bhtd(k.reshape(b, tk, hkv, hd).transpose(0, 2, 1, 3))
+    v = env.act_bhtd(v.reshape(b, tk, hkv, hd).transpose(0, 2, 1, 3))
+    if rope:
+        qp = q_positions if q_positions is not None else jnp.arange(tq)
+        kp = kv_positions if kv_positions is not None else jnp.arange(tk)
+        q = cm.apply_rope(q, qp, cfg.rope_theta)
+        k = cm.apply_rope(k, kp, cfg.rope_theta)
+    o = cm.attention_xla(q, k, v, causal=causal, window=0, softcap=0.0)
+    o = o.transpose(0, 2, 1, 3).reshape(b, tq, h * hd)
+    return jnp.einsum("btk,kd->btd", o, env.weight(p["wo"], 0),
+                      preferred_element_type=jnp.float32).astype(xq.dtype)
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jnp.ndarray,
+           env: cm.ShardEnv = cm.NO_SHARD) -> jnp.ndarray:
+    """frames (B, T_enc, frontend_dim) -> encoder states (B, T_enc, D)."""
+    x = jnp.einsum("btf,fd->btd", frames.astype(cfg.activation_dtype),
+                   params["frontend_proj"],
+                   preferred_element_type=jnp.float32)
+    x = env.act_btd(x.astype(cfg.activation_dtype))
+
+    def body(x, p):
+        h = cm.rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = env.act_btd(x + _mha(p["attn"], h, h, cfg, env, causal=False,
+                                 rope=True))
+        h = cm.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = env.act_btd(x + cm.mlp_apply(p["mlp"], h, cfg.mlp_type, env))
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return cm.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_hidden(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                  enc_out: jnp.ndarray, env: cm.ShardEnv = cm.NO_SHARD
+                  ) -> jnp.ndarray:
+    x = env.act_btd(jnp.take(params["embed"], tokens, axis=0))
+
+    def body(x, p):
+        h = cm.rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = env.act_btd(x + _mha(p["self_attn"], h, h, cfg, env, causal=True,
+                                 rope=True))
+        h = cm.rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        x = env.act_btd(x + _mha(p["cross_attn"], h, enc_out, cfg, env,
+                                 causal=False, rope=False))
+        h = cm.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = env.act_btd(x + cm.mlp_apply(p["mlp"], h, cfg.mlp_type, env))
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return cm.rms_norm(x, params["dec_norm"], cfg.norm_eps)
+
+
+def forward_hidden(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                   patches: Optional[jnp.ndarray] = None,
+                   env: cm.ShardEnv = cm.NO_SHARD, banded: bool = True
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    del banded
+    assert patches is not None, "encdec needs encoder frames"
+    enc_out = encode(params, cfg, patches, env)
+    return decode_hidden(params, cfg, tokens, enc_out, env), jnp.float32(0.0)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            patches: Optional[jnp.ndarray] = None,
+            env: cm.ShardEnv = cm.NO_SHARD, banded: bool = True
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """patches = encoder frames (B, T_enc, frontend_dim)."""
+    x, aux = forward_hidden(params, cfg, tokens, patches, env, banded)
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return env.act_btv(logits.astype(jnp.float32)), aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            labels: jnp.ndarray, patches: Optional[jnp.ndarray] = None,
+            env: cm.ShardEnv = cm.NO_SHARD, banded: bool = True) -> jnp.ndarray:
+    hidden, _ = forward_hidden(params, cfg, tokens, patches, env)
+    return cm.chunked_lm_loss(hidden, params["lm_head"], labels, env=env,
+                               vocab_parallel=env.vocab_parallel)
+
+
+# ---------------------------------------------------------------------------
+# Serving: encoder runs once (its output lives in the cache); decoder steps.
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: Optional[int] = None) -> Params:
+    dtype = cfg.activation_dtype
+    enc_len = enc_len or max_len
+    L = cfg.dec_layers
+    return {
+        "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), dtype),
+        "k": jnp.zeros((L, batch, cfg.n_kv_heads, max_len, cfg.hd), dtype),
+        "v": jnp.zeros((L, batch, cfg.n_kv_heads, max_len, cfg.hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jnp.ndarray, env: cm.ShardEnv = cm.NO_SHARD
+                ) -> Tuple[jnp.ndarray, Params]:
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    h_, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    x = jnp.take(params["embed"], tokens, axis=0)
+    enc_out = cache["enc_out"]
+
+    def body(x, xs):
+        p, kc, vc = xs
+        hh = cm.rms_norm(x, p["ln1"], cfg.norm_eps)
+        q = jnp.einsum("btd,dk->btk", hh, p["self_attn"]["wq"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        kk = jnp.einsum("btd,dk->btk", hh, p["self_attn"]["wk"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        vv = jnp.einsum("btd,dk->btk", hh, p["self_attn"]["wv"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        q = q.reshape(b, 1, h_, hd).transpose(0, 2, 1, 3)
+        kk = kk.reshape(b, 1, hkv, hd).transpose(0, 2, 1, 3)
+        vv = vv.reshape(b, 1, hkv, hd).transpose(0, 2, 1, 3)
+        posv = jnp.full((b, 1), pos, jnp.int32)
+        q = cm.apply_rope(q, posv, cfg.rope_theta)
+        kk = cm.apply_rope(kk, posv, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, kk, pos, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, vv, pos, axis=2)
+        o = cm.decode_attention(q, kc, vc, pos + 1)
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, h_ * hd)
+        x = x + jnp.einsum("btk,kd->btd", o, p["self_attn"]["wo"],
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+        hh = cm.rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        x = x + _mha(p["cross_attn"], hh, enc_out, cfg, cm.NO_SHARD,
+                     causal=False, rope=False)
+        hh = cm.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + cm.mlp_apply(p["mlp"], hh, cfg.mlp_type, env)
+        return x, (kc, vc)
+
+    x, (kcs, vcs) = jax.lax.scan(body, x, (params["dec_layers"], cache["k"],
+                                           cache["v"]))
+    x = cm.rms_norm(x, params["dec_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    new_cache = dict(cache, k=kcs, v=vcs, pos=pos + 1)
+    return logits.astype(jnp.float32), new_cache

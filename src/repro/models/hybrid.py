@@ -1,0 +1,150 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + a SHARED attention block.
+
+Structure (arXiv:2411.15242, simplified — see DESIGN.md): ``n_layers`` Mamba-2
+blocks; after every ``share_period`` of them, ONE shared transformer block
+(attention + MLP, the same parameters every application) runs.  Weight
+sharing means the shared block's params live outside the layer scan; its KV
+caches are per-application (stacked on the scan axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import ssm
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def n_apps(cfg: ModelConfig) -> int:
+    assert cfg.share_period > 0 and cfg.n_layers % cfg.share_period == 0
+    return cfg.n_layers // cfg.share_period
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = cfg.activation_dtype
+    k_emb, k_layers, k_shared, k_head = jax.random.split(key, 4)
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model),
+                                   dtype) * 0.02,
+        "layers": cm.stack_layer_params(
+            list(keys), lambda k: ssm.mamba_init(k, cfg, dtype)),
+        "shared": tf._layer_init(k_shared, cfg, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": cm.dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype),
+    }
+    return params
+
+
+def _reshape_groups(tree: Params, n_groups: int, per: int) -> Params:
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((n_groups, per) + x.shape[1:]), tree)
+
+
+def forward_hidden(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                   patches=None, env: cm.ShardEnv = cm.NO_SHARD,
+                   banded: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    del patches
+    x = env.act_btd(jnp.take(params["embed"], tokens, axis=0))
+    t = x.shape[1]
+    positions = jnp.arange(t)
+    ng = n_apps(cfg)
+    grouped = _reshape_groups(params["layers"], ng, cfg.share_period)
+    shared = params["shared"]
+
+    def group_body(x, group_params):
+        def inner(x, lp):
+            y, _ = ssm.mamba_apply(lp, x, cfg, env)
+            return y, None
+        x, _ = jax.lax.scan(inner, x, group_params)
+        # shared attention block (same weights every application)
+        x, _ = tf._block_apply(shared, x, positions, cfg, cfg.attn_window,
+                               env, banded)
+        return x, None
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, grouped)
+    return cm.rms_norm(x, params["final_norm"], cfg.norm_eps), jnp.float32(0.0)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            patches=None, env: cm.ShardEnv = cm.NO_SHARD,
+            banded: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x, aux = forward_hidden(params, cfg, tokens, patches, env, banded)
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return env.act_btv(logits.astype(jnp.float32)), aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            labels: jnp.ndarray, patches=None,
+            env: cm.ShardEnv = cm.NO_SHARD, banded: bool = True) -> jnp.ndarray:
+    hidden, _ = forward_hidden(params, cfg, tokens, env=env, banded=banded)
+    return cm.chunked_lm_loss(hidden, params["lm_head"], labels, env=env,
+                               vocab_parallel=env.vocab_parallel)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    dtype = cfg.activation_dtype
+    dinner, s, g = cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_ngroups
+    conv_dim = dinner + 2 * g * s
+    L, na = cfg.n_layers, n_apps(cfg)
+    return {
+        "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "h": jnp.zeros((L, batch, cfg.ssm_heads, s, cfg.ssm_headdim),
+                       jnp.float32),
+        "attn_k": jnp.zeros((na, batch, cfg.n_kv_heads, max_len, cfg.hd), dtype),
+        "attn_v": jnp.zeros((na, batch, cfg.n_kv_heads, max_len, cfg.hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jnp.ndarray, env: cm.ShardEnv = cm.NO_SHARD
+                ) -> Tuple[jnp.ndarray, Params]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = cache["pos"]
+    ng, per = n_apps(cfg), cfg.share_period
+    grouped = _reshape_groups(params["layers"], ng, per)
+    conv_g = jax.tree_util.tree_map(
+        lambda c: c.reshape((ng, per) + c.shape[1:]), cache["conv"])
+    h_g = cache["h"].reshape((ng, per) + cache["h"].shape[1:])
+    shared = params["shared"]
+
+    def group_body(x, xs):
+        lp, conv, h, kc, vc = xs
+
+        def inner(x, inner_xs):
+            p, cv, hh = inner_xs
+            y, st = ssm.mamba_apply(p, x, cfg, env,
+                                    state={"conv": cv, "h": hh},
+                                    single_step=True)
+            return y, (st["conv"], st["h"])
+
+        x, (conv_new, h_new) = jax.lax.scan(inner, x, (lp, conv, h))
+        x, kc, vc = tf.decode_block(shared, x, kc, vc, pos, cfg,
+                                    cfg.attn_window, env)
+        return x, (conv_new, h_new, kc, vc)
+
+    x, (convs, hs, kcs, vcs) = jax.lax.scan(
+        group_body, x, (grouped, conv_g, h_g, cache["attn_k"],
+                        cache["attn_v"]))
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    new_cache = {
+        "conv": convs.reshape(cache["conv"].shape),
+        "h": hs.reshape(cache["h"].shape),
+        "attn_k": kcs, "attn_v": vcs,
+        "pos": pos + 1,
+    }
+    return logits.astype(jnp.float32), new_cache

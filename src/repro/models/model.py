@@ -1,0 +1,62 @@
+"""Model registry: one uniform functional interface per architecture family.
+
+    model = build_model(cfg)
+    params = model.init(key)
+    logits, aux = model.forward(params, tokens, patches, env)
+    loss = model.loss(params, tokens, labels, patches, env)
+    cache = model.init_cache(batch, max_len)
+    logits, cache = model.decode_step(params, cache, tokens, env)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from repro.models import common as cm
+from repro.models import encdec, hybrid, ssm, transformer
+from repro.models.config import ModelConfig
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": ssm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    module: Any
+
+    def init(self, key):
+        return self.module.init_params(key, self.cfg)
+
+    def forward(self, params, tokens, patches=None, env: cm.ShardEnv = cm.NO_SHARD,
+                banded: bool = True):
+        return self.module.forward(params, self.cfg, tokens, patches, env,
+                                   banded)
+
+    def loss(self, params, tokens, labels, patches=None,
+             env: cm.ShardEnv = cm.NO_SHARD, banded: bool = True):
+        return self.module.loss_fn(params, self.cfg, tokens, labels, patches,
+                                   env, banded)
+
+    def init_cache(self, batch: int, max_len: int, **kw):
+        return self.module.init_cache(self.cfg, batch, max_len, **kw)
+
+    def decode_step(self, params, cache, tokens, env: cm.ShardEnv = cm.NO_SHARD):
+        return self.module.decode_step(params, self.cfg, cache, tokens, env)
+
+    @property
+    def needs_patches(self) -> bool:
+        return self.cfg.frontend != "none"
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family not in _FAMILY_MODULES:
+        raise KeyError(f"unknown family {cfg.family!r}")
+    return Model(cfg=cfg, module=_FAMILY_MODULES[cfg.family])

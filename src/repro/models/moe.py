@@ -1,0 +1,137 @@
+"""Mixture-of-Experts layer (mixtral / grok-1): top-k routing with capacity
+buffers and expert-parallel GEMMs.
+
+Dispatch strategy (TPU/SPMD-native, static shapes):
+
+1. router logits → ``lax.top_k`` (k experts per token, softmax over the k),
+2. position-in-expert via a cumsum over the flattened (N·k) slot axis,
+3. scatter tokens into per-expert capacity buffers (E, C, D) — slots beyond
+   capacity are DROPPED (GShard-style; capacity_factor controls the drop
+   rate),
+4. batched expert GEMMs ``(E,C,D)x(E,D,F)`` — these shard over the `model`
+   axis (expert parallelism) so each device holds E/|model| experts,
+5. gather + combine with routing weights.
+
+FLOPs are k·cf·N·D·F·(2 or 3 matmuls) — the ACTIVE-expert count, so the
+roofline's MODEL_FLOPS ratio stays honest (a dense-dispatch einsum would
+inflate compiled FLOPs by E/k).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import NO_SHARD, Params, ShardEnv
+from repro.models.config import ModelConfig
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), dtype) / math.sqrt(d),
+        "w_up": jax.random.normal(ks[2], (e, d, f), dtype) / math.sqrt(d),
+        "w_down": jax.random.normal(ks[3], (e, f, d), dtype) / math.sqrt(f),
+    }
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = jax.random.normal(ks[1], (e, d, f), dtype) / math.sqrt(d)
+    return p
+
+
+def _dp_size(env: ShardEnv) -> int:
+    if env.mesh is None:
+        return 1
+    size = 1
+    for name in env.batch_axes:
+        size *= env.mesh.shape[name]
+    return size
+
+
+def moe_apply(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+              env: ShardEnv = NO_SHARD) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, T, D) -> (y (B,T,D), aux_loss scalar).
+
+    Dispatch is LOCAL per data-parallel shard: tokens are reshaped to an
+    explicit (dp, N/dp) shard dimension and the cumsum / scatter / gather all
+    carry it as a batch dim, so GSPMD keeps every dispatch op shard-local
+    (no replicated capacity buffers).  Per-shard capacity means a slow shard
+    drops locally — standard local-dispatch MoE semantics.
+    """
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n = b * t
+    ds = _dp_size(env)
+    if n % ds != 0:
+        ds = 1
+    nl = n // ds                                           # tokens per shard
+    xs = x.reshape(ds, nl, d)
+    if env.mesh is not None:
+        xs = env.constrain(xs, jax.sharding.PartitionSpec(env.batch_axes, None, None))
+
+    logits = jnp.einsum("snd,de->sne", xs, params["router"],
+                        preferred_element_type=jnp.float32)  # (ds, nl, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(logits, k)             # (ds, nl, k)
+    weights = jax.nn.softmax(top_vals, axis=-1).astype(x.dtype)
+
+    # load-balancing aux (Switch): E * sum_e mean_frac_e * mean_prob_e
+    frac = jnp.mean(jax.nn.one_hot(top_idx[..., 0], e, dtype=jnp.float32),
+                    axis=(0, 1))
+    aux = e * jnp.sum(frac * probs.mean(axis=(0, 1)))
+
+    if t == 1:
+        # decode: dropless dispatch (buffers are tiny; drop noise would make
+        # serving diverge from teacher-forced logits)
+        cap = nl * k
+    else:
+        cap = max(8, int(math.ceil(cfg.capacity_factor * nl * k / e / 8.0)) * 8)
+        cap = min(cap, nl)
+
+    assign = top_idx.reshape(ds, nl * k)                     # (ds, nl*k)
+    onehot = jax.nn.one_hot(assign, e, dtype=jnp.int32)      # (ds, nl*k, E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.sum(pos * onehot, axis=-1)                     # (ds, nl*k)
+    keep = pos < cap
+    pos_c = jnp.minimum(pos, cap - 1)
+
+    x_rep = jnp.repeat(xs, k, axis=1)                        # (ds, nl*k, D)
+    x_rep = x_rep * keep[..., None].astype(x.dtype)
+
+    def scatter_one(xr, a, p):
+        return jnp.zeros((e, cap, d), x.dtype).at[a, p].add(xr)
+
+    buf = jax.vmap(scatter_one)(x_rep, assign, pos_c)        # (ds, E, cap, D)
+    if env.mesh is not None:
+        buf = env.constrain(
+            buf, jax.sharding.PartitionSpec(env.batch_axes, None, None, None))
+
+    # expert GEMMs: FSDP-gathered weights, hidden dim TP over `model`
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        h = jnp.einsum("secd,edf->secf", buf, env.weight(params["w_gate"], 2),
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("secd,edf->secf", buf, env.weight(params["w_up"], 2),
+                       preferred_element_type=jnp.float32)
+        h = (act(h) * u).astype(x.dtype)
+    else:
+        h = jnp.einsum("secd,edf->secf", buf, env.weight(params["w_up"], 2),
+                       preferred_element_type=jnp.float32)
+        h = jax.nn.gelu(h).astype(x.dtype)
+    if env.mesh is not None:
+        h = env.constrain(h, jax.sharding.PartitionSpec(
+            env.dp, None, None, env.tp))
+    out_buf = jnp.einsum("secf,efd->secd", h, env.weight(params["w_down"], 1),
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+
+    def gather_one(ob, a, p):
+        return ob[a, p]
+
+    y_rep = jax.vmap(gather_one)(out_buf, assign, pos_c)     # (ds, nl*k, D)
+    y_rep = y_rep * keep[..., None].astype(x.dtype)
+    y = jnp.sum(y_rep.reshape(ds, nl, k, d)
+                * weights[..., None], axis=2)                # (ds, nl, D)
+    return y.reshape(b, t, d), aux

@@ -1,0 +1,273 @@
+"""Mamba-2 (SSD) language model — the attention-free arch (mamba2-370m).
+
+The chunked SSD computation here is the pure-jnp/XLA path used for training,
+the dry-run and the roofline; it is mathematically identical to the Pallas
+kernel in ``repro.kernels.ssd`` (which is the TPU-runtime fast path, validated
+against the same oracle).  Chunking the (sequence × state) plane is the
+paper's 2-D blocking idea applied inside the layer: chunk grid = block grid.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD in pure jnp (batched over B and heads)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x: jnp.ndarray,      # (B, T, H, P)
+                dt: jnp.ndarray,     # (B, T, H)  positive
+                a: jnp.ndarray,      # (H,)       negative
+                bmat: jnp.ndarray,   # (B, T, G, S)
+                cmat: jnp.ndarray,   # (B, T, G, S)
+                h0: Optional[jnp.ndarray] = None,   # (B, H, S, P)
+                chunk: int = 128) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,T,H,P), h_final (B,H,S,P))."""
+    b, t, h, p = x.shape
+    g, s = bmat.shape[2], bmat.shape[3]
+    hpg = h // g                     # heads per group
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tp = t + pad
+    nc = tp // chunk
+    l = chunk
+
+    xc = x.reshape(b, nc, l, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, l, h).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, l, g, s).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, l, g, s).astype(jnp.float32)
+
+    lda = dtc * a.astype(jnp.float32)                     # (B,NC,L,H) <= 0
+    ell = jnp.cumsum(lda, axis=2)                          # inclusive
+    # pairwise decay within chunk, per head: exp(ell_t - ell_s), s<=t.
+    # The masked (s>t) region has POSITIVE diff -> exp overflows -> inf, and
+    # `where(mask, inf, 0)` poisons the backward pass (0·inf = NaN); clamp
+    # the masked region to 0 BEFORE the exp.
+    diff = ell[:, :, :, None, :] - ell[:, :, None, :, :]   # (B,NC,L_t,L_s,H)
+    tri = (jnp.arange(l)[:, None] >= jnp.arange(l)[None, :])
+    tri_b = tri[None, None, :, :, None]
+    gate = jnp.where(tri_b, jnp.exp(jnp.where(tri_b, diff, 0.0)), 0.0)
+    # scores per group: C_t · B_s
+    scores = jnp.einsum("bnlgs,bnmgs->bnlmg", cc, bc)      # (B,NC,L,L,G)
+    scores = jnp.repeat(scores, hpg, axis=-1)              # (B,NC,L,L,H)
+    w = scores * gate
+    xdt = xc * dtc[..., None]                              # (B,NC,L,H,P)
+    y_intra = jnp.einsum("bnlmh,bnmhp->bnlhp", w, xdt)
+
+    # per-chunk boundary state: sum_s exp(ell_last - ell_s) dt_s B_s x_sᵀ
+    w_end = jnp.exp(ell[:, :, -1:, :] - ell)               # (B,NC,L,H)
+    bg = jnp.repeat(bc, hpg, axis=3) if g != h else bc     # (B,NC,L,H,S)
+    states = jnp.einsum("bnlhs,bnlh,bnlhp->bnhsp", bg, w_end * dtc, xc)
+    decays = jnp.exp(ell[:, :, -1, :])                     # (B,NC,H)
+
+    if h0 is not None:
+        states = states.at[:, 0].add(decays[:, 0, :, None, None]
+                                     * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        d1, s1 = lhs
+        d2, s2 = rhs
+        return d1 * d2, d2[..., None, None] * s1 + s2
+
+    d_acc, h_after = jax.lax.associative_scan(combine, (decays, states), axis=1)
+    h_prev = jnp.concatenate([jnp.zeros_like(h_after[:, :1]),
+                              h_after[:, :-1]], axis=1)
+    if h0 is not None:
+        h_prev = h_prev.at[:, 0].set(h0.astype(jnp.float32))
+
+    cg = jnp.repeat(cc, hpg, axis=3) if g != h else cc     # (B,NC,L,H,S)
+    y_inter = jnp.einsum("bnlhs,bnlh,bnhsp->bnlhp", cg, jnp.exp(ell), h_prev)
+    y = (y_intra + y_inter).reshape(b, tp, h, p)[:, :t]
+    return y.astype(x.dtype), h_after[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    dinner, s, g, h = cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_heads
+    conv_dim = dinner + 2 * g * s
+    ks = jax.random.split(key, 5)
+    return {
+        "norm": jnp.zeros((d,), dtype),
+        "in_proj": cm.dense_init(ks[0], (d, 2 * dinner + 2 * g * s + h), dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), dtype)
+                  / math.sqrt(cfg.ssm_conv),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "gate_norm": jnp.zeros((dinner,), dtype),
+        "out_proj": cm.dense_init(ks[2], (dinner, d), dtype, fan_in=dinner),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv along T. x (B,T,C), w (K,C). Returns (y, new
+    state (B,K-1,C)) where state carries the last K-1 inputs."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)              # (B, T+K-1, C)
+    out = sum(xx[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xx[:, -(k - 1):, :] if k > 1 else state
+    return out + b, new_state
+
+
+def mamba_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                env: cm.ShardEnv = cm.NO_SHARD,
+                state: Optional[Params] = None, single_step: bool = False
+                ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x (B,T,D) -> (y (B,T,D), new_state).  ``state`` carries
+    {"conv": (B,K-1,C), "h": (B,H,S,P)} for decode."""
+    b, t, d = x.shape
+    dinner, s, g, h = cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_heads
+    pdim = cfg.ssm_headdim
+    res = x
+    x = cm.rms_norm(x, p["norm"], cfg.norm_eps)
+    proj = jnp.einsum("btd,dk->btk", x, env.weight(p["in_proj"], 1),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+    z, xbc, dt = jnp.split(proj, [dinner, 2 * dinner + 2 * g * s], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, bmat, cmat = jnp.split(xbc, [dinner, dinner + g * s], axis=-1)
+    xs = env.act_btf(xs) if dinner == cfg.d_ff else xs
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    a = -jnp.exp(p["a_log"])                                # (H,)
+
+    xh = xs.reshape(b, t, h, pdim)
+    bm = bmat.reshape(b, t, g, s)
+    cmt = cmat.reshape(b, t, g, s)
+
+    if single_step:
+        hpg = h // g
+        h_prev = state["h"]                                 # (B,H,S,P)
+        dt1 = dt[:, 0]                                      # (B,H)
+        decay = jnp.exp(a * dt1)[..., None, None]
+        bg = jnp.repeat(bm[:, 0], hpg, axis=1)              # (B,H,S)
+        cg = jnp.repeat(cmt[:, 0], hpg, axis=1)
+        x1 = xh[:, 0].astype(jnp.float32)                   # (B,H,P)
+        h_new = decay * h_prev + (dt1[..., None, None]
+                                  * bg[..., None] * x1[:, :, None, :])
+        y = jnp.einsum("bhs,bhsp->bhp", cg, h_new)[:, None]  # (B,1,H,P)
+        y = y.astype(x.dtype)
+        h_fin = h_new
+    else:
+        h0 = state["h"] if state is not None else None
+        y, h_fin = ssd_chunked(xh, dt, a, bm, cmt, h0, cfg.ssm_chunk)
+
+    y = y + p["d_skip"][None, None, :, None].astype(jnp.float32) \
+        * xh.astype(jnp.float32)
+    y = y.reshape(b, t, dinner).astype(x.dtype)
+    y = cm.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                    p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("btk,kd->btd", y, env.weight(p["out_proj"], 0),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    new_state = {"conv": new_conv, "h": h_fin} if (state is not None
+                                                   or single_step) else None
+    return env.act_btd(res + out), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 LM
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = cfg.activation_dtype
+    k_emb, k_layers = jax.random.split(key)
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    return {
+        "embed": jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model),
+                                   dtype) * 0.02,
+        "layers": cm.stack_layer_params(list(keys),
+                                        lambda k: mamba_init(k, cfg, dtype)),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def forward_hidden(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                   patches=None, env: cm.ShardEnv = cm.NO_SHARD,
+                   banded: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    del patches, banded
+    x = env.act_btd(jnp.take(params["embed"], tokens, axis=0))
+
+    def body(x, layer_params):
+        y, _ = mamba_apply(layer_params, x, cfg, env)
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return cm.rms_norm(x, params["final_norm"], cfg.norm_eps), jnp.float32(0.0)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            patches=None, env: cm.ShardEnv = cm.NO_SHARD,
+            banded: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x, aux = forward_hidden(params, cfg, tokens, patches, env, banded)
+    logits = jnp.einsum("btd,dv->btv", x, params["embed"].T,
+                        preferred_element_type=jnp.float32)
+    return env.act_btv(logits.astype(jnp.float32)), aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            labels: jnp.ndarray, patches=None,
+            env: cm.ShardEnv = cm.NO_SHARD, banded: bool = True) -> jnp.ndarray:
+    hidden, _ = forward_hidden(params, cfg, tokens, env=env)
+    return cm.chunked_lm_loss(hidden, params["embed"].T, labels, env=env,
+                               vocab_parallel=env.vocab_parallel)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    del max_len  # SSM state is O(1) in sequence length
+    dtype = cfg.activation_dtype
+    dinner, s, g, h = cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_heads
+    conv_dim = dinner + 2 * g * s
+    L = cfg.n_layers
+    return {
+        "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "h": jnp.zeros((L, batch, h, s, cfg.ssm_headdim), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jnp.ndarray, env: cm.ShardEnv = cm.NO_SHARD
+                ) -> Tuple[jnp.ndarray, Params]:
+    x = jnp.take(params["embed"], tokens, axis=0)     # (B, 1, D)
+
+    def body(x, xs):
+        layer_params, conv, h = xs
+        y, st = mamba_apply(layer_params, x, cfg, env,
+                            state={"conv": conv, "h": h}, single_step=True)
+        return y, (st["conv"], st["h"])
+
+    x, (convs, hs) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["h"]))
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["embed"].T,
+                        preferred_element_type=jnp.float32)
+    new_cache = {"conv": convs, "h": hs, "pos": cache["pos"] + 1}
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,352 @@
+"""Unified decoder-only transformer covering the dense / MoE / VLM archs.
+
+Features selected per ``ModelConfig``: GQA, RoPE, sliding-window (mistral/
+mixtral), local-global alternation + sandwich norms + logit soft-caps
+(gemma2), QKV bias (qwen), squared-ReLU (nemotron), MoE (mixtral/grok),
+vision-patch prefix (llava).
+
+Layer stacks run as ``lax.scan`` over stacked per-layer params (layer-group
+granularity so heterogeneous alternations stay scannable) with optional
+per-group remat — this keeps the HLO size O(1) in depth, which is what makes
+the 64-layer/314B dry-runs tractable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.config import ModelConfig
+from repro.models.moe import moe_apply, moe_init
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Layer groups: the repeating unit of the scan.  gemma2 alternates
+# local/global, so its group is [local, global]; everything else has a
+# single-layer group.
+# ---------------------------------------------------------------------------
+
+
+def group_size(cfg: ModelConfig) -> int:
+    return cfg.local_global_period if cfg.local_global_period > 0 else 1
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    g = group_size(cfg)
+    assert cfg.n_layers % g == 0, (cfg.n_layers, g)
+    return cfg.n_layers // g
+
+
+def sublayer_window(cfg: ModelConfig, sub_idx: int) -> int:
+    """Sliding window for sub-layer ``sub_idx`` of a group (0 = full attn)."""
+    if cfg.local_global_period > 0:
+        is_global = sub_idx == cfg.local_global_period - 1
+        return 0 if is_global else cfg.attn_window
+    return cfg.attn_window
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _attn_init(key, cfg: ModelConfig, dtype) -> Params:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": cm.dense_init(ks[0], (d, h * hd), dtype),
+        "wk": cm.dense_init(ks[1], (d, hkv * hd), dtype),
+        "wv": cm.dense_init(ks[2], (d, hkv * hd), dtype),
+        "wo": cm.dense_init(ks[3], (h * hd, d), dtype, fan_in=h * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def _layer_init(key, cfg: ModelConfig, dtype) -> Params:
+    ka, km, kr = jax.random.split(key, 3)
+    p: Params = {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": _attn_init(ka, cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if cfg.n_experts > 0:
+        p["moe"] = moe_init(km, cfg, dtype)
+    else:
+        p["mlp"] = cm.mlp_init(km, cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+    if cfg.local_global_period > 0:  # gemma2 sandwich norms
+        p["ln1_post"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ln2_post"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = cfg.activation_dtype
+    k_emb, k_layers, k_head, k_mm = jax.random.split(key, 4)
+    g, ng = group_size(cfg), n_groups(cfg)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    groups = []
+    for s in range(g):
+        groups.append(cm.stack_layer_params(
+            [layer_keys[i * g + s] for i in range(ng)],
+            lambda kk: _layer_init(kk, cfg, dtype)))
+    params: Params = {
+        "embed": jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model),
+                                   dtype) * 0.02,
+        "groups": groups,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = cm.dense_init(k_head, (cfg.d_model, cfg.vocab_size),
+                                          dtype)
+    if cfg.frontend == "vision":
+        k1, k2 = jax.random.split(k_mm)
+        params["mm_proj"] = {
+            "w1": cm.dense_init(k1, (cfg.frontend_dim, cfg.d_model), dtype),
+            "w2": cm.dense_init(k2, (cfg.d_model, cfg.d_model), dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _attn_apply(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                cfg: ModelConfig, window: int, env: cm.ShardEnv,
+                banded: bool) -> jnp.ndarray:
+    b, t, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("btd,dk->btk", x, env.weight(p["wq"], 1),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("btd,dk->btk", x, env.weight(p["wk"], 1),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("btd,dk->btk", x, env.weight(p["wv"], 1),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = env.act_bhtd(q.reshape(b, t, h, hd).transpose(0, 2, 1, 3))
+    k = env.act_bhtd(k.reshape(b, t, hkv, hd).transpose(0, 2, 1, 3))
+    v = env.act_bhtd(v.reshape(b, t, hkv, hd).transpose(0, 2, 1, 3))
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+    o = cm.attention_xla(q, k, v, causal=True, window=window,
+                         softcap=cfg.attn_softcap, banded=banded)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, h * hd)
+    out = jnp.einsum("btk,kd->btd", o, env.weight(p["wo"], 0),
+                     preferred_element_type=env.out_proj_dtype())
+    return out.astype(x.dtype)
+
+
+def _block_apply(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                 cfg: ModelConfig, window: int, env: cm.ShardEnv,
+                 banded: bool) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One transformer block; returns (x, aux_loss)."""
+    sandwich = cfg.local_global_period > 0
+    h = cm.rms_norm(x, p["ln1"], cfg.norm_eps, plus_one=True)
+    h = _attn_apply(p["attn"], h, positions, cfg, window, env, banded)
+    if sandwich:
+        h = cm.rms_norm(h, p["ln1_post"], cfg.norm_eps, plus_one=True)
+    x = env.act_btd(x + h)
+    h = cm.rms_norm(x, p["ln2"], cfg.norm_eps, plus_one=True)
+    if cfg.n_experts > 0:
+        h, aux = moe_apply(p["moe"], h, cfg, env)
+    else:
+        h = cm.mlp_apply(p["mlp"], h, cfg.mlp_type, env)
+        aux = jnp.float32(0.0)
+    if sandwich:
+        h = cm.rms_norm(h, p["ln2_post"], cfg.norm_eps, plus_one=True)
+    return env.act_btd(x + h), aux
+
+
+def embed_inputs(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                 patches: Optional[jnp.ndarray], env: cm.ShardEnv
+                 ) -> jnp.ndarray:
+    """Token embeddings, with the VLM patch prefix projected + prepended."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.local_global_period > 0:  # gemma-style embedding scaling
+        x = (x.astype(jnp.float32) * math.sqrt(cfg.d_model)).astype(x.dtype)
+    if patches is not None:
+        pe = jnp.einsum("bpf,fd->bpd", patches.astype(x.dtype),
+                        params["mm_proj"]["w1"],
+                        preferred_element_type=jnp.float32)
+        pe = jax.nn.gelu(pe)
+        pe = jnp.einsum("bpd,de->bpe", pe.astype(x.dtype),
+                        params["mm_proj"]["w2"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    return env.act_btd(x)
+
+
+def forward_hidden(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                   patches: Optional[jnp.ndarray] = None,
+                   env: cm.ShardEnv = cm.NO_SHARD,
+                   banded: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S) [+ patches (B, P, F)] -> (final hidden (B,T,D), aux)."""
+    x = embed_inputs(params, cfg, tokens, patches, env)
+    t = x.shape[1]
+    positions = jnp.arange(t)
+    g = group_size(cfg)
+
+    def group_body(carry, group_params):
+        x, aux = carry
+        for s in range(g):
+            win = sublayer_window(cfg, s)
+            x, a = _block_apply(group_params[s], x, positions, cfg, win, env,
+                                banded)
+            aux = aux + a
+        return (x, aux), None
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.float32(0.0)),
+        tuple(params["groups"]))
+    return cm.rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=True), aux
+
+
+def lm_head(params: Params, cfg: ModelConfig) -> jnp.ndarray:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            patches: Optional[jnp.ndarray] = None,
+            env: cm.ShardEnv = cm.NO_SHARD,
+            banded: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S) [+ patches (B, P, F)] -> (logits (B, T, V), aux)."""
+    x, aux = forward_hidden(params, cfg, tokens, patches, env, banded)
+    logits = jnp.einsum("btd,dv->btv", x, lm_head(params, cfg),
+                        preferred_element_type=jnp.float32)
+    if cfg.final_softcap > 0.0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return env.act_btv(logits.astype(jnp.float32)), aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            labels: jnp.ndarray, patches: Optional[jnp.ndarray] = None,
+            env: cm.ShardEnv = cm.NO_SHARD, banded: bool = True) -> jnp.ndarray:
+    hidden, aux = forward_hidden(params, cfg, tokens, patches, env, banded)
+    if patches is not None:  # loss only over the text suffix
+        hidden = hidden[:, patches.shape[1]:]
+    loss = cm.chunked_lm_loss(hidden, lm_head(params, cfg), labels,
+                              softcap=cfg.final_softcap, env=env,
+                              vocab_parallel=env.vocab_parallel)
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving): KV caches with rolling buffers for windowed layers
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """Cache pytree: per group-sublayer stacked (ng, B, Hkv, Tc, hd)."""
+    dtype = cfg.activation_dtype
+    ng = n_groups(cfg)
+    caches = []
+    for s in range(group_size(cfg)):
+        win = sublayer_window(cfg, s)
+        tc = min(win, max_len) if win > 0 else max_len
+        caches.append({
+            "k": jnp.zeros((ng, batch, cfg.n_kv_heads, tc, cfg.hd), dtype),
+            "v": jnp.zeros((ng, batch, cfg.n_kv_heads, tc, cfg.hd), dtype),
+        })
+    return {"layers": caches, "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_block(p: Params, x: jnp.ndarray, kc: jnp.ndarray, vc: jnp.ndarray,
+                 pos: jnp.ndarray, cfg: ModelConfig, win: int,
+                 env: cm.ShardEnv) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One transformer block for a single decode token.  Returns
+    (x, new_k_cache, new_v_cache).  ``win > 0`` caches are rolling buffers."""
+    b = x.shape[0]
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    rolling = win > 0
+    tc = kc.shape[2]
+    sandwich = cfg.local_global_period > 0
+    hh = cm.rms_norm(x, p["ln1"], cfg.norm_eps, plus_one=True)
+    q = jnp.einsum("btd,dk->btk", hh, p["attn"]["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    kk = jnp.einsum("btd,dk->btk", hh, p["attn"]["wk"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    vv = jnp.einsum("btd,dk->btk", hh, p["attn"]["wv"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    if cfg.qkv_bias:
+        q, kk, vv = (q + p["attn"]["bq"], kk + p["attn"]["bk"],
+                     vv + p["attn"]["bv"])
+    q = q.reshape(b, 1, h, hd).transpose(0, 2, 1, 3)
+    kk = kk.reshape(b, 1, hkv, hd).transpose(0, 2, 1, 3)
+    vv = vv.reshape(b, 1, hkv, hd).transpose(0, 2, 1, 3)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q = cm.apply_rope(q, posv, cfg.rope_theta)
+    kk = cm.apply_rope(kk, posv, cfg.rope_theta)
+    slot = (pos % tc) if rolling else jnp.minimum(pos, tc - 1)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, kk, slot, axis=2)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, vv, slot, axis=2)
+    o = cm.decode_attention(q, kc, vc, pos + 1, softcap=cfg.attn_softcap,
+                            rolling=rolling)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * hd)
+    attn_out = jnp.einsum("btk,kd->btd", o, p["attn"]["wo"],
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+    if sandwich:
+        attn_out = cm.rms_norm(attn_out, p["ln1_post"], cfg.norm_eps,
+                               plus_one=True)
+    x = x + attn_out
+    hh = cm.rms_norm(x, p["ln2"], cfg.norm_eps, plus_one=True)
+    if cfg.n_experts > 0:
+        mlp_out, _ = moe_apply(p["moe"], hh, cfg, env)
+    else:
+        mlp_out = cm.mlp_apply(p["mlp"], hh, cfg.mlp_type, env)
+    if sandwich:
+        mlp_out = cm.rms_norm(mlp_out, p["ln2_post"], cfg.norm_eps,
+                              plus_one=True)
+    return x + mlp_out, kc, vc
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jnp.ndarray, env: cm.ShardEnv = cm.NO_SHARD
+                ) -> Tuple[jnp.ndarray, Params]:
+    """One token for every sequence: tokens (B, 1) -> (logits (B, 1, V), cache)."""
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.local_global_period > 0:
+        x = (x.astype(jnp.float32) * math.sqrt(cfg.d_model)).astype(x.dtype)
+    g = group_size(cfg)
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def group_body(carry, xs):
+        x = carry
+        group_params, group_caches = xs
+        new_caches = []
+        for s in range(g):
+            win = sublayer_window(cfg, s)
+            x, kc, vc = decode_block(group_params[s], x,
+                                     group_caches[s]["k"],
+                                     group_caches[s]["v"], pos, cfg, win, env)
+            new_caches.append({"k": kc, "v": vc})
+        return x, tuple(new_caches)
+
+    (x), new_layer_caches = jax.lax.scan(
+        group_body, x, (tuple(params["groups"]), tuple(cache["layers"])))
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=True)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("btd,dv->btv", x, head,
+                        preferred_element_type=jnp.float32)
+    if cfg.final_softcap > 0.0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    new_cache = {"layers": list(new_layer_caches), "pos": pos + 1}
+    return logits.astype(jnp.float32), new_cache

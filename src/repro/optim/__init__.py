@@ -1,0 +1,7 @@
+"""Optimizers (from scratch): AdamW, Adafactor, schedules, grad clipping."""
+
+from repro.optim.adamw import (AdamW, Adafactor, clip_by_global_norm,
+                               cosine_schedule, global_norm, make_optimizer)
+
+__all__ = ["AdamW", "Adafactor", "clip_by_global_norm", "cosine_schedule",
+           "global_norm", "make_optimizer"]

@@ -1,0 +1,163 @@
+"""AdamW and Adafactor, from scratch (no optax), pytree-functional.
+
+Moment dtype is configurable (bf16 moments halve optimizer HBM — required to
+fit grok-1-314b on a 256-chip pod; see EXPERIMENTS.md §Dry-run).  Adafactor
+factors the second moment for another ~2x on the biggest models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jnp.ndarray], jnp.ndarray]   # step -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"     # "bfloat16" halves optimizer memory
+
+    def init(self, params: Params) -> Params:
+        mdt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads: Params, state: Params, params: Params
+               ) -> Tuple[Params, Params, dict]:
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        count = state["count"] + 1
+        b1, b2 = self.b1, self.b2
+        mdt = jnp.dtype(self.moment_dtype)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = mf / (1 - b1 ** count)
+            vhat = vf / (1 - b2 ** count)
+            step = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return step, mf.astype(mdt), vf.astype(mdt)
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        steps = jax.tree_util.tree_map(lambda t: t[0], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        ms = jax.tree_util.tree_map(lambda t: t[1], out,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+        vs = jax.tree_util.tree_map(lambda t: t[2], out,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+        lr = self.learning_rate(count)
+        new_params = jax.tree_util.tree_map(
+            lambda p, s: (p.astype(jnp.float32) - lr * s).astype(p.dtype),
+            params, steps)
+        new_state = {"m": ms, "v": vs, "count": count}
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    """Factored second moments (Shazeer & Stern): O(n+m) optimizer memory per
+    (n, m) matrix instead of O(n·m) — the huge-model option."""
+    learning_rate: Callable[[jnp.ndarray], jnp.ndarray]
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_norm: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params: Params) -> Params:
+        def factored(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree_util.tree_map(
+                    factored, params,
+                    is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        count = state["count"] + 1
+        beta = 1.0 - (count.astype(jnp.float32) + 1.0) ** (-self.decay)
+
+        def upd(g, v, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + self.eps
+            if p.ndim >= 2:
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1)[..., None, None], self.eps))
+                step = gf / jnp.sqrt(denom + self.eps)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta * v["v"] + (1 - beta) * g2}
+                step = gf / jnp.sqrt(nv["v"] + self.eps)
+            if p.ndim >= 2 and self.weight_decay:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return step, nv
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        pairs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        steps = treedef.unflatten([s for s, _ in pairs])
+        new_v = treedef.unflatten([v for _, v in pairs])
+        lr = self.learning_rate(count)
+        new_params = jax.tree_util.tree_map(
+            lambda p, s: (p.astype(jnp.float32) - lr * s).astype(p.dtype),
+            params, steps)
+        return new_params, {"v": new_v, "count": count}, \
+            {"grad_norm": gnorm, "lr": lr}
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def make_optimizer(kind: str, peak_lr: float = 3e-4, warmup: int = 100,
+                   total: int = 10000, moment_dtype: str = "float32",
+                   weight_decay: float = 0.1):
+    sched = cosine_schedule(peak_lr, warmup, total)
+    if kind == "adamw":
+        return AdamW(learning_rate=sched, moment_dtype=moment_dtype,
+                     weight_decay=weight_decay)
+    if kind == "adafactor":
+        return Adafactor(learning_rate=sched, weight_decay=weight_decay)
+    raise KeyError(kind)

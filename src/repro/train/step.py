@@ -1,0 +1,81 @@
+"""Training step builder: loss → grad → clip → optimizer, with optional
+gradient accumulation (microbatching) and activation sharding env.
+
+The returned step is a pure function (state, batch) -> (state, metrics) and
+is what launch/dryrun.py lowers for the roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import Batch
+from repro.models import common as cm
+from repro.models.model import Model
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["params", "opt_state"], meta_fields=[])
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+
+    @property
+    def step(self):
+        return self.opt_state["count"]
+
+
+def init_state(model: Model, optimizer, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt_state=optimizer.init(params))
+
+
+def make_train_step(model: Model, optimizer, env: cm.ShardEnv = cm.NO_SHARD,
+                    accum_steps: int = 1, banded: bool = True,
+                    accum_dtype: str = "float32"
+                    ) -> Callable[[TrainState, Batch],
+                                  Tuple[TrainState, Dict[str, jnp.ndarray]]]:
+
+    def loss_fn(params, batch: Batch):
+        return model.loss(params, batch.tokens, batch.labels, batch.patches,
+                          env, banded)
+
+    def train_step(state: TrainState, batch: Batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        else:
+            b = batch.tokens.shape[0]
+            assert b % accum_steps == 0
+
+            def reshape(x):
+                return (x.reshape((accum_steps, b // accum_steps)
+                                  + x.shape[1:]) if x is not None else None)
+
+            micro = jax.tree_util.tree_map(reshape, batch)
+
+            def acc_body(carry, mb):
+                loss_acc, grad_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(state.params, mb)
+                return (loss_acc + l, jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(a.dtype), grad_acc, g)), None
+
+            adt = jnp.dtype(accum_dtype)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, adt), state.params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.float32(0.0), zeros), micro)
+            inv = 1.0 / accum_steps
+            loss = loss * inv
+            grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+        new_params, new_opt, metrics = optimizer.update(
+            grads, state.opt_state, state.params)
+        return (TrainState(params=new_params, opt_state=new_opt),
+                {"loss": loss, **metrics})
+
+    return train_step

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests see ONE CPU device (the dry-run sets its own 512-device flag in a
+# separate process); repo root on path so `benchmarks` imports resolve.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,122 @@
+"""K-means and ALS: convergence + ds-array/Dataset parity (paper §5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms import ALS, KMeans, als_dataset, kmeans_dataset
+from repro.core import Dataset, from_array
+
+
+def blobs(seed=0, k=3, n_per=80, d=4, spread=8.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d)).astype(np.float32) * spread
+    pts = np.concatenate([
+        rng.normal(c, 0.4, size=(n_per, d)).astype(np.float32)
+        for c in centers])
+    rng.shuffle(pts)
+    return pts, centers
+
+
+def match_error(found, true):
+    d = np.linalg.norm(true[:, None, :] - found[None], axis=-1)
+    return d.min(axis=1).max()
+
+
+def test_kmeans_recovers_blobs():
+    pts, true = blobs()
+    x = from_array(pts, (32, 4))
+    km = KMeans(n_clusters=3, max_iter=50, seed=0).fit(x)
+    assert match_error(np.asarray(km.centers_), true) < 0.5
+    labels = km.predict(x)
+    assert labels.shape == (pts.shape[0], 1)
+    lab = np.asarray(labels.collect()).ravel()
+    assert set(np.unique(lab)) <= {0, 1, 2}
+    # score is negative inertia; near-optimal clustering -> small magnitude
+    assert -km.score(x) < pts.shape[0] * 4 * 0.4 ** 2 * 3
+
+
+def test_kmeans_parity_with_dataset_baseline():
+    """Paper Fig. 9: same algorithm, same result, either data structure."""
+    pts, true = blobs(seed=1)
+    km = KMeans(n_clusters=3, max_iter=50, seed=0).fit(from_array(pts, (40, 4)))
+    cb = kmeans_dataset(Dataset.from_array(pts, 6), 3, max_iter=50, seed=0)
+    e1 = match_error(np.asarray(km.centers_), true)
+    e2 = match_error(cb, true)
+    assert e1 < 0.5 and e2 < 0.5
+
+
+def test_kmeans_blocking_invariance():
+    """Results must not depend on the block layout (pure data-structure)."""
+    pts, _ = blobs(seed=2)
+    a = KMeans(n_clusters=3, max_iter=30, seed=0).fit(from_array(pts, (16, 4)))
+    b = KMeans(n_clusters=3, max_iter=30, seed=0).fit(from_array(pts, (100, 2)))
+    np.testing.assert_allclose(np.asarray(a.centers_),
+                               np.asarray(b.centers_), atol=1e-3)
+
+
+def test_als_low_rank_recovery():
+    rng = np.random.default_rng(0)
+    f = 4
+    u0 = rng.normal(size=(50, f)).astype(np.float32)
+    v0 = rng.normal(size=(40, f)).astype(np.float32)
+    r = u0 @ v0.T
+    als = ALS(n_factors=f, reg=1e-3, max_iter=25, tol=1e-7).fit(
+        from_array(r, (16, 16)))
+    rec = np.asarray((als.u_ @ als.v_.transpose()).collect())
+    assert np.sqrt(((rec - r) ** 2).mean()) < 0.05
+    # predict single entries
+    assert abs(als.predict(3, 5) - r[3, 5]) < 0.3
+
+
+def test_als_parity_with_dataset_baseline():
+    rng = np.random.default_rng(1)
+    f = 3
+    r = (rng.normal(size=(30, f)) @ rng.normal(size=(f, 24))).astype(np.float32)
+    als = ALS(n_factors=f, reg=1e-3, max_iter=25, tol=1e-7).fit(
+        from_array(r, (8, 8)))
+    u, v = als_dataset(Dataset.from_array(r, 5), n_factors=f, reg=1e-3,
+                       max_iter=25)
+    e1 = np.sqrt(((np.asarray((als.u_ @ als.v_.T).collect()) - r) ** 2).mean())
+    e2 = np.sqrt((((u @ v.T) - r) ** 2).mean())
+    assert e1 < 0.05 and e2 < 0.05
+
+
+def test_als_no_transpose_copy_needed():
+    """ds-array ALS uses the O(N)-task transpose; Dataset ALS pays N^2+N
+    (checked via the baseline's own task counter)."""
+    rng = np.random.default_rng(0)
+    r = rng.normal(size=(20, 20)).astype(np.float32)
+    ds = Dataset.from_array(r, 4)
+    before = ds.counter.tasks
+    als_dataset(ds, n_factors=2, max_iter=2)
+    # baseline paid at least the N^2+N transpose tasks up front
+    from repro.core import costmodel
+    assert ds.counter.tasks - before >= costmodel.dataset_transpose_tasks(4)
+
+
+def test_pca_matches_svd():
+    from repro.algorithms.linalg import frobenius, pca
+    rng = np.random.default_rng(0)
+    basis = np.linalg.qr(rng.normal(size=(6, 6)))[0]
+    data = ((rng.normal(size=(400, 6)) * [10, 5, 2, .1, .1, .1]) @ basis.T
+            ).astype(np.float32)
+    x = from_array(data, (100, 3))
+    comps, var = pca(x, 2, n_iter=50)
+    _, s, vt = np.linalg.svd(data - data.mean(0), full_matrices=False)
+    overlap = np.abs(np.asarray(comps) @ vt[:2].T)
+    assert np.allclose(np.sort(np.diag(overlap)), [1, 1], atol=0.02)
+    assert np.allclose(np.asarray(var), s[:2] ** 2 / 399, rtol=0.05)
+    assert abs(frobenius(x) - np.linalg.norm(data)) < 1e-2
+
+
+def test_tsqr():
+    from repro.algorithms.linalg import tsqr
+    rng = np.random.default_rng(1)
+    for n, bs in [(240, 48), (200, 33)]:
+        a = rng.normal(size=(n, 8)).astype(np.float32)
+        q, r = tsqr(from_array(a, (bs, 8)))
+        assert np.allclose(np.asarray(q) @ np.asarray(r), a, atol=1e-4)
+        assert np.allclose(np.asarray(q).T @ np.asarray(q), np.eye(8),
+                           atol=1e-4)

@@ -1,0 +1,58 @@
+"""Dataset baseline: semantics + the paper's task-complexity laws."""
+
+import numpy as np
+
+from repro.core import Dataset, TaskCounter, costmodel
+
+
+def test_transpose_semantics_and_task_law():
+    x = np.random.default_rng(0).normal(size=(30, 30)).astype(np.float32)
+    for n in [2, 3, 5, 6]:
+        ds = Dataset.from_array(x, n)
+        before = ds.counter.tasks
+        t = ds.transpose()
+        assert np.allclose(t.collect(), x.T)
+        used = ds.counter.tasks - before
+        assert used == costmodel.dataset_transpose_tasks(n), (n, used)
+
+
+def test_shuffle_semantics_and_task_law():
+    x = np.random.default_rng(0).normal(size=(40, 3)).astype(np.float32)
+    for n in [2, 4, 5]:
+        ds = Dataset.from_array(x, n)
+        before = ds.counter.tasks
+        s = ds.shuffle(np.random.default_rng(1))
+        assert np.allclose(np.sort(s.collect(), 0), np.sort(x, 0))
+        used = ds.counter.tasks - before
+        size = x.shape[0] // n
+        assert used <= costmodel.dataset_shuffle_tasks(n, size + 1)
+        assert used >= n + n  # at least one split + one merge per Subset
+
+
+def test_rowsum_reduction_tree():
+    x = np.random.default_rng(0).normal(size=(16, 4)).astype(np.float32)
+    ds = Dataset.from_array(x, 4)
+    before = ds.counter.tasks
+    s = ds.sum_rows()
+    assert np.allclose(s, x.sum(0, keepdims=True), atol=1e-4)
+    assert ds.counter.tasks - before == costmodel.dataset_rowsum_tasks(4)
+
+
+def test_task_law_separation():
+    """The paper's headline: ds-array transpose is O(N) vs O(N^2+N)."""
+    for n in [16, 64, 256, 1536]:
+        assert costmodel.dsarray_transpose_tasks(n, 1) == n
+        assert costmodel.dataset_transpose_tasks(n) == n * n + n
+        assert costmodel.dsarray_shuffle_tasks(n) == 2 * n
+    # modeled PyCOMPSs wall-time reproduces the paper's collapse (Fig. 6):
+    t_ds = costmodel.pycompss_time(costmodel.dataset_transpose_tasks(1536),
+                                   0.05, 768)
+    t_da = costmodel.pycompss_time(costmodel.dsarray_transpose_tasks(1536, 1),
+                                   0.05, 768)
+    assert t_ds / t_da > 100  # two orders of magnitude (paper: 4.5h -> 7s)
+
+
+def test_counter_bytes():
+    c = TaskCounter()
+    c.task(np.zeros((4, 4), np.float32))
+    assert c.tasks == 1 and c.bytes_moved == 64

@@ -1,0 +1,162 @@
+"""Property + unit tests for the ds-array core (vs NumPy oracle)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BlockGrid, DsArray, Dataset, eye, from_array,
+                        random_array, zeros)
+from repro.core import shuffle as sh
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def arr_and_blocks(draw):
+    n = draw(st.integers(1, 40))
+    m = draw(st.integers(1, 40))
+    bn = draw(st.integers(1, 12))
+    bm = draw(st.integers(1, 12))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    x = np.random.default_rng(seed).normal(size=(n, m)).astype(np.float32)
+    return x, (bn, bm)
+
+
+shapes = st.builds(lambda d: d, st.composite(arr_and_blocks)())
+
+
+@st.composite
+def case(draw):
+    return arr_and_blocks(draw)
+
+
+@given(case())
+def test_roundtrip(data):
+    x, bs = data
+    a = from_array(x, bs)
+    assert np.allclose(np.asarray(a.collect()), x)
+
+
+@given(case())
+def test_transpose(data):
+    x, bs = data
+    a = from_array(x, bs)
+    assert np.allclose(np.asarray(a.T.collect()), x.T)
+    # double transpose is identity
+    assert np.allclose(np.asarray(a.T.T.collect()), x)
+
+
+@given(case())
+def test_elementwise_and_reductions(data):
+    x, bs = data
+    a = from_array(x, bs)
+    assert np.allclose(np.asarray((a + 1.5).collect()), x + 1.5, atol=1e-5)
+    assert np.allclose(np.asarray((a * a).collect()), x * x, atol=1e-4)
+    assert np.allclose(np.asarray((a ** 2).collect()), x ** 2, atol=1e-4)
+    assert np.allclose(np.asarray(a.sum(axis=0).collect()),
+                       x.sum(0, keepdims=True), atol=1e-3)
+    assert np.allclose(np.asarray(a.sum(axis=1).collect()),
+                       x.sum(1).reshape(-1, 1), atol=1e-3)
+    assert np.allclose(np.asarray(a.mean(axis=0).collect()),
+                       x.mean(0, keepdims=True), atol=1e-4)
+    assert np.allclose(np.asarray(a.max(axis=1).collect()),
+                       x.max(1).reshape(-1, 1))
+    assert np.allclose(np.asarray(a.min(axis=0).collect()),
+                       x.min(0, keepdims=True))
+    assert np.allclose(float(a.sum()), x.sum(), atol=1e-2)
+    assert np.allclose(np.asarray(a.norm(axis=1).collect()).ravel(),
+                       np.linalg.norm(x, axis=1), atol=1e-3)
+
+
+@given(case(), case())
+def test_matmul(da, db):
+    x, bsa = da
+    y, bsb = db
+    y = y[: x.shape[1] or 1].copy() if False else y
+    # make shapes compatible: use x (n,m) @ x.T (m,n)
+    a = from_array(x, bsa)
+    b = from_array(x.T, (bsa[1], bsa[0]))
+    c = a @ b
+    assert np.allclose(np.asarray(c.collect()), x @ x.T, atol=1e-3)
+
+
+@given(case())
+def test_rechunk_preserves(data):
+    x, bs = data
+    a = from_array(x, bs)
+    for nbs in [(1, 1), (5, 3), (x.shape[0], x.shape[1])]:
+        assert np.allclose(np.asarray(a.rechunk(nbs).collect()), x)
+
+
+@given(case())
+def test_indexing(data):
+    x, bs = data
+    a = from_array(x, bs)
+    n, m = x.shape
+    r0, r1 = 0, max(1, n // 2)
+    c0, c1 = 0, max(1, m // 2)
+    assert np.allclose(np.asarray(a[r0:r1, c0:c1].collect()), x[r0:r1, c0:c1])
+    rows = [i for i in range(0, n, 2)]
+    assert np.allclose(np.asarray(a[rows].collect()), x[rows])
+
+
+def test_matmul_rechunks_incompatible_blocks():
+    x = np.random.default_rng(0).normal(size=(10, 12)).astype(np.float32)
+    y = np.random.default_rng(1).normal(size=(12, 8)).astype(np.float32)
+    a = from_array(x, (4, 5))
+    b = from_array(y, (3, 4))  # inner block mismatch -> auto rechunk
+    assert np.allclose(np.asarray((a @ b).collect()), x @ y, atol=1e-3)
+
+
+def test_shape_errors():
+    a = from_array(np.ones((4, 4), np.float32), (2, 2))
+    b = from_array(np.ones((5, 4), np.float32), (2, 2))
+    with pytest.raises(ValueError):
+        _ = a @ b
+    with pytest.raises(ValueError):
+        _ = a + b
+    with pytest.raises(ValueError):
+        BlockGrid((4, 4), (0, 2))
+
+
+def test_creation_routines():
+    assert np.allclose(np.asarray(eye(10, (3, 3)).collect()), np.eye(10))
+    assert np.asarray(zeros((5, 7), (2, 2)).collect()).sum() == 0
+    r = random_array(jax.random.PRNGKey(0), (20, 10), (6, 4))
+    g = np.asarray(r.collect())
+    assert g.shape == (20, 10) and np.isfinite(g).all()
+    # pad region must be zero (invariant)
+    assert np.asarray(r.blocks).shape == (4, 3, 6, 4)
+
+
+def test_shuffles_preserve_rows():
+    x = np.random.default_rng(0).normal(size=(24, 5)).astype(np.float32)
+    a = from_array(x, (6, 5))
+    for fn in [sh.pseudo_shuffle, sh.exact_shuffle]:
+        s = fn(jax.random.PRNGKey(1), a)
+        assert np.allclose(np.sort(np.asarray(s.collect()), axis=0),
+                           np.sort(x, axis=0))
+
+
+def test_paper_expression():
+    """The paper's §4.2.3 example: sqrt(norm(w^T, axis=1)^2)."""
+    x = np.random.default_rng(0).normal(size=(13, 7)).astype(np.float32)
+    w = from_array(x, (4, 3))
+    expr = (w.transpose().norm(axis=1) ** 2).sqrt()
+    assert np.allclose(np.asarray(expr.collect()).ravel(),
+                       np.linalg.norm(x.T, axis=1), atol=1e-4)
+
+
+def test_jit_composition():
+    x = np.random.default_rng(0).normal(size=(16, 16)).astype(np.float32)
+    a = from_array(x, (4, 4))
+
+    @jax.jit
+    def f(a):
+        return ((a @ a.T) + 1.0).sum(axis=0)
+
+    out = f(a)
+    ref = (x @ x.T + 1.0).sum(0, keepdims=True)
+    assert np.allclose(np.asarray(out.collect()), ref, atol=1e-2)

@@ -1,0 +1,126 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode).
+
+Shape/dtype sweeps use hypothesis where ranges matter and explicit grids for
+the structured cases (head counts, windows, caps).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.kmeans.ops import kmeans_assign
+from repro.kernels.kmeans.ref import kmeans_assign_ref
+from repro.kernels.matmul.ops import matmul
+from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.ssd.ops import ssd_decode_step, ssd_scan
+from repro.kernels.ssd.ref import ssd_ref
+
+settings.register_profile("kern", max_examples=10, deadline=None)
+settings.load_profile("kern")
+
+RNG = np.random.default_rng(0)
+
+
+@given(st.integers(1, 300), st.integers(1, 300), st.integers(1, 300),
+       st.sampled_from([np.float32, np.float16]))
+def test_matmul_sweep(m, k, n, dtype):
+    a = RNG.normal(size=(m, k)).astype(dtype)
+    b = RNG.normal(size=(k, n)).astype(dtype)
+    out = matmul(jnp.asarray(a), jnp.asarray(b), block_m=128, block_n=128,
+                 block_k=128, interpret=True)
+    ref = matmul_ref(jnp.asarray(a), jnp.asarray(b))
+    tol = 1e-3 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("tq,tk,hq,hkv,d,causal,window,cap,qoff", [
+    (128, 128, 4, 2, 64, True, 0, 0.0, 0),
+    (100, 100, 4, 4, 48, True, 0, 0.0, 0),
+    (64, 256, 2, 1, 64, True, 0, 0.0, 192),
+    (128, 128, 8, 2, 64, True, 64, 0.0, 0),
+    (128, 128, 4, 2, 64, True, 0, 30.0, 0),
+    (96, 160, 4, 2, 64, False, 0, 0.0, 0),
+    (1, 300, 4, 2, 64, True, 0, 0.0, 299),
+    (256, 512, 2, 2, 128, True, 128, 50.0, 0),
+])
+def test_flash_attention_sweep(tq, tk, hq, hkv, d, causal, window, cap, qoff):
+    q = RNG.normal(size=(2, hq, tq, d)).astype(np.float32)
+    k = RNG.normal(size=(2, hkv, tk, d)).astype(np.float32)
+    v = RNG.normal(size=(2, hkv, tk, d)).astype(np.float32)
+    got = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          causal=causal, window=window, softcap=cap,
+                          q_offset=qoff, block_q=128, block_k=128,
+                          interpret=True)
+    ref = attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                        causal=causal, window=window, softcap=cap,
+                        q_offset=qoff)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=3e-5)
+
+
+def test_flash_attention_bf16():
+    q = RNG.normal(size=(1, 2, 128, 128)).astype(np.float32)
+    k = RNG.normal(size=(1, 2, 128, 128)).astype(np.float32)
+    v = RNG.normal(size=(1, 2, 128, 128)).astype(np.float32)
+    got = flash_attention(jnp.asarray(q, jnp.bfloat16),
+                          jnp.asarray(k, jnp.bfloat16),
+                          jnp.asarray(v, jnp.bfloat16), interpret=True)
+    ref = attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(ref),
+                               atol=3e-2)
+
+
+@given(st.integers(10, 600), st.integers(2, 130), st.integers(2, 17))
+def test_kmeans_assign_sweep(n, d, k):
+    x = RNG.normal(size=(n, d)).astype(np.float32)
+    cen = RNG.normal(size=(k, d)).astype(np.float32)
+    l1, s1, c1 = kmeans_assign(jnp.asarray(x), jnp.asarray(cen),
+                               block_n=128, interpret=True)
+    l2, s2, c2 = kmeans_assign_ref(jnp.asarray(x), jnp.asarray(cen))
+    assert (np.asarray(l1) == np.asarray(l2)).all()
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2))
+
+
+@pytest.mark.parametrize("bh,t,p,s,chunk", [
+    (4, 256, 64, 32, 64),
+    (2, 130, 32, 16, 64),   # ragged tail chunk
+    (3, 64, 16, 8, 32),
+    (1, 32, 128, 128, 16),  # big state
+])
+def test_ssd_sweep(bh, t, p, s, chunk):
+    x = RNG.normal(size=(bh, t, p)).astype(np.float32)
+    dt = RNG.uniform(0.001, 0.1, size=(bh, t)).astype(np.float32)
+    a = (-RNG.uniform(0.5, 2.0, size=(bh,))).astype(np.float32)
+    b = RNG.normal(size=(bh, t, s)).astype(np.float32)
+    c = RNG.normal(size=(bh, t, s)).astype(np.float32)
+    h0 = RNG.normal(size=(bh, s, p)).astype(np.float32)
+    y1, h1 = ssd_scan(*map(jnp.asarray, (x, dt, a, b, c, h0)), chunk=chunk,
+                      interpret=True)
+    y2, h2 = ssd_ref(*map(jnp.asarray, (x, dt, a, b, c, h0)))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-4)
+
+
+def test_ssd_decode_matches_scan():
+    bh, p, s = 3, 16, 8
+    x = RNG.normal(size=(bh, 5, p)).astype(np.float32)
+    dt = RNG.uniform(0.01, 0.1, size=(bh, 5)).astype(np.float32)
+    a = -RNG.uniform(0.5, 2, (bh,)).astype(np.float32)
+    b = RNG.normal(size=(bh, 5, s)).astype(np.float32)
+    c = RNG.normal(size=(bh, 5, s)).astype(np.float32)
+    y_ref, h_ref = ssd_ref(*map(jnp.asarray, (x, dt, a, b, c)))
+    h = jnp.zeros((bh, s, p))
+    ys = []
+    for t in range(5):
+        y, h = ssd_decode_step(jnp.asarray(x[:, t]), jnp.asarray(dt[:, t]),
+                               jnp.asarray(a), jnp.asarray(b[:, t]),
+                               jnp.asarray(c[:, t]), h)
+        ys.append(y)
+    np.testing.assert_allclose(np.stack([np.asarray(y) for y in ys], 1),
+                               np.asarray(y_ref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=1e-4)
