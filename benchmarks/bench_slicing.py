@@ -1,0 +1,129 @@
+"""Structural ops — block-native vs the seed materialize-then-reblock path.
+
+The seed implementation of ``__getitem__``/``rechunk``/``concat_rows`` built
+the global ``(n, m)`` layout (``_global_padded``) and re-blocked it with
+``from_array`` — O(n·m) work and memory for ANY selection, and it silently
+collapsed sharded operands onto one device.  The block-native subsystem
+(``core.structural``) makes an aligned slice a grid slice, a rechunk a
+regroup reshape, and a concat a grid stack.
+
+Measured in **eager** mode, which is how structural ops are dispatched in
+user code (estimator ``fit`` loops, minibatching, factor slicing) — this is
+where the seed path actually pays its O(n·m) relayouts.  ``jit`` rows are
+reported too: under jit XLA fuses the seed path's global relayout down to
+O(selected) as well, so the gap narrows — the block-native win under jit is
+the absent full-size intermediate (memory) and preserved sharding, which the
+no-global-intermediate tests assert on the jaxpr.
+
+Acceptance headline: ``slicing/aligned/.../speedup`` ≥ 10x at the 8192²
+default size.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, time_call
+from repro.core import ceil_div, concat_rows, costmodel, from_array
+from repro.core.dsarray import DsArray
+
+
+# ---------------------------------------------------------------------------
+# The seed paths, preserved verbatim for comparison (they were deleted from
+# DsArray when core.structural landed).
+# ---------------------------------------------------------------------------
+
+
+def _seed_slice(a: DsArray, r0, r1, c0, c1, bs) -> jnp.ndarray:
+    g = a._global_padded()[: a.shape[0], : a.shape[1]]
+    return from_array(g[r0:r1, c0:c1], bs).blocks
+
+
+def _seed_filter(a: DsArray, idx, bs) -> jnp.ndarray:
+    g = a._global_padded()[: a.shape[0], : a.shape[1]]
+    return from_array(g[idx], bs).blocks
+
+
+def _seed_rechunk(a: DsArray, bs) -> jnp.ndarray:
+    g = a._global_padded()[: a.shape[0], : a.shape[1]]
+    return from_array(g, bs).blocks
+
+
+def _seed_concat(parts, bs) -> jnp.ndarray:
+    glob = jnp.concatenate([p.collect() for p in parts], axis=0)
+    return from_array(glob, bs).blocks
+
+
+def _pair(rows: List[Row], name: str, new_fn, old_fn, derived: str) -> float:
+    """Time eager new/old + jitted new/old; emit rows; return eager speedup."""
+    t_new = time_call(new_fn)
+    t_old = time_call(old_fn)
+    t_new_j = time_call(jax.jit(new_fn))
+    t_old_j = time_call(jax.jit(old_fn))
+    speedup = t_old / max(t_new, 1e-9)
+    rows.append((f"{name}/block-native", t_new, derived))
+    rows.append((f"{name}/seed-materialize", t_old, f"x{speedup:.1f}"))
+    rows.append((f"{name}/jit/block-native", t_new_j,
+                 f"jit-fused-x{t_old_j / max(t_new_j, 1e-9):.1f}"))
+    rows.append((f"{name}/jit/seed-materialize", t_old_j, ""))
+    return speedup
+
+
+def run(size: int = 8192, block: int = 512) -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(size, size)).astype(np.float32)
+    a = from_array(x, (block, block))
+    jax.block_until_ready(a.blocks)
+    n, bn = size, block
+    half = (n // 2 // bn) * bn          # block-aligned midpoint
+
+    # ---- block-aligned slice: grid slice vs global materialize ------------
+    r0, r1, c0, c1 = 0, half, bn, half + bn
+    sp = _pair(
+        rows, f"slicing/aligned/{size}x{size}",
+        lambda: a[r0:r1, c0:c1].blocks,
+        lambda: _seed_slice(a, r0, r1, c0, c1, (bn, bn)),
+        f"tasks={costmodel.dsarray_slice_tasks(ceil_div(r1 - r0, bn), ceil_div(c1 - c0, bn))}")
+    rows.append((f"slicing/aligned/{size}x{size}/speedup", 0.0, f"x{sp:.1f}"))
+
+    # ---- unaligned slice (gather lowering) --------------------------------
+    r0u, r1u = 7, half + 7
+    _pair(rows, f"slicing/unaligned/{size}x{size}",
+          lambda: a[r0u:r1u, c0:c1].blocks,
+          lambda: _seed_slice(a, r0u, r1u, c0, c1, (bn, bn)),
+          f"tasks={costmodel.dsarray_filter_tasks(ceil_div(r1u - r0u, bn), ceil_div(c1 - c0, bn))}")
+
+    # ---- integer-array row filter -----------------------------------------
+    idx = jnp.asarray(rng.choice(n, size=n // 4, replace=False).astype(np.int32))
+    fb = min(bn, n // 4)
+    _pair(rows, f"slicing/filter-quarter/{size}x{size}",
+          lambda: a[idx].blocks,
+          lambda: _seed_filter(a, idx, (fb, bn)),
+          f"bytes={costmodel.tpu_filter_bytes(n // 4, size, 4, 1, 1):.2e}")
+
+    # ---- rechunk, evenly dividing (regroup vs two global layouts) ---------
+    g = ceil_div(size, bn)
+    _pair(rows, f"rechunk/split2x2/{size}x{size}",
+          lambda: a.rechunk((bn // 2, bn // 2)).blocks,
+          lambda: _seed_rechunk(a, (bn // 2, bn // 2)),
+          f"tasks={costmodel.dsarray_rechunk_tasks(g, g)}")
+
+    # ---- concat of two aligned parts --------------------------------------
+    b = from_array(rng.normal(size=(size // 2, size)).astype(np.float32),
+                   (bn, bn))
+    jax.block_until_ready(b.blocks)
+    _pair(rows, f"concat/2parts/{size}x{size}",
+          lambda: concat_rows([a, b]).blocks,
+          lambda: _seed_concat([a, b], (bn, bn)),
+          f"tasks={costmodel.dsarray_concat_tasks(2)}")
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -10,12 +10,12 @@ from __future__ import annotations
 
 def main() -> None:
     from benchmarks import (bench_als, bench_kmeans, bench_matmul,
-                            bench_shuffle, bench_transpose)
+                            bench_shuffle, bench_slicing, bench_transpose)
     from benchmarks.common import emit
 
     print("name,us_per_call,derived")
-    for mod in (bench_transpose, bench_als, bench_shuffle, bench_kmeans,
-                bench_matmul):
+    for mod in (bench_transpose, bench_als, bench_shuffle, bench_slicing,
+                bench_kmeans, bench_matmul):
         emit(mod.run())
 
 

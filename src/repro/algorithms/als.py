@@ -28,13 +28,19 @@ import numpy as np
 
 from repro.core.dsarray import DsArray, from_array, random_array
 from repro.core.dataset_baseline import Dataset
+from repro.core.structural import gram
 
 
-def _solve_gram(y: jnp.ndarray, reg: float) -> jnp.ndarray:
-    """(YᵀY + λI)⁻¹ for a small dense factor matrix Y (f×f solve)."""
+def _solve_gram_ds(y: DsArray, reg: float) -> jnp.ndarray:
+    """(YᵀY + λI)⁻¹ with the Gram computed block-natively (no collect()).
+
+    ``core.structural.gram`` does one einsum over the stacked tensor — the
+    per-block partial-Gram tasks of the paper, psum'd over the grid — so the
+    (n, f) factor matrix never materializes on one host.
+    """
     f = y.shape[1]
-    gram = y.T @ y + reg * jnp.eye(f, dtype=y.dtype)
-    return jnp.linalg.inv(gram)
+    g = gram(y) + reg * jnp.eye(f, dtype=y.dtype)
+    return jnp.linalg.inv(g)
 
 
 @dataclasses.dataclass
@@ -81,9 +87,9 @@ class ALS:
     @jax.jit
     def _step_jit(r: DsArray, rt: DsArray, u: DsArray, v: DsArray,
                   reg: float) -> Tuple[DsArray, DsArray]:
-        vg = _solve_gram(v.collect(), reg)      # (f, f) replicated
+        vg = _solve_gram_ds(v, reg)             # (f, f) replicated, no collect
         u_new = (r @ v) @ from_array(vg, (v.block_shape[1], v.block_shape[1]))
-        ug = _solve_gram(u_new.collect(), reg)
+        ug = _solve_gram_ds(u_new, reg)
         v_new = (rt @ u_new) @ from_array(ug, (u_new.block_shape[1],
                                                u_new.block_shape[1]))
         return u_new, v_new

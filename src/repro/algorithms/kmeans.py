@@ -83,10 +83,59 @@ def _kmeanspp_init(x: np.ndarray, k: int, rng: np.random.Generator) -> np.ndarra
     centers = [x[rng.integers(n)]]
     d2 = ((x - centers[0]) ** 2).sum(-1)
     for _ in range(1, k):
-        p = d2 / max(d2.sum(), 1e-12)
+        tot = d2.sum()
+        # degenerate data (every remaining point coincides with a center):
+        # D² sampling is undefined, fall back to uniform
+        p = d2 / tot if tot > 0 else np.full(n, 1.0 / n)
         centers.append(x[rng.choice(n, p=p)])
         d2 = np.minimum(d2, ((x - centers[-1]) ** 2).sum(-1))
     return np.stack(centers).astype(x.dtype)
+
+
+@functools.partial(jax.jit)
+def _d2_to_center(blocks: jnp.ndarray, row_valid: jnp.ndarray,
+                  center: jnp.ndarray) -> jnp.ndarray:
+    """Per-row squared distance to one center, over the stacked tensor.
+
+    ``center`` is the (gm*bm,)-padded row; both the block pad and the center
+    pad are zero, so the squared difference vanishes on pad columns.
+    Returns (gn, bn) with invalid rows zeroed.
+    """
+    gn, gm, bn, bm = blocks.shape
+    c_blocks = center.reshape(gm, bm)
+    diff = blocks - c_blocks[None, :, None, :]
+    d2 = jnp.einsum("ijab,ijab->ia", diff, diff,
+                    preferred_element_type=jnp.float32)
+    return d2 * row_valid.astype(d2.dtype)
+
+
+def _kmeanspp_init_ds(x: DsArray, k: int, rng: np.random.Generator,
+                      row_valid: jnp.ndarray) -> jnp.ndarray:
+    """Block-native k-means++: never materializes the global array.
+
+    The seed version did ``x.collect()`` — O(n·m) single-host memory, the
+    exact materialization tax the ds-array is meant to avoid.  Here each D²
+    pass is one fused op over the stacked tensor; only the O(n) distance
+    vector and the O(m) chosen rows ever reach the host.
+    """
+    n, m = x.shape
+    gn, gm, bn, bm = x.blocks.shape
+
+    def fetch_row(i: int) -> jnp.ndarray:
+        # block-native single-row gather -> (1, m) -> padded (gm*bm,)
+        row = x[int(i)].collect().ravel()
+        return jnp.pad(row, (0, gm * bm - m))
+
+    centers = [fetch_row(int(rng.integers(n)))]
+    d2 = _d2_to_center(x.blocks, row_valid, centers[0])
+    for _ in range(1, k):
+        d = np.maximum(np.asarray(d2, dtype=np.float64).reshape(-1)[:n], 0.0)
+        tot = d.sum()
+        # degenerate data (all rows coincide with a center): uniform fallback
+        p = d / tot if tot > 0 else np.full(n, 1.0 / n)
+        centers.append(fetch_row(int(rng.choice(n, p=p))))
+        d2 = jnp.minimum(d2, _d2_to_center(x.blocks, row_valid, centers[-1]))
+    return jnp.stack(centers)[:, : gm * bm]
 
 
 @dataclasses.dataclass
@@ -109,14 +158,11 @@ class KMeans:
 
     def fit(self, x: DsArray) -> "KMeans":
         n, m = x.shape
-        gn, gm, bn, bm = x.blocks.shape
-        m_pad = gm * bm
-        # k-means++ init (k passes over the data; k is small)
-        init = jnp.pad(
-            jnp.asarray(_kmeanspp_init(np.asarray(x.collect()), self.n_clusters,
-                                       np.random.default_rng(self.seed))),
-            ((0, 0), (0, m_pad - m)))
         row_valid = self._row_valid(x)
+        # block-native k-means++ init (k D² passes, each one fused op over the
+        # stacked tensor; no x.collect() — the array never leaves the devices)
+        init = _kmeanspp_init_ds(x, self.n_clusters,
+                                 np.random.default_rng(self.seed), row_valid)
         centers, _, iters = _kmeans_run(x.blocks, init, row_valid, m,
                                         self.tol, self.max_iter)
         self.centers_ = centers[:, :m]

@@ -17,12 +17,14 @@ from repro.core.dsarray import (
     zeros,
 )
 from repro.core.shuffle import exact_shuffle, pseudo_shuffle
-from repro.core import costmodel
+from repro.core import compat, costmodel, structural
+from repro.core.structural import gram, take_cols, take_rows
 from repro.core.dataset_baseline import Dataset, Subset, TaskCounter
 
 __all__ = [
     "BlockGrid", "DsArray", "Dataset", "Subset", "TaskCounter",
     "from_array", "zeros", "full", "eye", "identity_like", "random_array",
     "concat_rows", "pseudo_shuffle", "exact_shuffle", "costmodel",
+    "compat", "structural", "gram", "take_rows", "take_cols",
     "ceil_div", "round_up",
 ]

@@ -103,6 +103,32 @@ class BlockGrid:
         )
 
 
+# ---------------------------------------------------------------------------
+# Slice / regroup geometry (pure integer math used by core.structural).
+# ---------------------------------------------------------------------------
+
+
+def is_aligned_slice(s: slice, size: int, block: int) -> bool:
+    """True iff ``s`` selects a contiguous range starting on a block boundary
+    with unit step — the case a slice is a pure block-grid slice + edge remask."""
+    start, stop, step = s.indices(size)
+    return step == 1 and start % block == 0 and stop >= start
+
+
+def grid_span(start: int, stop: int, block: int) -> Tuple[int, int]:
+    """Half-open range of grid indices whose blocks cover rows [start, stop)."""
+    if stop <= start:
+        return (start // block, start // block + 1)  # empty -> keep one block
+    return (start // block, ceil_div(stop, block))
+
+
+def can_regroup(old: Tuple[int, int], new: Tuple[int, int]) -> bool:
+    """True iff block shape ``old`` reaches ``new`` by a pure regroup reshape
+    (per axis, one size evenly divides the other — split or merge); otherwise
+    a gather-based repack is required."""
+    return all(o % n == 0 or n % o == 0 for o, n in zip(old, new))
+
+
 def compatible_for_elementwise(a: BlockGrid, b: BlockGrid) -> bool:
     return a.shape == b.shape and a.block_shape == b.block_shape
 

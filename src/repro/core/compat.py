@@ -1,0 +1,100 @@
+"""Version-compat shims over the moving parts of the jax API.
+
+The repo targets the installed toolchain (jax 0.4.37 here) but is written
+against the modern spellings used on TPU pods.  Three surfaces moved between
+jax 0.4.x and 0.5+/0.6+:
+
+* ``jax.sharding.AxisType``       — did not exist before 0.5; meshes were
+  implicitly ``Auto``.  We expose an ``AxisType`` enum stand-in so call sites
+  can always say ``axis_types=(AxisType.Auto,) * n``.
+* ``jax.make_mesh(..., axis_types=...)`` — the kwarg is new.  ``make_mesh``
+  here forwards it when supported and drops it otherwise (old meshes are
+  always Auto, which is what every caller in this repo wants).
+* ``jax.shard_map`` / ``check_vma`` — previously
+  ``jax.experimental.shard_map.shard_map`` with ``check_rep``.  ``shard_map``
+  here resolves the import and translates the flag.
+
+Import from here instead of jax directly in any code that touches mesh
+construction or shard_map: ``from repro.core.compat import AxisType,
+make_mesh, shard_map``.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+__all__ = ["AxisType", "make_mesh", "shard_map", "tpu_compiler_params"]
+
+
+class _AxisTypeShim(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` on jax < 0.5 (all-Auto world)."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+AxisType = getattr(jax.sharding, "AxisType", _AxisTypeShim)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices=None, axis_types: Optional[Tuple] = None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` that tolerates jax versions without ``axis_types``.
+
+    ``axis_types`` defaults to all-Auto, matching the implicit behaviour of
+    old jax; it is forwarded only when the installed jax understands it.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is None:
+        axis_types = (AxisType.Auto,) * len(tuple(axis_names))
+    try:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=axis_types, **kwargs)
+    except TypeError:  # jax < 0.5: no axis_types kwarg; meshes are Auto
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` across its rename (was ``TPUCompilerParams``).
+
+    Same kwargs either way (``dimension_semantics``, ``vmem_limit_bytes``,
+    ...); import is lazy so merely importing compat never pulls in pallas.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def _resolve_shard_map():
+    if hasattr(jax, "shard_map"):  # jax >= 0.6 public spelling
+        return jax.shard_map
+    try:
+        from jax.experimental.shard_map import shard_map as sm
+        return sm
+    except ImportError:  # pragma: no cover - very old layout
+        from jax.sharding import shard_map as sm  # type: ignore
+        return sm
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: Optional[bool] = None,
+              check_rep: Optional[bool] = None):
+    """shard_map with the ``check_vma``/``check_rep`` flag translated.
+
+    Callers pass whichever flag they like; the shim maps it onto what the
+    installed jax accepts (the two names denote the same replication check).
+    """
+    sm = _resolve_shard_map()
+    check = check_vma if check_vma is not None else check_rep
+    if check is None:
+        check = True
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check)
+    except TypeError:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check)

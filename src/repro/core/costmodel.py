@@ -51,6 +51,38 @@ def dsarray_colsum_tasks(grid_rows: int, grid_cols: int) -> int:
     return grid_cols
 
 
+def dataset_slice_tasks(n_subsets: int) -> int:
+    """Row-partitioned Datasets must gather every Subset, slice the merged
+    copy, then re-split: N gathers + 1 slice + N splits (paper Fig. 3
+    structure applied to selection)."""
+    return 2 * n_subsets + 1
+
+
+def dsarray_slice_tasks(sel_grid_rows: int, sel_grid_cols: int) -> int:
+    """Block-aligned slice: one task per SELECTED block; unselected blocks are
+    never touched (paper §5: per-block ops)."""
+    return sel_grid_rows * sel_grid_cols
+
+
+def dsarray_filter_tasks(out_grid_rows: int, grid_cols: int) -> int:
+    """Integer-array row selection: one gather task per output block row,
+    across each block column."""
+    return out_grid_rows * grid_cols
+
+
+def dsarray_rechunk_tasks(grid_rows: int, grid_cols: int) -> int:
+    """Evenly-dividing rechunk: one regroup task per source block (each
+    element moves exactly once).  The seed materialize path was 2 global
+    relayouts (O(N) twice) plus a host gather."""
+    return grid_rows * grid_cols
+
+
+def dsarray_concat_tasks(n_parts: int) -> int:
+    """Aligned concat: one grid-stack task per part (metadata + placement);
+    the Dataset append must copy every Subset of both operands."""
+    return n_parts
+
+
 def dataset_als_tasks(n_subsets: int, iters: int) -> int:
     """ALS on Datasets: transpose copy up front + per-iteration row/col solves.
     The transpose dominates (paper §5.3)."""
@@ -119,6 +151,30 @@ def tpu_summa_bytes(n: int, k: int, m: int, e: int, dn: int, dm: int) -> float:
     receives the A-panel row broadcast (n*k/dn per step, dm steps → n*k*e/dn)
     and the B-panel column broadcast (k*m*e/dm)."""
     return n * k * e / dn + k * m * e / dm
+
+
+def tpu_aligned_slice_bytes(rows: int, cols: int, e: int, dn: int, dm: int) -> float:
+    """Block-aligned slice on an unchanged mesh: a grid slice keeps every
+    selected block on its device — zero collective bytes.  (Rebalancing the
+    smaller grid across the mesh, if requested, moves at most the selected
+    bytes once: rows*cols*e/(dn*dm) per device.)"""
+    del rows, cols, e, dn, dm
+    return 0.0
+
+
+def tpu_filter_bytes(out_rows: int, m: int, e: int, dn: int, dm: int) -> float:
+    """Row gather: each output row is fetched from the device owning its
+    source block — worst case the full output crosses the mesh once."""
+    return out_rows * m * e / (dn * dm)
+
+
+def tpu_rechunk_bytes(n: int, m: int, e: int, dn: int, dm: int,
+                      dividing: bool = True) -> float:
+    """Evenly-dividing rechunk is a local regroup (0 bytes — the grid->device
+    map is refined in place); the gather fallback moves each shard once."""
+    if dividing:
+        return 0.0
+    return n * m * e / (dn * dm)
 
 
 def collective_time_s(bytes_per_device: float, link_bw: float = 50e9) -> float:

@@ -17,6 +17,25 @@ through ``jax.jit`` and shards with ``NamedSharding(P(axis0, axis1))`` on the
 grid dims.  Edge blocks are zero-padded; the **pad-is-zero invariant** is
 maintained by every public op (re-masking is a fused, nearly-free op under
 jit) so reductions and matmuls never see garbage.
+
+Structural-op complexity (paper §5 claims, as implemented by
+``core.structural``; N = n*m elements, "seed" = the old
+materialize-then-reblock path this replaced):
+
+======================  ========================  ==========================
+op                      seed path                 block-native path
+======================  ========================  ==========================
+aligned ``A[r0:r1,...]``  O(N) gather + repack      O(selected blocks) view
+unaligned slice/stride  O(N) + gather             O(out) single block gather
+row filter ``A[idx]``   O(N) + gather             O(out) single block gather
+``rechunk`` (dividing)  O(N) two global layouts   O(N) one regroup reshape
+``rechunk`` (general)   O(N) two global layouts   O(N) two block gathers
+``concat_rows`` aligned O(sum N_i) x2             O(1) block-grid stack
+======================  ========================  ==========================
+
+None of the block-native paths form a rank-2 global ``(n, m)`` tensor, so
+they compose with ``jit``/sharding without pulling the array onto one host,
+and on ``NamedSharding`` inputs the result is re-placed on the same mesh.
 """
 
 from __future__ import annotations
@@ -35,22 +54,28 @@ from repro.core.blocking import BlockGrid, ceil_div, round_up
 Number = Union[int, float]
 
 
+def _axis_mask(size: int, g: int, b: int) -> jnp.ndarray:
+    """(g, b) bool mask: True where global index g*b_idx + offset < size."""
+    gi = jax.lax.broadcasted_iota(jnp.int32, (g, b), 0)
+    bi = jax.lax.broadcasted_iota(jnp.int32, (g, b), 1)
+    return (gi * b + bi) < size
+
+
 def _valid_mask(grid: BlockGrid, stacked_grid: Tuple[int, int]) -> jnp.ndarray:
     """Boolean mask over the stacked tensor marking logically-valid elements.
 
     ``stacked_grid`` may exceed ``grid.grid`` when the grid was padded to a
     mesh multiple; the extra all-pad blocks mask out naturally because their
-    global indices exceed the logical shape.
+    global indices exceed the logical shape.  Built from two small per-axis
+    masks broadcast together (never four full-size iotas — the broadcast
+    keeps the eager cost at ~one pass over the tensor).
     """
     n, m = grid.shape
     bn, bm = grid.block_shape
     gn, gm = stacked_grid
-    shape = (gn, gm, bn, bm)
-    gi = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
-    gj = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
-    bi = jax.lax.broadcasted_iota(jnp.int32, shape, 2)
-    bj = jax.lax.broadcasted_iota(jnp.int32, shape, 3)
-    return ((gi * bn + bi) < n) & ((gj * bm + bj) < m)
+    rows = _axis_mask(n, gn, bn)                 # (gn, bn)
+    cols = _axis_mask(m, gm, bm)                 # (gm, bm)
+    return rows[:, None, :, None] & cols[None, :, None, :]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -146,6 +171,7 @@ class DsArray:
 
     # -- elementwise ----------------------------------------------------------
     def _binary(self, other, op: Callable, reverse: bool = False) -> "DsArray":
+        me = self
         if isinstance(other, DsArray):
             if other.shape != self.shape or other.block_shape != self.block_shape:
                 if other.shape != self.shape:
@@ -153,14 +179,19 @@ class DsArray:
                         f"shape mismatch {self.shape} vs {other.shape}")
                 other = other.rechunk(self.block_shape)
             if other.stacked_grid != self.stacked_grid:
-                other = other._pad_grid_to(self.stacked_grid)
+                # pad whichever operand has the smaller stacked grid (either
+                # may have been grown, e.g. by distribute()'s mesh padding)
+                common = (max(me.stacked_grid[0], other.stacked_grid[0]),
+                          max(me.stacked_grid[1], other.stacked_grid[1]))
+                me = me._pad_grid_to(common)
+                other = other._pad_grid_to(common)
             rhs = other.blocks
         elif isinstance(other, (int, float, jnp.ndarray, np.ndarray)) and jnp.ndim(other) == 0:
             rhs = other
         else:
             return NotImplemented
-        out = op(rhs, self.blocks) if reverse else op(self.blocks, rhs)
-        res = DsArray(out, BlockGrid(self.shape, self.block_shape))
+        out = op(rhs, me.blocks) if reverse else op(me.blocks, rhs)
+        res = DsArray(out, BlockGrid(me.shape, me.block_shape))
         return res._with_blocks(res._remask())
 
     def __add__(self, o):
@@ -187,6 +218,9 @@ class DsArray:
 
     def __pow__(self, o):
         return self._binary(o, jnp.power)
+
+    def __rpow__(self, o):
+        return self._binary(o, jnp.power, reverse=True)
 
     def __neg__(self):
         return self.map_blocks(jnp.negative)
@@ -235,11 +269,15 @@ class DsArray:
 
     def rechunk(self, block_shape: Tuple[int, int]) -> "DsArray":
         """Re-block to a new block size (the paper's 'arbitrary block size'
-        flexibility; Datasets cannot do this at all)."""
-        if tuple(block_shape) == self.block_shape:
-            return self
-        return from_array(self._global_padded()[: self.shape[0], : self.shape[1]],
-                          block_shape)
+        flexibility; Datasets cannot do this at all).
+
+        Block-native: evenly-dividing shapes regroup the stacked tensor in a
+        single reshape; the general case is a windowed per-block gather.  No
+        global ``(n, m)`` intermediate is formed either way (see
+        ``core.structural.rechunk``).
+        """
+        from repro.core import structural
+        return structural.rechunk(self, tuple(block_shape))
 
     def __matmul__(self, other: "DsArray") -> "DsArray":
         """Blocked matmul: C[i,j] = sum_k A[i,k] @ B[k,j].
@@ -310,7 +348,12 @@ class DsArray:
     def mean(self, axis: Optional[int] = None):
         n, m = self.shape
         denom = {None: n * m, 0: n, 1: m}[axis]
-        s = self.sum(axis)
+        me = self
+        if not jnp.issubdtype(self.dtype, jnp.floating):
+            # promote BEFORE summing: an int32/int8 accumulator overflows long
+            # before the divide would have promoted the result
+            me = self.astype(jnp.promote_types(self.dtype, jnp.float32))
+        s = me.sum(axis)
         if isinstance(s, DsArray):
             return s / float(denom)
         return s / denom
@@ -329,34 +372,14 @@ class DsArray:
 
         Supports ``A[r]``, ``A[r0:r1]``, ``A[r0:r1, c0:c1]``, integer rows/
         cols, and integer-array row selection (the paper's 'filtering').
+
+        Block-aligned slices are a pure grid slice + edge remask; unaligned
+        slices, strides and index arrays lower to one per-block gather per
+        axis (``core.structural.getitem``) — the global array is never
+        materialized and sharding survives.
         """
-        if not isinstance(key, tuple):
-            key = (key, slice(None))
-        if len(key) != 2:
-            raise IndexError("ds-arrays are 2-D")
-        rows, cols = key
-        g = self._global_padded()[: self.shape[0], : self.shape[1]]
-
-        def norm_idx(k, size):
-            if isinstance(k, slice):
-                start, stop, step = k.indices(size)
-                if step != 1:
-                    return np.arange(start, stop, step)
-                return slice(start, stop)
-            if isinstance(k, int):
-                if k < 0:
-                    k += size
-                return slice(k, k + 1)
-            return np.asarray(k)
-
-        r = norm_idx(rows, self.shape[0])
-        c = norm_idx(cols, self.shape[1])
-        sub = g[r][:, c] if not isinstance(r, slice) else g[r, c]
-        if sub.ndim == 1:
-            sub = sub.reshape(-1, 1)
-        bn = min(self.block_shape[0], max(1, sub.shape[0]))
-        bm = min(self.block_shape[1], max(1, sub.shape[1]))
-        return from_array(sub, (bn, bm))
+        from repro.core import structural
+        return structural.getitem(self, key)
 
     # -- distribution ---------------------------------------------------------
     def distribute(self, mesh: Mesh, axes: Tuple[Optional[str], Optional[str]] = ("data", "model")) -> "DsArray":
@@ -444,9 +467,11 @@ def identity_like(a: DsArray) -> DsArray:
 
 
 def concat_rows(arrays: Sequence[DsArray]) -> DsArray:
-    """Vertical concatenation (the paper Dataset ``append`` generalized)."""
-    first = arrays[0]
-    bs = first.block_shape
-    parts = [a.rechunk(bs) if a.block_shape != bs else a for a in arrays]
-    glob = jnp.concatenate([p.collect() for p in parts], axis=0)
-    return from_array(glob, bs)
+    """Vertical concatenation (the paper Dataset ``append`` generalized).
+
+    Block-native: when part row counts align to the block size the grids are
+    stacked directly (O(1) data movement); otherwise parts are re-tiled with
+    per-block gathers.  See ``core.structural.concat_rows``.
+    """
+    from repro.core import structural
+    return structural.concat_rows(arrays)

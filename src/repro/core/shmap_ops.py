@@ -30,21 +30,14 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.blocking import BlockGrid, round_up
+from repro.core.compat import shard_map
 from repro.core.dsarray import DsArray
-
-try:  # modern location
-    from jax.experimental.shard_map import shard_map
-except ImportError:  # pragma: no cover
-    from jax.sharding import shard_map  # type: ignore
+from repro.core import structural
 
 
 def _shmap(body, mesh, in_specs, out_specs):
-    try:
-        return shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                         check_vma=False)
-    except TypeError:  # older jax spelling
-        return shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                         check_rep=False)
+    return shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_vma=False)
 
 
 def _local_gemm(a: jnp.ndarray, b: jnp.ndarray,
@@ -172,3 +165,48 @@ def colsum_psum(a: DsArray, mesh: Mesh,
     out_blocks = _shmap(body, mesh, (spec,), out_spec)(a._remask())
     grid = BlockGrid((1, a.shape[1]), (1, a.block_shape[1]))
     return DsArray(out_blocks, grid)
+
+
+# ---------------------------------------------------------------------------
+# Sharding-preserving structural ops.
+#
+# The block-native structural ops in ``core.structural`` are pure jnp, so
+# under jit SPMD keeps blocks in place automatically, and eagerly they re-put
+# the result on the operand's mesh.  The wrappers below are the explicit
+# distributed entry points: they first place the operand on ``mesh`` (padding
+# the grid to mesh multiples), run the block-native op, and guarantee the
+# result carries a ``NamedSharding`` over the same axes — the SPMD analogue
+# of the paper's "slicing returns a ds-array with the same worker placement".
+# ---------------------------------------------------------------------------
+
+
+def _redistribute(out: DsArray, mesh: Mesh, axes) -> DsArray:
+    from jax.sharding import NamedSharding
+    spec = P(axes[0], axes[1], None, None)
+    dn = mesh.shape[axes[0]] if axes[0] else 1
+    dm = mesh.shape[axes[1]] if axes[1] else 1
+    gn, gm = out.stacked_grid
+    padded = out._pad_grid_to((round_up(gn, dn), round_up(gm, dm)))
+    blocks = jax.device_put(padded.blocks, NamedSharding(mesh, spec))
+    return DsArray(blocks, out.grid)
+
+
+def slice_sharded(a: DsArray, key, mesh: Mesh,
+                  axes: Tuple[str, str] = ("data", "model")) -> DsArray:
+    """``A[key]`` on a mesh: block-native selection, result resharded."""
+    a = a.distribute(mesh, axes)
+    return _redistribute(structural.getitem(a, key), mesh, axes)
+
+
+def rechunk_sharded(a: DsArray, block_shape: Tuple[int, int], mesh: Mesh,
+                    axes: Tuple[str, str] = ("data", "model")) -> DsArray:
+    """Re-block on a mesh: grid-local regroup, result resharded."""
+    a = a.distribute(mesh, axes)
+    return _redistribute(structural.rechunk(a, block_shape), mesh, axes)
+
+
+def concat_rows_sharded(arrays, mesh: Mesh,
+                        axes: Tuple[str, str] = ("data", "model")) -> DsArray:
+    """Vertical concat on a mesh: grid stack, result resharded."""
+    arrays = [a.distribute(mesh, axes) for a in arrays]
+    return _redistribute(structural.concat_rows(arrays), mesh, axes)

@@ -1,0 +1,434 @@
+"""Block-native structural ops for ds-arrays (slice / filter / rechunk / concat).
+
+The paper's complexity claims (§5) rest on structural ops being expressed
+**per block**: a slice touches only the blocks it selects, a rechunk moves
+each element once, a concat stacks block grids.  This module is the stacked-
+tensor realisation of that contract.  Every op here:
+
+* consumes and produces the ``(gn, gm, bn, bm)`` stacked block tensor —
+  **never** the ``(n, m)`` global layout (no ``collect``/``_global_padded``);
+* is a pure jax function, so it traces through ``jit`` and, on sharded
+  inputs, lets SPMD partitioning keep blocks where they live;
+* re-establishes the pad-is-zero invariant before returning;
+* when executed eagerly on a ``NamedSharding``-placed operand, re-places the
+  result with the same mesh/spec (sharding would otherwise be silently
+  dropped by eager ops).
+
+Op inventory and costs (elements touched; N = n*m global elements):
+
+====================  =========================  =======================
+op                    seed (materialize) cost     block-native cost
+====================  =========================  =======================
+aligned slice         O(N) reshape + repack      O(selected blocks) view
+unaligned slice       O(N) + gather              O(out) one gather
+row filter A[idx]     O(N) + gather              O(out) one gather
+rechunk (dividing)    O(N) x2 (two layouts)      O(N) single regroup reshape
+rechunk (general)     O(N) x2                    O(N) two block gathers
+concat (aligned)      O(sum N_i) x2              O(1) grid stack
+concat (general)      O(sum N_i) x2              O(sum N_i) block gathers
+====================  =========================  =======================
+
+The crucial difference is not only the constant: the seed path builds a
+rank-2 ``(n, m)`` intermediate (single-host memory, sharding destroyed),
+while every intermediate here keeps the block layout (rank-3/4, grid dims
+leading), which is exactly what the no-global-intermediate tests assert on
+the jaxpr.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.core.blocking import (BlockGrid, ceil_div, grid_span,
+                                 is_aligned_slice, can_regroup)
+
+
+def _mask_axes(blocks: jnp.ndarray, n: Optional[int] = None,
+               m: Optional[int] = None) -> jnp.ndarray:
+    """Zero the pad region along the given logical extents, cheaply.
+
+    Pass ``n`` to mask rows beyond it, ``m`` for columns; ``None`` skips the
+    axis (its pad is already known-zero via the invariant).  Masks are small
+    per-axis tensors broadcast into a single ``where`` — O(1) mask setup and
+    one pass over the data, vs. the full-size 4-iota mask this replaces.
+    """
+    from repro.core.dsarray import _axis_mask
+    gn, gm, bn, bm = blocks.shape
+    mask = None
+    if n is not None:
+        mask = _axis_mask(n, gn, bn)[:, None, :, None]
+    if m is not None:
+        cm = _axis_mask(m, gm, bm)[None, :, None, :]
+        mask = cm if mask is None else (mask & cm)
+    if mask is None:
+        return blocks
+    return jnp.where(mask, blocks, jnp.zeros((), blocks.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Sharding preservation
+# ---------------------------------------------------------------------------
+
+
+def preserve_sharding(out: "DsArray", ref_blocks) -> "DsArray":
+    """Re-place ``out`` with the NamedSharding of ``ref_blocks`` (eager only).
+
+    Inside ``jit`` both are tracers and SPMD propagation handles placement;
+    eagerly, jax ops drop shardings, so we put the result back on the mesh
+    the operand lived on.  Falls back to default placement when the grid no
+    longer fits the mesh.
+    """
+    if isinstance(ref_blocks, jax.core.Tracer) or isinstance(out.blocks, jax.core.Tracer):
+        return out
+    sharding = getattr(ref_blocks, "sharding", None)
+    if not isinstance(sharding, NamedSharding):
+        return out
+    try:
+        blocks = jax.device_put(out.blocks, NamedSharding(sharding.mesh, sharding.spec))
+        return type(out)(blocks, out.grid)
+    except Exception:  # grid not placeable on that mesh anymore
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Row/col gather kernels (the per-block lowering for unaligned selection)
+# ---------------------------------------------------------------------------
+
+
+def _gather_block_rows(blocks: jnp.ndarray, idx: jnp.ndarray,
+                       out_bn: int) -> jnp.ndarray:
+    """Select global rows ``idx`` from a stacked tensor as ONE ``lax.gather``.
+
+    Source row ``s`` lives at ``blocks[s // bn, :, s % bn, :]``; advanced
+    indexing with the two derived index vectors emits a single gather whose
+    output is already in block-row-major order — no ``(n, m)`` intermediate.
+    Returns ``(out_gn, gm, out_bn, bm)``; caller re-masks.
+    """
+    gn, gm, bn, bm = blocks.shape
+    p = idx.shape[0]
+    out_gn = max(1, ceil_div(p, out_bn))
+    pad = out_gn * out_bn - p
+    if pad:
+        idx = jnp.concatenate([idx, jnp.zeros((pad,), idx.dtype)])
+    src_grid = idx // bn
+    src_off = idx % bn
+    rows = blocks[src_grid, :, src_off, :]          # (out_gn*out_bn, gm, bm)
+    return rows.reshape(out_gn, out_bn, gm, bm).transpose(0, 2, 1, 3)
+
+
+def take_rows(a: "DsArray", idx, out_bn: Optional[int] = None) -> "DsArray":
+    """Integer-array row selection (the paper's 'filtering'), block-native.
+
+    ``idx`` may be a traced jnp array — the selection shape is static
+    (``len(idx)``) while the selected rows stay dynamic, so this jits.
+    """
+    idx = jnp.asarray(idx)
+    if idx.ndim != 1:
+        raise IndexError(f"row index must be 1-D, got shape {idx.shape}")
+    n, m = a.shape
+    idx = jnp.where(idx < 0, idx + n, idx).astype(jnp.int32)
+    if not isinstance(idx, jax.core.Tracer):
+        vals = np.asarray(idx)
+        if vals.size and (vals.min() < 0 or vals.max() >= n):
+            raise IndexError(f"row index out of range for {n} rows")
+    p = int(idx.shape[0])
+    bn = a.block_shape[0]
+    out_bn = out_bn or min(bn, max(1, p))
+    # gathered rows are valid source rows (col pad zero via the invariant);
+    # only the row pad introduced by tiling to out_bn needs masking
+    out = _gather_block_rows(a.blocks, idx, out_bn)
+    if out.shape[0] * out_bn > p:
+        out = _mask_axes(out, n=p)
+    grid = BlockGrid((p, m), (out_bn, a.block_shape[1]))
+    return preserve_sharding(type(a)(out, grid), a.blocks)
+
+
+def take_cols(a: "DsArray", idx, out_bm: Optional[int] = None) -> "DsArray":
+    """Column analogue of :func:`take_rows` (gather on the transposed grid)."""
+    idx = jnp.asarray(idx)
+    if idx.ndim != 1:
+        raise IndexError(f"col index must be 1-D, got shape {idx.shape}")
+    n, m = a.shape
+    idx = jnp.where(idx < 0, idx + m, idx).astype(jnp.int32)
+    if not isinstance(idx, jax.core.Tracer):
+        vals = np.asarray(idx)
+        if vals.size and (vals.min() < 0 or vals.max() >= m):
+            raise IndexError(f"col index out of range for {m} cols")
+    p = int(idx.shape[0])
+    bm = a.block_shape[1]
+    out_bm = out_bm or min(bm, max(1, p))
+    flipped = a.blocks.transpose(1, 0, 3, 2)
+    out = _gather_block_rows(flipped, idx, out_bm).transpose(1, 0, 3, 2)
+    if out.shape[1] * out_bm > p:
+        out = _mask_axes(out, m=p)
+    grid = BlockGrid((n, p), (a.block_shape[0], out_bm))
+    return preserve_sharding(type(a)(out, grid), a.blocks)
+
+
+# ---------------------------------------------------------------------------
+# Aligned slicing: pure grid slice + edge remask
+# ---------------------------------------------------------------------------
+
+
+def aligned_slice(a: "DsArray", rows: slice, cols: slice) -> "DsArray":
+    """``A[r0:r1, c0:c1]`` with r0/c0 on block boundaries and unit step.
+
+    Pure ``blocks[g0:g1, h0:h1]`` grid slice — O(selected blocks), zero data
+    movement beyond the selected blocks, then an edge remask for the (possibly
+    partial) last block row/col.
+    """
+    n, m = a.shape
+    bn, bm = a.block_shape
+    r0, r1, rs = rows.indices(n)
+    c0, c1, cs = cols.indices(m)
+    assert rs == 1 and cs == 1 and r0 % bn == 0 and c0 % bm == 0
+    g0, g1 = (0, 1) if r1 <= r0 else grid_span(r0, r1, bn)
+    h0, h1 = (0, 1) if c1 <= c0 else grid_span(c0, c1, bm)
+    out = a.blocks[g0:g1, h0:h1]
+    nr, nc = max(0, r1 - r0), max(0, c1 - c0)
+    # the edge blocks need re-masking only when the slice STOPS mid-block
+    # before the end of the data (stopping at n reuses the source pad, which
+    # is already zero); a fully aligned slice is a pure grid slice.
+    need_r = nr if (r1 % bn != 0 and r1 < n) or nr == 0 else None
+    need_c = nc if (c1 % bm != 0 and c1 < m) or nc == 0 else None
+    out = _mask_axes(out, n=need_r, m=need_c)
+    grid = BlockGrid((nr, nc), (bn, bm))
+    return preserve_sharding(type(a)(out, grid), a.blocks)
+
+
+def getitem(a: "DsArray", key) -> "DsArray":
+    """NumPy-style ``A[key]`` lowered to block-native ops (paper §4.2.3).
+
+    Aligned unit-step slices take the grid-slice path; everything else
+    (unaligned starts, strides, negative steps, int arrays, bool masks)
+    lowers to one per-block gather per affected axis.
+    """
+    if not isinstance(key, tuple):
+        key = (key, slice(None))
+    if len(key) != 2:
+        raise IndexError("ds-arrays are 2-D")
+    rows, cols = key
+
+    def classify(k, size: int, block: int):
+        """-> ("aligned", slice) | ("gather", idx)"""
+        if isinstance(k, (int, np.integer)):
+            k = int(k)
+            if k < -size or k >= size:
+                raise IndexError(f"index {k} out of range for size {size}")
+            if k < 0:
+                k += size
+            if k % block == 0:
+                return ("aligned", slice(k, k + 1))
+            return ("gather", jnp.asarray([k], jnp.int32))
+        if isinstance(k, slice):
+            if is_aligned_slice(k, size, block):
+                return ("aligned", k)
+            start, stop, step = k.indices(size)
+            return ("gather", jnp.arange(start, stop, step, dtype=jnp.int32))
+        arr = np.asarray(k) if not isinstance(k, (jnp.ndarray, jax.core.Tracer)) else k
+        if getattr(arr, "dtype", None) is not None and arr.dtype == bool:
+            arr = np.flatnonzero(np.asarray(arr))
+        return ("gather", jnp.asarray(arr))
+
+    rkind, rsel = classify(rows, a.shape[0], a.block_shape[0])
+    ckind, csel = classify(cols, a.shape[1], a.block_shape[1])
+
+    def is_full(kind, sel, size):
+        return kind == "aligned" and sel.indices(size) == (0, size, 1)
+
+    out = a
+    # grid slices first (cheapest: shrink before gathering)
+    if ((rkind == "aligned" and not is_full(rkind, rsel, a.shape[0]))
+            or (ckind == "aligned" and not is_full(ckind, csel, a.shape[1]))):
+        out = aligned_slice(out,
+                            rsel if rkind == "aligned" else slice(None),
+                            csel if ckind == "aligned" else slice(None))
+    if rkind == "gather":
+        out = take_rows(out, rsel)
+    if ckind == "gather":
+        out = take_cols(out, csel)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rechunk: grid-local regroup when block shapes divide, gather repack else
+# ---------------------------------------------------------------------------
+
+
+def _split_rows(blocks: jnp.ndarray, new_bn: int) -> jnp.ndarray:
+    gn, gm, bn, bm = blocks.shape
+    f = bn // new_bn
+    out = blocks.reshape(gn, gm, f, new_bn, bm).transpose(0, 2, 1, 3, 4)
+    return out.reshape(gn * f, gm, new_bn, bm)
+
+
+def _merge_rows(blocks: jnp.ndarray, new_bn: int) -> jnp.ndarray:
+    gn, gm, bn, bm = blocks.shape
+    f = new_bn // bn
+    pad = (-gn) % f
+    if pad:
+        blocks = jnp.pad(blocks, ((0, pad), (0, 0), (0, 0), (0, 0)))
+    gn2 = (gn + pad) // f
+    out = blocks.reshape(gn2, f, gm, bn, bm).transpose(0, 2, 1, 3, 4)
+    return out.reshape(gn2, gm, new_bn, bm)
+
+
+def _regroup_rows(blocks: jnp.ndarray, new_bn: int) -> jnp.ndarray:
+    bn = blocks.shape[2]
+    if new_bn == bn:
+        return blocks
+    return _split_rows(blocks, new_bn) if bn % new_bn == 0 else _merge_rows(blocks, new_bn)
+
+
+def _split_cols(blocks: jnp.ndarray, new_bm: int) -> jnp.ndarray:
+    gn, gm, bn, bm = blocks.shape
+    f = bm // new_bm
+    out = blocks.reshape(gn, gm, bn, f, new_bm).transpose(0, 1, 3, 2, 4)
+    return out.reshape(gn, gm * f, bn, new_bm)
+
+
+def _merge_cols(blocks: jnp.ndarray, new_bm: int) -> jnp.ndarray:
+    gn, gm, bn, bm = blocks.shape
+    f = new_bm // bm
+    pad = (-gm) % f
+    if pad:
+        blocks = jnp.pad(blocks, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    gm2 = (gm + pad) // f
+    out = blocks.reshape(gn, gm2, f, bn, bm).transpose(0, 1, 3, 2, 4)
+    return out.reshape(gn, gm2, bn, new_bm)
+
+
+def _regroup_cols(blocks: jnp.ndarray, new_bm: int) -> jnp.ndarray:
+    bm = blocks.shape[3]
+    if new_bm == bm:
+        return blocks
+    return _split_cols(blocks, new_bm) if bm % new_bm == 0 else _merge_cols(blocks, new_bm)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _rechunk_blocks(blocks: jnp.ndarray, shape: Tuple[int, int],
+                    new_bs: Tuple[int, int]) -> jnp.ndarray:
+    """The pure regroup/repack math, jitted so the reshape→transpose→reshape
+    chain (or the gather fallback) dispatches as one fused kernel even when
+    ``rechunk`` is called eagerly — repeated calls hit the jit cache."""
+    n, m = shape
+    bn, bm = blocks.shape[2:]
+    nbn, nbm = new_bs
+    if can_regroup((bn, bm), new_bs):
+        # regrouping preserves the padded-global coordinate of every element,
+        # so the pad-is-zero invariant carries over — no remask needed
+        blocks = _regroup_rows(blocks, nbn)
+        return _regroup_cols(blocks, nbm)
+    # windowed repack: one row gather + one col gather in block layout;
+    # tiling pad slots replicate row/col 0 and must be re-masked
+    need_r = need_c = None
+    if nbn != bn:
+        blocks = _gather_block_rows(blocks, jnp.arange(max(1, n), dtype=jnp.int32), nbn)
+        need_r = n if blocks.shape[0] * nbn > n else None
+    if nbm != bm:
+        flipped = blocks.transpose(1, 0, 3, 2)
+        blocks = _gather_block_rows(
+            flipped, jnp.arange(max(1, m), dtype=jnp.int32), nbm
+        ).transpose(1, 0, 3, 2)
+        need_c = m if blocks.shape[1] * nbm > m else None
+    return _mask_axes(blocks, n=need_r, m=need_c)
+
+
+def rechunk(a: "DsArray", block_shape: Tuple[int, int]) -> "DsArray":
+    """Re-block to a new block size without materializing the global array.
+
+    Evenly-dividing cases (either direction, per axis independently) are a
+    reshape/transpose **regroup** of the stacked tensor: the padded global
+    coordinate of every element is invariant under splitting a block into
+    tiles or fusing a tile neighbourhood, so the regroup is exact and moves
+    each element once.  Non-dividing block shapes fall back to the windowed
+    per-block gather used for unaligned slicing (still no rank-2 global
+    intermediate).
+    """
+    block_shape = (int(block_shape[0]), int(block_shape[1]))
+    if block_shape == a.block_shape:
+        return a
+    grid = BlockGrid(a.shape, block_shape)   # validates block_shape > 0
+    blocks = _rechunk_blocks(a.blocks, a.shape, block_shape)
+    return preserve_sharding(type(a)(blocks, grid), a.blocks)
+
+
+# ---------------------------------------------------------------------------
+# Concatenation
+# ---------------------------------------------------------------------------
+
+
+def concat_rows(arrays: Sequence["DsArray"]) -> "DsArray":
+    """Vertical concat, block-native.
+
+    When every part (after rechunking to a common block shape) has a row
+    count divisible by ``bn`` — except possibly the last — the result is a
+    plain stack of block grids: O(1) ops, no element is re-addressed.  The
+    general case gathers each part's valid rows in block layout and re-tiles.
+    """
+    arrays = list(arrays)
+    if not arrays:
+        raise ValueError("concat_rows of empty sequence")
+    m = arrays[0].shape[1]
+    for a in arrays[1:]:
+        if a.shape[1] != m:
+            raise ValueError(
+                f"concat_rows column mismatch: {a.shape[1]} != {m}")
+    bs = arrays[0].block_shape
+    parts = [rechunk(a, bs) if a.block_shape != bs else a for a in arrays]
+    nonempty = [p for p in parts if p.shape[0] > 0]
+    parts = nonempty or parts[:1]
+    bn, bm = bs
+    total = sum(p.shape[0] for p in parts)
+    grid = BlockGrid((total, m), bs)
+    gm = max(1, ceil_div(m, bm))
+
+    def trimmed(p: "DsArray") -> jnp.ndarray:
+        """Valid grid rows only, stacked gm normalized (drop mesh padding)."""
+        return p.blocks[: max(1, ceil_div(p.shape[0], bn)), :gm]
+
+    if all(p.shape[0] % bn == 0 for p in parts[:-1]):
+        # interior parts contribute only full blocks, the final part keeps its
+        # own (already-zero) pad: a pure grid stack, invariant preserved
+        blocks = jnp.concatenate([trimmed(p) for p in parts], axis=0)
+    else:
+        rows = []
+        for p in parts:
+            b = trimmed(p)
+            idx = jnp.arange(p.shape[0], dtype=jnp.int32)
+            rows.append(b[idx // bn, :, idx % bn, :])    # (n_i, gm, bm)
+        flat = jnp.concatenate(rows, axis=0)
+        out_gn = max(1, ceil_div(total, bn))
+        pad = out_gn * bn - total
+        if pad:
+            flat = jnp.pad(flat, ((0, pad), (0, 0), (0, 0)))
+        blocks = flat.reshape(out_gn, bn, gm, bm).transpose(0, 2, 1, 3)
+    return preserve_sharding(type(arrays[0])(blocks, grid),
+                             arrays[0].blocks)
+
+
+# ---------------------------------------------------------------------------
+# Block-native Gram matrix (used by ALS instead of collect())
+# ---------------------------------------------------------------------------
+
+
+def gram(a: "DsArray") -> jnp.ndarray:
+    """``AᵀA`` as a replicated dense ``(m, m)`` matrix, computed per block.
+
+    One einsum over the stacked tensor — partial Gram per block row, summed
+    over the grid (a psum over ``data`` when sharded).  Never forms the
+    ``(n, m)`` global layout; intended for skinny operands (m = latent
+    factors) where the Gram is small and replicated.
+    """
+    b = a.blocks  # pad-is-zero invariant: pad rows/cols contribute nothing
+    g = jnp.einsum("ijab,ikac->jbkc", b, b,
+                   preferred_element_type=jnp.float32)
+    gm, bm = b.shape[1], b.shape[3]
+    m = a.shape[1]
+    return g.reshape(gm * bm, gm * bm)[:m, :m].astype(a.dtype)

@@ -5,6 +5,9 @@ Multi-pod:  (2, 16, 16) = ("pod", "data", "model") — 512 chips.
 
 Functions, not module constants: importing this module never touches jax
 device state (required so smoke tests see 1 CPU device).
+
+Mesh construction goes through ``repro.core.compat.make_mesh`` so the same
+call works on jax versions with and without ``axis_types``.
 """
 
 from __future__ import annotations
@@ -13,13 +16,13 @@ from typing import Tuple
 
 import jax
 
+from repro.core.compat import AxisType, make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def dp_axes(multi_pod: bool = False) -> Tuple[str, ...]:
@@ -32,5 +35,4 @@ def make_host_mesh(shape: Tuple[int, ...] = None, axes=None):
     if shape is None:
         shape = (1, n) if n > 1 else (1, 1)
         axes = ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))

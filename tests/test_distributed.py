@@ -33,10 +33,10 @@ def test_shmap_collective_ops():
     out = run_subprocess("""
         import numpy as np, jax
         from repro.core import from_array
+        from repro.core.compat import make_mesh
         from repro.core.shmap_ops import (summa_matmul, cannon_matmul,
                                           transpose_pp, colsum_psum)
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 2), ("data", "model"))
         rng = np.random.default_rng(0)
         x = rng.normal(size=(32, 48)).astype(np.float32)
         y = rng.normal(size=(48, 24)).astype(np.float32)
@@ -56,10 +56,9 @@ def test_compressed_psum_unbiased():
     out = run_subprocess("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        from repro.core.compat import make_mesh, shard_map
         from repro.distributed import compressed_psum
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("pod",))
         x = np.random.default_rng(0).normal(size=(4, 64)).astype(np.float32)
 
         def body(xs, key):
@@ -106,8 +105,8 @@ def test_sharded_train_step_runs_and_matches():
         # single-device reference
         _, m_ref = make_train_step(model, opt)(state, batch)
 
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.core.compat import make_mesh
+        mesh = make_mesh((2, 2), ("data", "model"))
         env = cm.ShardEnv(mesh=mesh, dp=("data",), tp="model")
         ps = shlib.param_shardings(state.params, mesh)
         osh = shlib.opt_state_shardings(state.opt_state, state.params, mesh)
@@ -132,14 +131,13 @@ def test_elastic_checkpoint_reshard():
         import tempfile, numpy as np, jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.checkpoint import save, restore
-        mesh4 = jax.make_mesh((4,), ("data",),
-                              axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.core.compat import make_mesh
+        mesh4 = make_mesh((4,), ("data",))
         x = jnp.arange(64.0).reshape(8, 8)
         xs = jax.device_put(x, NamedSharding(mesh4, P("data", None)))
         with tempfile.TemporaryDirectory() as d:
             save(d, 0, {"x": xs})
-            mesh2 = jax.make_mesh((2,), ("data",), devices=jax.devices()[:2],
-                                  axis_types=(jax.sharding.AxisType.Auto,))
+            mesh2 = make_mesh((2,), ("data",), devices=jax.devices()[:2])
             sh = {"x": NamedSharding(mesh2, P(None, "data"))}
             out = restore(d, 0, {"x": jnp.zeros((8, 8))}, sh)
             assert np.allclose(np.asarray(out["x"]), np.asarray(x))
@@ -151,9 +149,44 @@ def test_elastic_checkpoint_reshard():
 
 def test_sharding_rules_sanitize():
     from jax.sharding import PartitionSpec as P
-    import jax
+    from repro.core.compat import make_mesh
     from repro.distributed.sharding import sanitize_spec
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
     # 7 not divisible by any mesh>1 — with size-1 mesh everything divides
     assert sanitize_spec(P("model", None), (7, 3), mesh) == P("model", None)
+
+
+def test_structural_ops_preserve_sharding():
+    """Block-native slice/rechunk/concat keep blocks on the mesh they lived on
+    (the seed materialize path silently collapsed to single-device)."""
+    out = run_subprocess("""
+        import numpy as np, jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import concat_rows, from_array
+        from repro.core.compat import make_mesh
+
+        mesh = make_mesh((2, 2), ("data", "model"))
+        x = np.random.default_rng(0).normal(size=(64, 64)).astype(np.float32)
+        A = from_array(x, (8, 8)).distribute(mesh)
+        want = NamedSharding(mesh, P("data", "model", None, None))
+        assert A.blocks.sharding == want
+
+        s = A[16:48, 0:32]                       # block-aligned grid slice
+        assert np.allclose(np.asarray(s.collect()), x[16:48, 0:32])
+        assert s.blocks.sharding == want, s.blocks.sharding
+
+        r = A.rechunk((4, 4))                    # evenly-dividing regroup
+        assert np.allclose(np.asarray(r.collect()), x)
+        assert r.blocks.sharding == want, r.blocks.sharding
+
+        c = concat_rows([A, A])                  # grid stack
+        assert np.allclose(np.asarray(c.collect()),
+                           np.concatenate([x, x], axis=0))
+        assert c.blocks.sharding == want, c.blocks.sharding
+
+        f = A[np.arange(1, 64, 2)]               # gather filtering
+        assert np.allclose(np.asarray(f.collect()), x[1::2])
+        assert f.blocks.sharding == want, f.blocks.sharding
+        print("OK")
+    """, devices=4)
+    assert "OK" in out

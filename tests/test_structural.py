@@ -1,0 +1,249 @@
+"""Block-native structural ops: NumPy-oracle equality + no-global-intermediate.
+
+Two families of assertions:
+
+* ``collect()`` equality with the NumPy reference for every selection kind
+  (aligned/unaligned slices, negative steps, integer-array filtering,
+  rechunk up/down, concat of mixed block shapes);
+* jaxpr inspection: the block-aligned slice, evenly-dividing rechunk and
+  aligned concat must not create ANY rank-2 intermediate of global extent
+  (the seed materialize path created exactly that), and the gather paths
+  must not either — their intermediates stay in block layout.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BlockGrid, DsArray, concat_rows, from_array,
+                        structural)
+
+RNG = np.random.default_rng(7)
+
+
+def mk(n, m, bn, bm):
+    x = (RNG.normal(size=(n, m)) + 1.0).astype(np.float32)  # nonzero data
+    return x, from_array(x, (bn, bm))
+
+
+def ref2d(ref, rows_key):
+    if np.isscalar(ref) or ref.ndim == 0:
+        return np.asarray(ref).reshape(1, 1)
+    if ref.ndim == 1:
+        return ref.reshape(1, -1) if isinstance(rows_key, int) else ref.reshape(-1, 1)
+    return ref
+
+
+def assert_pad_zero(a: DsArray):
+    """The pad-is-zero invariant must survive every structural op."""
+    gn, gm, bn, bm = a.blocks.shape
+    g = np.asarray(a.blocks).transpose(0, 2, 1, 3).reshape(gn * bn, gm * bm)
+    n, m = a.shape
+    assert np.all(g[n:] == 0) and np.all(g[:, m:] == 0)
+
+
+# ---------------------------------------------------------------------------
+# Oracle equality
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m,bn,bm", [(17, 13, 4, 3), (32, 32, 8, 8),
+                                       (1, 1, 3, 3), (40, 7, 12, 12),
+                                       (9, 23, 2, 5)])
+def test_slicing_matches_numpy(n, m, bn, bm):
+    x, a = mk(n, m, bn, bm)
+    keys = [
+        (slice(0, max(1, n // 2)), slice(0, max(1, m // 2))),   # aligned start
+        (slice(bn % n or 0, n), slice(0, m)),                    # aligned rows
+        (slice(1, n), slice(1, m)),                              # unaligned
+        (slice(0, n, 2), slice(None)),                           # stride
+        (slice(None, None, -1), slice(None, None, -1)),          # negative step
+        (slice(n, None, -2), slice(None)),
+        (slice(3, 1), slice(None)),                              # empty
+        (0, slice(None)),
+        (slice(None), m - 1),
+        (-1, -1),
+    ]
+    for rows, cols in keys:
+        got = np.asarray(a[rows, cols].collect())
+        want = ref2d(x[rows, cols], rows)
+        assert got.shape == want.shape, (rows, cols)
+        np.testing.assert_allclose(got, want, err_msg=str((rows, cols)))
+        assert_pad_zero(a[rows, cols])
+
+
+@pytest.mark.parametrize("n,m,bn,bm", [(20, 11, 6, 4), (33, 8, 8, 8)])
+def test_integer_array_filtering(n, m, bn, bm):
+    x, a = mk(n, m, bn, bm)
+    for idx in [list(range(0, n, 2)), [0, 0, n - 1], [-1, -n, 3 % n],
+                RNG.integers(0, n, size=2 * n)]:
+        got = np.asarray(a[idx].collect())
+        np.testing.assert_allclose(got, x[np.asarray(idx)])
+    mask = RNG.random(n) > 0.4
+    np.testing.assert_allclose(np.asarray(a[mask].collect()), x[mask])
+    with pytest.raises(IndexError):
+        a[[n]]
+    # column selection too
+    cidx = [m - 1] + list(range(0, m, 2))
+    np.testing.assert_allclose(np.asarray(a[:, cidx].collect()), x[:, cidx])
+
+
+def test_filtering_traces_through_jit():
+    x, a = mk(24, 6, 5, 5)
+
+    @jax.jit
+    def sel(a, idx):
+        return a[idx]
+
+    idx = jnp.asarray([3, 1, 21, 7])
+    np.testing.assert_allclose(np.asarray(sel(a, idx).collect()),
+                               x[np.asarray(idx)])
+
+
+@pytest.mark.parametrize("n,m,bn,bm", [(17, 13, 4, 3), (24, 24, 8, 8),
+                                       (5, 9, 2, 2)])
+def test_rechunk_up_down(n, m, bn, bm):
+    x, a = mk(n, m, bn, bm)
+    cases = [(1, 1), (2, 2), (bn * 2, bm * 3),      # merge (up)
+             (max(1, bn // 2), max(1, bm // 3)),    # split (down)
+             (bn * 2, max(1, bm // 2)),             # mixed
+             (5, 3), (n, m), (bn, 7)]               # incl. non-dividing
+    for nbs in cases:
+        r = a.rechunk(nbs)
+        assert r.block_shape == tuple(nbs)
+        np.testing.assert_allclose(np.asarray(r.collect()), x,
+                                   err_msg=str(nbs))
+        assert_pad_zero(r)
+    assert a.rechunk((bn, bm)) is a
+
+
+def test_concat_mixed_block_shapes():
+    x1, a1 = mk(16, 10, 4, 5)       # rows divisible by 4 -> grid stack
+    x2, a2 = mk(8, 10, 3, 10)       # different blocks -> rechunk first
+    x3, a3 = mk(5, 10, 4, 5)        # ragged tail
+    got = np.asarray(concat_rows([a1, a2, a3]).collect())
+    np.testing.assert_allclose(got, np.concatenate([x1, x2, x3], axis=0))
+    assert_pad_zero(concat_rows([a1, a2, a3]))
+    # misaligned interior part -> gather fallback
+    got2 = np.asarray(concat_rows([a3, a1]).collect())
+    np.testing.assert_allclose(got2, np.concatenate([x3, x1], axis=0))
+    with pytest.raises(ValueError):
+        concat_rows([a1, mk(4, 9, 2, 2)[1]])
+    with pytest.raises(ValueError):
+        concat_rows([])
+
+
+def test_gram_matches_dense():
+    x, a = mk(37, 6, 8, 4)
+    np.testing.assert_allclose(np.asarray(structural.gram(a)), x.T @ x,
+                               rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# No-global-intermediate: inspect every aval in the jaxpr
+# ---------------------------------------------------------------------------
+
+
+def rank2_global_intermediates(jaxpr, n, m, pn, pm):
+    """All rank-2 eqn outputs whose extent reaches the global array size.
+
+    The seed path materialized ``(pn, pm)``/``(n, m)`` tensors; block-native
+    ops may only produce tensors that keep grid dims (rank 3/4) or small
+    per-axis masks.
+    """
+    bad = []
+
+    def visit(jx):
+        for eqn in jx.eqns:
+            for v in eqn.outvars:
+                shape = tuple(getattr(v.aval, "shape", ()))
+                if len(shape) == 2 and shape[0] >= min(n, pn) and \
+                        shape[1] >= min(m, pm):
+                    bad.append((eqn.primitive.name, shape))
+            for sub in eqn.params.values():
+                if hasattr(sub, "jaxpr"):
+                    visit(sub.jaxpr)
+        return bad
+
+    return visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+
+
+def _check_no_global(fn, a: DsArray):
+    jaxpr = jax.make_jaxpr(fn)(a.blocks)
+    n, m = a.shape
+    gn, gm, bn, bm = a.blocks.shape
+    bad = rank2_global_intermediates(jaxpr, n, m, gn * bn, gm * bm)
+    assert not bad, f"global-shape intermediates produced: {bad}"
+
+
+def test_aligned_slice_no_global_intermediate():
+    _, a = mk(64, 48, 8, 8)
+    _check_no_global(lambda b: DsArray(b, a.grid)[8:32, 8:24].blocks, a)
+    # ... and the HLO text contains no global-extent constant/copy either
+    hlo = jax.jit(lambda b: DsArray(b, a.grid)[8:32, 8:24].blocks) \
+        .lower(a.blocks).as_text()
+    assert "f32[64,48]" not in hlo
+
+
+def test_unaligned_slice_no_global_intermediate():
+    _, a = mk(64, 48, 8, 8)
+    _check_no_global(lambda b: DsArray(b, a.grid)[3:33, 5:21].blocks, a)
+
+
+def test_filter_no_global_intermediate():
+    _, a = mk(64, 48, 8, 8)
+    idx = jnp.asarray(np.arange(1, 64, 2))
+    _check_no_global(lambda b: DsArray(b, a.grid)[idx].blocks, a)
+
+
+def test_rechunk_no_global_intermediate():
+    _, a = mk(64, 48, 8, 8)
+    _check_no_global(lambda b: DsArray(b, a.grid).rechunk((4, 4)).blocks, a)
+    _check_no_global(lambda b: DsArray(b, a.grid).rechunk((16, 24)).blocks, a)
+    # gather fallback too (non-dividing)
+    _check_no_global(lambda b: DsArray(b, a.grid).rechunk((5, 7)).blocks, a)
+
+
+def test_concat_no_global_intermediate():
+    _, a = mk(64, 48, 8, 8)
+
+    def cat(b):
+        da = DsArray(b, a.grid)
+        return structural.concat_rows([da, da]).blocks
+
+    jaxpr = jax.make_jaxpr(cat)(a.blocks)
+    bad = rank2_global_intermediates(jaxpr, 128, 48, 128, 48)
+    assert not bad, bad
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: operator/dtype fixes
+# ---------------------------------------------------------------------------
+
+
+def test_rpow():
+    x, a = mk(7, 5, 3, 2)
+    np.testing.assert_allclose(np.asarray((2.0 ** a).collect()), 2.0 ** x,
+                               rtol=1e-5)
+
+
+def test_mean_integer_dtype_promotes():
+    big = np.full((300, 300), 10 ** 5, np.int32)   # int32 sum would overflow
+    a = from_array(big, (64, 64))
+    assert jnp.issubdtype(a.dtype, jnp.integer)
+    got = float(a.mean())
+    assert abs(got - 1e5) / 1e5 < 1e-3
+    m0 = a.mean(axis=0)
+    assert jnp.issubdtype(m0.dtype, jnp.floating)
+    np.testing.assert_allclose(np.asarray(m0.collect()),
+                               np.full((1, 300), 1e5), rtol=1e-3)
+
+
+def test_binary_pads_smaller_operand():
+    x, a = mk(10, 10, 3, 3)
+    grown = a._pad_grid_to((6, 6))
+    for lhs, rhs in [(a, grown), (grown, a)]:
+        out = lhs + rhs
+        np.testing.assert_allclose(np.asarray(out.collect()), 2 * x,
+                                   rtol=1e-6)
