@@ -2,24 +2,68 @@
 
 The paper's conclusions call out matmul as the op that makes dislib 'a
 distributed NumPy'; on TPU the schedule choice (GSPMD einsum vs explicit
-SUMMA vs Cannon) decides the collective pattern.  This bench reports the
-analytic per-device collective bytes per schedule at pod scale and measures
-small-scale correctness timing (single device).
+SUMMA vs Cannon) decides the collective pattern and the local-GEMM backend
+(stacked einsum vs the fused Pallas kernel) decides the HBM traffic.  This
+bench reports the analytic per-device collective bytes per schedule at pod
+scale and measures the einsum-vs-``stacked_matmul`` local GEMM at 1024²,
+2048² and 4096² (Pallas runs compiled on TPU, interpret mode elsewhere).
+
+``run()`` also fills ``JSON_RECORDS`` — one dict per measured GEMM:
+``{"op", "size", "us_per_call", "backend"}`` — which ``benchmarks/run.py``
+dumps to ``BENCH_matmul.json`` so the perf trajectory is machine-trackable
+across PRs.
 """
 
 from __future__ import annotations
 
-import time
-from typing import List
+import os
+from typing import Dict, List
 
 import jax
 import numpy as np
 
 from benchmarks.common import Row, time_call
 from repro.core import costmodel, from_array
+from repro.kernels.matmul.ops import local_matmul
+
+# filled by run(); dumped by benchmarks/run.py as BENCH_matmul.json
+JSON_RECORDS: List[Dict] = []
+
+
+def _record(op: str, size: int, us: float, backend: str) -> None:
+    JSON_RECORDS.append({"op": op, "size": size, "us_per_call": us,
+                         "backend": backend})
+
+
+def _gemm_rows(size: int, block: int, iters: int) -> List[Row]:
+    """Measured einsum vs stacked Pallas kernel on the same block tensors."""
+    rows: List[Row] = []
+    rng = np.random.default_rng(size)
+    x = rng.normal(size=(size, size)).astype(np.float32)
+    y = rng.normal(size=(size, size)).astype(np.float32)
+    a = from_array(x, (block, block)).blocks
+    b = from_array(y, (block, block)).blocks
+    flops = 2.0 * size ** 3
+
+    pallas_backend = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    e = jax.jit(lambda p, q: local_matmul(p, q, backend="einsum"))
+    k = jax.jit(lambda p, q: local_matmul(p, q, backend=pallas_backend))
+    out_e, out_k = e(a, b), k(a, b)      # doubles as the jit warmup
+    ok = np.allclose(np.asarray(out_e), np.asarray(out_k), atol=1e-2)
+    t_e = time_call(lambda: e(a, b), warmup=0, iters=iters)
+    t_k = time_call(lambda: k(a, b), warmup=0, iters=iters)
+    _record("gemm_einsum", size, t_e, "einsum")
+    _record("gemm_stacked", size, t_k, pallas_backend)
+    rows.append((f"matmul/measured/einsum_{size}", t_e,
+                 f"gflops={flops / t_e / 1e3:.1f}"))
+    rows.append((f"matmul/measured/stacked_{size}", t_k,
+                 f"gflops={flops / t_k / 1e3:.1f};backend={pallas_backend};"
+                 f"allclose={ok};vs_einsum={t_e / t_k:.2f}x"))
+    return rows
 
 
 def run() -> List[Row]:
+    JSON_RECORDS.clear()
     rows: List[Row] = []
     rng = np.random.default_rng(0)
     x = rng.normal(size=(1024, 1024)).astype(np.float32)
@@ -30,8 +74,28 @@ def run() -> List[Row]:
     t = time_call(lambda: f(a, b).blocks)
     out = np.asarray(f(a, b).collect())
     ok = np.allclose(out, x @ y, atol=1e-2)
+    _record("dsarray_matmul", 1024, t, "auto")
     rows.append(("matmul/measured/blocked_1dev", t,
                  f"allclose={ok};flops={2 * 1024**3:.2e}"))
+
+    # local-GEMM backend comparison: 2048² always; 4096² by default only on
+    # TPU (a 4096² interpret-mode GEMM takes ~20 s/call on CPU) — override
+    # either way with REPRO_BENCH_MAX_GEMM
+    default_max = "4096" if jax.default_backend() == "tpu" else "2048"
+    max_gemm = int(os.environ.get("REPRO_BENCH_MAX_GEMM", default_max))
+    for size, iters in ((2048, 3), (4096, 1)):
+        if size <= max_gemm:
+            rows.extend(_gemm_rows(size, 512, iters))
+
+    # fused-vs-loop HBM law for the 4096² local GEMM (what the fused kernel
+    # deletes: (2*gk-1)x C-partial round-trips)
+    gk = 4096 // 512
+    fused = costmodel.stacked_gemm_hbm_bytes(gk, gk, gk, 512, 512, 512, 4)
+    loop = costmodel.stacked_gemm_hbm_bytes(gk, gk, gk, 512, 512, 512, 4,
+                                            fused=False)
+    rows.append(("matmul/model/stacked_hbm_bytes", 0.0,
+                 f"fused={fused:.3e}B;loop={loop:.3e}B;saved={loop / fused:.2f}x;"
+                 f"launches={costmodel.gemm_kernel_launches(gk, False)}->1"))
 
     # pod-scale analytic bytes per device (16x16 mesh, bf16)
     n = k = m = 46080

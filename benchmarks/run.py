@@ -1,11 +1,16 @@
 """Benchmark driver — one section per paper figure (+ beyond-paper tables).
 
-Prints ``name,us_per_call,derived`` CSV.  Roofline tables come from the
-dry-run artifacts (see ``benchmarks/report_roofline.py``), not from here,
-since they require the 512-device lowering.
+Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_matmul.json``
+(one record per measured GEMM: op, size, us_per_call, backend) next to the
+CSV so the matmul perf trajectory is machine-trackable across PRs.  Roofline
+tables come from the dry-run artifacts (see ``benchmarks/report_roofline.py``),
+not from here, since they require the 512-device lowering.
 """
 
 from __future__ import annotations
+
+import json
+import os
 
 
 def main() -> None:
@@ -17,6 +22,11 @@ def main() -> None:
     for mod in (bench_transpose, bench_als, bench_shuffle, bench_slicing,
                 bench_kmeans, bench_matmul):
         emit(mod.run())
+
+    out = os.environ.get("REPRO_BENCH_JSON", "BENCH_matmul.json")
+    with open(out, "w") as f:
+        json.dump(bench_matmul.JSON_RECORDS, f, indent=2)
+    print(f"# wrote {out} ({len(bench_matmul.JSON_RECORDS)} records)")
 
 
 if __name__ == "__main__":

@@ -157,6 +157,7 @@ class KMeans:
         return (gi * bn + bi) < x.shape[0]
 
     def fit(self, x: DsArray) -> "KMeans":
+        x = x.ensure_zero_pad()   # the einsums below read raw blocks
         n, m = x.shape
         row_valid = self._row_valid(x)
         # block-native k-means++ init (k D² passes, each one fused op over the
@@ -174,6 +175,7 @@ class KMeans:
         returns a NEW distributed array instead of mutating the input)."""
         if self.centers_ is None:
             raise RuntimeError("call fit first")
+        x = x.ensure_zero_pad()
         gn, gm, bn, bm = x.blocks.shape
         m_pad = gm * bm
         centers = jnp.pad(self.centers_, ((0, 0), (0, m_pad - self.centers_.shape[1])))
@@ -184,6 +186,7 @@ class KMeans:
 
     def score(self, x: DsArray) -> float:
         """Negative inertia (sum of squared distances to nearest center)."""
+        x = x.ensure_zero_pad()
         gn, gm, bn, bm = x.blocks.shape
         m_pad = gm * bm
         centers = jnp.pad(self.centers_, ((0, 0), (0, m_pad - self.centers_.shape[1])))

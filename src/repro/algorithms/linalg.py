@@ -7,25 +7,53 @@ decomposition side:
 
 * ``pca``        — top-k principal components by subspace (block power)
   iteration: the data matrix is touched ONLY through ds-array matmuls
-  (Gram-vector products), so every pass is block-parallel / SUMMA-ready.
+  (Gram-vector products) and a block-native row broadcast, so every pass is
+  block-parallel / SUMMA-ready and the (n, m) data never materializes as a
+  global rank-2 tensor or leaves the devices.
 * ``frobenius``  — blocked norm.
-* ``tsqr``       — tall-skinny QR: per-block-row local QRs + a reduction
-  tree over R factors (the paper's Fig. 3 pattern applied to factorization).
+* ``tsqr``       — tall-skinny QR: a vmapped, device-resident local QR per
+  block-row + a reduction tree over R factors (the paper's Fig. 3 pattern
+  applied to factorization).
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dsarray import DsArray, from_array
+from repro.core.blocking import BlockGrid, ceil_div
+from repro.core.dsarray import DsArray, PAD_ZERO, from_array
 
 
 def frobenius(a: DsArray) -> float:
     return float(jnp.sqrt((a * a).sum()))
+
+
+def _broadcast_rows(row: DsArray, n: int, bn: Optional[int] = None) -> DsArray:
+    """(1, m) -> (n, m) ds-array with the row repeated, block-natively.
+
+    The seed path did ``collect()`` + ``from_array`` — a global (n, m)
+    re-block of the broadcast, the exact O(n·m) materialization anti-pattern
+    PR 1 removed from k-means/ALS.  Here the (1, bm) row tile is broadcast
+    per block straight into the stacked layout (and sharding survives under
+    jit); only the pad rows of the last block row need masking.
+    """
+    if row.shape[0] != 1:
+        raise ValueError(f"_broadcast_rows wants a (1, m) row, got {row.shape}")
+    row = row.ensure_zero_pad()
+    m = row.shape[1]
+    bm = row.block_shape[1]
+    bn = bn or min(max(1, n), 512)
+    gn = max(1, ceil_div(n, bn))
+    tile = row.blocks[:1]                          # (1, gm, 1, bm)
+    blocks = jnp.broadcast_to(tile, (gn, tile.shape[1], bn, bm))
+    if gn * bn > n:                                # zero the broadcast pad rows
+        from repro.core.structural import _mask_axes
+        blocks = _mask_axes(blocks, n=n)
+    return DsArray(blocks, BlockGrid((n, m), (bn, bm)), PAD_ZERO)
 
 
 def pca(x: DsArray, n_components: int, n_iter: int = 30, seed: int = 0
@@ -33,60 +61,69 @@ def pca(x: DsArray, n_components: int, n_iter: int = 30, seed: int = 0
     """Top-k PCA of (n_samples × n_features) ds-array.
 
     Returns (components (k, m), explained_variance (k,)).  Centers the data
-    via the ds-array mean (paper Fig. 5 column reduction), then runs
-    orthogonal (power) iteration on the Gram operator — only ds-array
-    matmuls touch the distributed data.
+    via the ds-array mean (paper Fig. 5 column reduction) subtracted through
+    a block-native row broadcast, then runs orthogonal (power) iteration on
+    the Gram operator.  The whole iteration body — two ds-array matmuls plus
+    the (m, k) QR — is one jitted function, so the loop stays on device and
+    the only host round-trip per call is the loop counter.
     """
     n, m = x.shape
     mean = x.mean(axis=0)                         # (1, m) ds-array
-    xc = x - _broadcast_rows(mean, n)
+    xc = x - _broadcast_rows(mean, n, x.block_shape[0])
+    bq = (x.block_shape[1], n_components)
+
+    @jax.jit
+    def step(xc: DsArray, q: jnp.ndarray) -> jnp.ndarray:
+        y = xc.transpose() @ (xc @ from_array(q, bq))   # (m, k) ds-array
+        return jnp.linalg.qr(y.collect())[0]            # (m, k): small, local
+
     q = jnp.linalg.qr(
         jax.random.normal(jax.random.PRNGKey(seed), (m, n_components)))[0]
-    bq = (x.block_shape[1], n_components)
     for _ in range(n_iter):
-        y = xc.transpose() @ (xc @ from_array(q, bq))   # (m, k) ds-array
-        q, _ = jnp.linalg.qr(y.collect())
+        q = step(xc, q)
     proj = xc @ from_array(q, bq)                 # (n, k)
     var = jnp.asarray((proj * proj).sum(axis=0).collect()).ravel() / (n - 1)
     order = jnp.argsort(-var)
     return q.T[order], var[order]
 
 
-def _broadcast_rows(row: DsArray, n: int) -> DsArray:
-    """(1, m) -> (n, m) ds-array with the row repeated (block-local)."""
-    g = row.collect()
-    return from_array(jnp.broadcast_to(g, (n, g.shape[1])), (
-        max(1, n // max(1, row.stacked_grid[1])), row.block_shape[1]))
-
-
 def tsqr(x: DsArray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Tall-skinny QR: local QR per block-row + an R-merge reduction tree.
 
-    Requires m <= block rows; returns (q (n, m) dense, r (m, m)).
+    The leaf level is a single ``jax.vmap(jnp.linalg.qr)`` over the stacked
+    block tensor — device-resident and block-parallel (the seed looped
+    ``np.linalg.qr`` over host splits of ``collect()``).  The log-depth
+    R-merge tree then works on (2m, m) stacks.  Requires m <= block rows and
+    a (numerically) full-rank input; returns (q (n, m) dense, r (m, m)).
     """
     n, m = x.shape
-    gn = x.stacked_grid[0]
-    # local QR per block-row (one 'task' per block-row)
-    blocks = np.array_split(np.asarray(x.collect()), gn, axis=0)
-    qs, rs = zip(*[np.linalg.qr(b) for b in blocks])
-    # reduction tree over stacked R factors (paper Fig. 3)
-    level_q = list(qs)
-    level_r = list(rs)
+    if x.block_shape[1] != m:
+        x = x.rechunk((x.block_shape[0], m))
+    x = x.ensure_zero_pad()
+    bn = x.block_shape[0]
+    gn = max(1, ceil_div(n, bn))
+    stacked = x.blocks[:gn, 0]                     # (gn, bn, m), tail zero-pad
+    # leaf level: one QR per block-row, vmapped (zero pad rows of the tail
+    # block factor out: QR = A R^{-1} keeps them zero for full-rank A)
+    qs, rs = jax.vmap(jnp.linalg.qr)(stacked)      # (gn, bn, m), (gn, m, m)
+    level_q = [qs[i] for i in range(gn)]
+    level_r = [rs[i] for i in range(gn)]
+    # reduction tree over stacked R factors (paper Fig. 3), device-resident
     while len(level_r) > 1:
         nq, nr = [], []
         for i in range(0, len(level_r) - 1, 2):
-            stacked = np.concatenate([level_r[i], level_r[i + 1]], axis=0)
-            q2, r2 = np.linalg.qr(stacked)
+            pair = jnp.concatenate([level_r[i], level_r[i + 1]], axis=0)
+            q2, r2 = jnp.linalg.qr(pair)
             nq.append((q2[:m], q2[m:]))
             nr.append(r2)
         merged_q = []
         for j, (qa, qb) in enumerate(nq):
-            merged_q.append(np.concatenate(
+            merged_q.append(jnp.concatenate(
                 [level_q[2 * j] @ qa, level_q[2 * j + 1] @ qb], axis=0))
         if len(level_r) % 2:
             merged_q.append(level_q[-1])
             nr.append(level_r[-1])
         level_q = merged_q
         level_r = nr
-    q = np.concatenate(level_q, axis=0)
-    return jnp.asarray(q), jnp.asarray(level_r[0])
+    q = jnp.concatenate(level_q, axis=0)[:n]       # drop the tail pad rows
+    return q, level_r[0]

@@ -8,11 +8,15 @@ shuffles, plus explicit-collective variants for performance work.
 from repro.core.blocking import BlockGrid, ceil_div, round_up
 from repro.core.dsarray import (
     DsArray,
+    PAD_DIRTY,
+    PAD_ZERO,
+    PadState,
     concat_rows,
     eye,
     from_array,
     full,
     identity_like,
+    pad_state_of,
     random_array,
     zeros,
 )
@@ -23,6 +27,7 @@ from repro.core.dataset_baseline import Dataset, Subset, TaskCounter
 
 __all__ = [
     "BlockGrid", "DsArray", "Dataset", "Subset", "TaskCounter",
+    "PadState", "PAD_ZERO", "PAD_DIRTY", "pad_state_of",
     "from_array", "zeros", "full", "eye", "identity_like", "random_array",
     "concat_rows", "pseudo_shuffle", "exact_shuffle", "costmodel",
     "compat", "structural", "gram", "take_rows", "take_cols",

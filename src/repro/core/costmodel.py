@@ -179,3 +179,67 @@ def tpu_rechunk_bytes(n: int, m: int, e: int, dn: int, dm: int,
 
 def collective_time_s(bytes_per_device: float, link_bw: float = 50e9) -> float:
     return bytes_per_device / link_bw
+
+
+# ---------------------------------------------------------------------------
+# Local-GEMM laws: fused stacked Pallas kernel vs the per-grid-k loop.
+#
+# The loop-of-vmaps path launched one 2-D GEMM per grid-k step and
+# accumulated C in HBM (write the partial, read it back next step); the
+# fused stacked kernel reduces grid-k x block-k inside one launch with the
+# accumulator resident in VMEM, so C is written exactly once.
+# ---------------------------------------------------------------------------
+
+
+def stacked_gemm_flops(gi: int, gj: int, gk: int,
+                       bn: int, bk: int, bm: int) -> float:
+    """MACs x2 for C(gi*bn, gj*bm) = A(gi*bn, gk*bk) @ B(gk*bk, gj*bm)."""
+    return 2.0 * gi * gj * gk * bn * bk * bm
+
+
+def stacked_gemm_hbm_bytes(gi: int, gj: int, gk: int, bn: int, bk: int,
+                           bm: int, e: int, fused: bool = True) -> float:
+    """HBM traffic of the local blocked GEMM, element size ``e``.
+
+    Every C tile streams its A panel row (re-read per gj) and B panel column
+    (re-read per gi).  Fused: C written once.  Unfused (the old loop): every
+    grid-k step writes the full C partial and re-reads it for the add —
+    (2*gk - 1)x the C traffic, the term the fused kernel deletes.
+    """
+    a_reads = gi * gk * bn * bk * gj * e
+    b_reads = gk * gj * bk * bm * gi * e
+    c_bytes = gi * gj * bn * bm * e
+    if fused:
+        return a_reads + b_reads + c_bytes
+    return a_reads + b_reads + (2 * gk - 1) * c_bytes
+
+
+def gemm_kernel_launches(gk: int, fused: bool = True) -> int:
+    """Kernel-dispatch law: the fused kernel is 1 launch however deep the
+    grid-k reduction; the loop path paid one per grid-k step."""
+    return 1 if fused else gk
+
+
+# ---------------------------------------------------------------------------
+# Remask laws: pad-state tracking vs unconditional per-op re-masking.
+# ---------------------------------------------------------------------------
+
+
+def remask_pass_bytes(n: int, m: int, e: int) -> float:
+    """One mask pass = read + write of the padded tensor (the per-axis masks
+    are O(sqrt N) and free by comparison)."""
+    return 2.0 * n * m * e
+
+
+def chain_remask_passes(n_ops: int, pad_tracked: bool = True,
+                        zero_preserving: bool = True) -> int:
+    """Mask passes over an ``n_ops``-long elementwise chain ending in a
+    consumer (reduction / matmul / structural op).
+
+    Untracked (seed): one pass per op.  Tracked: zero-preserving chains pay
+    none (the consumer sees pad_state == identity); otherwise the consumer
+    pays exactly one deferred pass, regardless of chain length.
+    """
+    if not pad_tracked:
+        return n_ops
+    return 0 if zero_preserving else min(1, n_ops)

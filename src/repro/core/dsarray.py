@@ -14,13 +14,17 @@ list-of-lists-of-blocks:
 
 Everything is a pure function of the stacked tensor, so a DsArray traces
 through ``jax.jit`` and shards with ``NamedSharding(P(axis0, axis1))`` on the
-grid dims.  Edge blocks are zero-padded; the **pad-is-zero invariant** is
-maintained by every public op (re-masking is a fused, nearly-free op under
-jit) so reductions and matmuls never see garbage.
+grid dims.  Edge blocks are zero-padded, and each array carries a static
+**pad state** — ``ZERO`` (pad exactly 0), ``FILL(v)`` (pad is the known
+constant v) or ``DIRTY`` (unknown) — propagated at trace time by probing
+each op on the pad constants.  Consumers that need the pad-is-zero invariant
+(reductions, matmul, structural ops) enforce it lazily via
+``ensure_zero_pad()``, so zero-preserving op chains emit **no** mask pass at
+all and a chain ending in a consumer pays at most one.
 
-Structural-op complexity (paper §5 claims, as implemented by
-``core.structural``; N = n*m elements, "seed" = the old
-materialize-then-reblock path this replaced):
+Hot-path complexity (paper §5 claims, as implemented by ``core.structural``
+and ``kernels.matmul``; N = n*m elements, "seed" = the path each row
+replaced):
 
 ======================  ========================  ==========================
 op                      seed path                 block-native path
@@ -31,7 +35,20 @@ row filter ``A[idx]``   O(N) + gather             O(out) single block gather
 ``rechunk`` (dividing)  O(N) two global layouts   O(N) one regroup reshape
 ``rechunk`` (general)   O(N) two global layouts   O(N) two block gathers
 ``concat_rows`` aligned O(sum N_i) x2             O(1) block-grid stack
+``A @ B`` local GEMM    O(gk) einsum/kernel       1 fused Pallas launch,
+                        launches + partial-C        grid-k x block-k in one
+                        HBM round-trips             VMEM fp32 accumulator
+elementwise chain (L)   L remask passes           0 remask passes (ZERO-
+                                                    preserving) or 1 at the
+                                                    consuming reduction
+``_reduce`` refill      1 select pass always      0 when pad == identity
 ======================  ========================  ==========================
+
+Remask-elision rules: a binary/unary op on known pad states yields the op of
+the pad constants (probed on 0-d values at trace time) — nan or a traced
+operand demotes to DIRTY; ``_reduce`` refills only when the pad state
+differs from the reduction identity; ``__matmul__`` and every structural op
+call ``ensure_zero_pad()`` (a no-op on ZERO) before touching raw blocks.
 
 None of the block-native paths form a rank-2 global ``(n, m)`` tensor, so
 they compose with ``jit``/sharding without pulling the array onto one host,
@@ -40,6 +57,7 @@ and on ``NamedSharding`` inputs the result is re-placed on the same mesh.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 from typing import Any, Callable, Optional, Sequence, Tuple, Union
@@ -78,6 +96,104 @@ def _valid_mask(grid: BlockGrid, stacked_grid: Tuple[int, int]) -> jnp.ndarray:
     return rows[:, None, :, None] & cols[None, :, None, :]
 
 
+# ---------------------------------------------------------------------------
+# Pad-state tracking.
+#
+# The pad region of a stacked tensor is data the logical array does not own;
+# instead of forcing it to zero after EVERY op (one full select pass per op,
+# the seed behaviour), each DsArray carries a static claim about it.  The
+# claim is aux data on the pytree, so it is known at trace time and the
+# remask simply does not appear in the jaxpr when it is not needed.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PadState:
+    """Static claim about the pad region: "zero" | "fill" (constant
+    ``fill``) | "dirty" (unknown).  Hashable aux data, so differing states
+    trace/compile separately — which is the point: the mask pass exists only
+    in the traces that need it."""
+
+    kind: str
+    fill: Optional[Any] = None
+
+    @property
+    def value(self):
+        """The pad constant (only meaningful for zero/fill)."""
+        return 0 if self.kind == "zero" else self.fill
+
+
+PAD_ZERO = PadState("zero")
+PAD_DIRTY = PadState("dirty")
+
+
+def pad_state_of(val) -> PadState:
+    """PadState for a known constant pad value; nan demotes to DIRTY (it
+    compares unequal to every reduction identity and would poison pytree
+    equality)."""
+    try:
+        item = np.asarray(val).item()
+    except Exception:
+        return PAD_DIRTY
+    if item != item:  # nan (works for complex too)
+        return PAD_DIRTY
+    if item == 0:
+        return PAD_ZERO
+    return PadState("fill", item)
+
+
+def _probe_scalar(val, dtype):
+    """A 0-d concrete array holding ``val`` in ``dtype`` for pad probing."""
+    return jnp.asarray(np.asarray(val).item(), dtype=dtype)
+
+
+def _probe_binary_pad(op, lhs_state: PadState, lhs_dtype, rhs,
+                      reverse: bool = False) -> PadState:
+    """Pad state of ``op(lhs, rhs)`` from the operands' pad constants.
+
+    ``rhs`` is a PadState+dtype pair (DsArray operand) or a raw scalar.  The
+    probe runs on concrete 0-d values, so it stays concrete even while
+    tracing — unless an operand IS a tracer, which demotes to DIRTY.
+    """
+    if lhs_state.kind == "dirty":
+        return PAD_DIRTY
+    try:
+        lv = _probe_scalar(lhs_state.value, lhs_dtype)
+        if isinstance(rhs, tuple):
+            rstate, rdtype = rhs
+            if rstate.kind == "dirty":
+                return PAD_DIRTY
+            rv = _probe_scalar(rstate.value, rdtype)
+        else:
+            if isinstance(rhs, jax.core.Tracer):
+                return PAD_DIRTY
+            rv = rhs
+        out = op(rv, lv) if reverse else op(lv, rv)
+        if isinstance(out, jax.core.Tracer):
+            return PAD_DIRTY
+        return pad_state_of(out)
+    except Exception:
+        return PAD_DIRTY
+
+
+def _probe_map_pad(fn, state: PadState, dtype) -> PadState:
+    """Pad state of ``fn(blocks)`` for an elementwise ``fn``: probe it on a
+    (1,1,1,1) constant holding the pad value.  Anything that fails, returns
+    a tracer, or changes shape demotes to DIRTY (``map_blocks`` callers with
+    non-elementwise fns should pass ``pad=PAD_DIRTY`` explicitly)."""
+    if state.kind == "dirty":
+        return PAD_DIRTY
+    try:
+        probe = jnp.full((1, 1, 1, 1), np.asarray(state.value).item(), dtype)
+        out = fn(probe)
+        if isinstance(out, jax.core.Tracer) or \
+                getattr(out, "shape", None) != (1, 1, 1, 1):
+            return PAD_DIRTY
+        return pad_state_of(out)
+    except Exception:
+        return PAD_DIRTY
+
+
 @jax.tree_util.register_pytree_node_class
 class DsArray:
     """2-D blocked distributed array with a NumPy-like API (paper §4.2.3).
@@ -86,9 +202,10 @@ class DsArray:
     :func:`zeros`, :func:`random_array` etc.
     """
 
-    __slots__ = ("blocks", "grid")
+    __slots__ = ("blocks", "grid", "pad_state")
 
-    def __init__(self, blocks: jnp.ndarray, grid: BlockGrid):
+    def __init__(self, blocks: jnp.ndarray, grid: BlockGrid,
+                 pad_state: PadState = PAD_ZERO):
         if blocks.ndim != 4:
             raise ValueError(f"stacked block tensor must be rank 4, got {blocks.shape}")
         bn, bm = grid.block_shape
@@ -103,15 +220,17 @@ class DsArray:
             )
         self.blocks = blocks
         self.grid = grid
+        self.pad_state = pad_state
 
     # -- pytree protocol ------------------------------------------------------
     def tree_flatten(self):
-        return (self.blocks,), self.grid
+        return (self.blocks,), (self.grid, self.pad_state)
 
     @classmethod
-    def tree_unflatten(cls, grid, children):
+    def tree_unflatten(cls, aux, children):
         (blocks,) = children
-        return cls(blocks, grid)
+        grid, pad_state = aux
+        return cls(blocks, grid, pad_state)
 
     # -- basic properties -----------------------------------------------------
     @property
@@ -153,8 +272,20 @@ class DsArray:
         fill_v = jnp.asarray(fill, dtype=self.blocks.dtype)
         return jnp.where(self._mask(), self.blocks, fill_v)
 
-    def _with_blocks(self, blocks: jnp.ndarray, grid: Optional[BlockGrid] = None) -> "DsArray":
-        return DsArray(blocks, grid if grid is not None else self.grid)
+    def ensure_zero_pad(self) -> "DsArray":
+        """Self if the pad is known zero, else a re-masked copy.
+
+        The single enforcement point of the pad-is-zero invariant: consumers
+        that read raw blocks (matmul, reductions with 0-identity, structural
+        ops, kernels) call this, so op chains pay at most one mask pass at
+        the consumer instead of one per op."""
+        if self.pad_state.kind == "zero":
+            return self
+        return DsArray(self._remask(), self.grid, PAD_ZERO)
+
+    def _with_blocks(self, blocks: jnp.ndarray, grid: Optional[BlockGrid] = None,
+                     pad_state: PadState = PAD_ZERO) -> "DsArray":
+        return DsArray(blocks, grid if grid is not None else self.grid, pad_state)
 
     # -- materialization ------------------------------------------------------
     def collect(self) -> jnp.ndarray:
@@ -165,9 +296,10 @@ class DsArray:
         return global_form[:n, :m]
 
     def _global_padded(self) -> jnp.ndarray:
-        """Global layout including pad (pad guaranteed zero)."""
-        gn, gm, bn, bm = self.blocks.shape
-        return self.blocks.transpose(0, 2, 1, 3).reshape(gn * bn, gm * bm)
+        """Global layout including pad (pad forced zero)."""
+        me = self.ensure_zero_pad()
+        gn, gm, bn, bm = me.blocks.shape
+        return me.blocks.transpose(0, 2, 1, 3).reshape(gn * bn, gm * bm)
 
     # -- elementwise ----------------------------------------------------------
     def _binary(self, other, op: Callable, reverse: bool = False) -> "DsArray":
@@ -186,13 +318,18 @@ class DsArray:
                 me = me._pad_grid_to(common)
                 other = other._pad_grid_to(common)
             rhs = other.blocks
+            probe_rhs = (other.pad_state, other.blocks.dtype)
         elif isinstance(other, (int, float, jnp.ndarray, np.ndarray)) and jnp.ndim(other) == 0:
             rhs = other
+            probe_rhs = other
         else:
             return NotImplemented
         out = op(rhs, me.blocks) if reverse else op(me.blocks, rhs)
-        res = DsArray(out, BlockGrid(me.shape, me.block_shape))
-        return res._with_blocks(res._remask())
+        # both pad regions hold known constants at the SAME positions, so the
+        # result pad is the op of the constants — no remask, just bookkeeping
+        pad = _probe_binary_pad(op, me.pad_state, me.blocks.dtype, probe_rhs,
+                                reverse)
+        return DsArray(out, BlockGrid(me.shape, me.block_shape), pad)
 
     def __add__(self, o):
         return self._binary(o, jnp.add)
@@ -225,14 +362,20 @@ class DsArray:
     def __neg__(self):
         return self.map_blocks(jnp.negative)
 
-    def map_blocks(self, fn: Callable[[jnp.ndarray], jnp.ndarray]) -> "DsArray":
-        """Apply an elementwise function to every block (one 'task' per block);
-        re-masks to preserve the pad-is-zero invariant."""
+    def map_blocks(self, fn: Callable[[jnp.ndarray], jnp.ndarray],
+                   pad: Optional[PadState] = None) -> "DsArray":
+        """Apply an elementwise function to every block (one 'task' per block).
+
+        The pad state is propagated by probing ``fn`` on the pad constant —
+        zero-preserving fns (neg, sqrt, abs, ...) keep ZERO with no mask pass.
+        Non-elementwise fns must pass ``pad=`` explicitly (``PAD_DIRTY`` when
+        unknown); the probe cannot see position dependence."""
         out = fn(self.blocks)
         if out.shape != self.blocks.shape:
             raise ValueError("map_blocks must preserve block shapes")
-        res = DsArray(out, self.grid)
-        return res._with_blocks(res._remask())
+        if pad is None:
+            pad = _probe_map_pad(fn, self.pad_state, self.blocks.dtype)
+        return DsArray(out, self.grid, pad)
 
     def sqrt(self) -> "DsArray":
         return self.map_blocks(jnp.sqrt)
@@ -244,7 +387,14 @@ class DsArray:
         return self.map_blocks(jnp.abs)
 
     def astype(self, dtype) -> "DsArray":
-        return DsArray(self.blocks.astype(dtype), self.grid)
+        pad = self.pad_state
+        if pad.kind == "fill":
+            # the physical pad is cast too; re-derive the constant the same way
+            try:
+                pad = pad_state_of(jnp.asarray(pad.fill, self.dtype).astype(dtype))
+            except Exception:
+                pad = PAD_DIRTY
+        return DsArray(self.blocks.astype(dtype), self.grid, pad)
 
     # -- structural ops ---------------------------------------------------------
     def transpose(self) -> "DsArray":
@@ -255,7 +405,7 @@ class DsArray:
         N^2 + N scatter/gather — see core/dataset_baseline.py).
         """
         out = jnp.swapaxes(jnp.swapaxes(self.blocks, 0, 1), 2, 3)
-        return DsArray(out, self.grid.transpose())
+        return DsArray(out, self.grid.transpose(), self.pad_state)
 
     def _pad_grid_to(self, stacked_grid: Tuple[int, int]) -> "DsArray":
         gn, gm = self.stacked_grid
@@ -264,8 +414,11 @@ class DsArray:
             return self
         if tn < gn or tm < gm:
             raise ValueError("can only grow the stacked grid")
-        out = jnp.pad(self.blocks, ((0, tn - gn), (0, tm - gm), (0, 0), (0, 0)))
-        return DsArray(out, self.grid)
+        # grow with the array's own pad constant so the pad state survives
+        cv = 0 if self.pad_state.kind != "fill" else self.pad_state.fill
+        out = jnp.pad(self.blocks, ((0, tn - gn), (0, tm - gm), (0, 0), (0, 0)),
+                      constant_values=np.asarray(cv, self.blocks.dtype))
+        return DsArray(out, self.grid, self.pad_state)
 
     def rechunk(self, block_shape: Tuple[int, int]) -> "DsArray":
         """Re-block to a new block size (the paper's 'arbitrary block size'
@@ -282,11 +435,17 @@ class DsArray:
     def __matmul__(self, other: "DsArray") -> "DsArray":
         """Blocked matmul: C[i,j] = sum_k A[i,k] @ B[k,j].
 
-        The einsum over (grid-k, block-k) is exactly the paper's per-block
-        task graph; under pjit the grid contraction becomes a psum/SUMMA
-        schedule chosen by SPMD partitioning (see core/shmap_ops.py for the
-        explicitly-scheduled version used in §Perf).
+        The local contraction over (grid-k, block-k) — exactly the paper's
+        per-block task graph — lowers through the fused Pallas MXU kernel
+        (``kernels.matmul.stacked_matmul``: one launch, fp32 VMEM accumulator,
+        one HBM write per C tile) on TPU, with a stacked-block einsum fallback
+        off-TPU / for non-MXU shapes; under pjit the grid contraction becomes
+        a psum/SUMMA schedule chosen by SPMD partitioning (see
+        core/shmap_ops.py for the explicitly-scheduled version used in §Perf).
+        Zero pad on both operands makes the padded contraction exact; the
+        result pad is therefore exactly zero.
         """
+        from repro.kernels.matmul.ops import local_matmul
         if not isinstance(other, DsArray):
             return NotImplemented
         if self.shape[1] != other.shape[0]:
@@ -299,22 +458,28 @@ class DsArray:
             b = other._pad_grid_to((k, other.stacked_grid[1]))
         else:
             a, b = self, other
-        out = jnp.einsum("ikab,kjbc->ijac", a.blocks, b.blocks,
-                         preferred_element_type=jnp.promote_types(a.dtype, jnp.float32)
-                         if jnp.issubdtype(a.dtype, jnp.floating) else None)
-        out = out.astype(jnp.promote_types(a.dtype, b.dtype))
+        a, b = a.ensure_zero_pad(), b.ensure_zero_pad()
+        out = local_matmul(a.blocks, b.blocks,
+                           out_dtype=jnp.promote_types(a.dtype, b.dtype))
         grid = BlockGrid((self.shape[0], other.shape[1]),
                          (self.block_shape[0], other.block_shape[1]))
-        return DsArray(out, grid)
+        return DsArray(out, grid, PAD_ZERO)
 
     # -- reductions ---------------------------------------------------------
     def _reduce(self, op: str, axis: Optional[int]) -> Union["DsArray", jnp.ndarray]:
         fill = {"sum": 0, "max": -jnp.inf, "min": jnp.inf}[op]
         if jnp.issubdtype(self.dtype, jnp.integer):
             fill = {"sum": 0,
-                    "max": jnp.iinfo(self.dtype).min,
-                    "min": jnp.iinfo(self.dtype).max}[op]
-        x = self._remask(fill)
+                    "max": int(jnp.iinfo(self.dtype).min),
+                    "min": int(jnp.iinfo(self.dtype).max)}[op]
+        # refill only when the pad is not already the reduction identity —
+        # ZERO input + sum (the common case) emits no mask pass at all
+        ps = self.pad_state
+        if (ps.kind == "zero" and fill == 0) or \
+                (ps.kind == "fill" and ps.fill == fill):
+            x = self.blocks
+        else:
+            x = self._remask(fill)
         red = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min}[op]
         if axis is None:
             return red(x)
@@ -333,8 +498,9 @@ class DsArray:
             grid = BlockGrid((self.shape[0], 1), (bn, 1))
         else:
             raise ValueError(f"axis must be 0, 1 or None, got {axis}")
-        res = DsArray(blocks, grid)
-        return res._with_blocks(res._remask())
+        # pad lines of the result reduce over identity-only values, so the
+        # result pad IS the identity: bookkeep it instead of re-masking
+        return DsArray(blocks, grid, pad_state_of(fill))
 
     def sum(self, axis: Optional[int] = None):
         return self._reduce("sum", axis)
@@ -394,7 +560,7 @@ class DsArray:
         padded = self._pad_grid_to((round_up(gn, dn), round_up(gm, dm)))
         sharding = NamedSharding(mesh, P(axes[0], axes[1], None, None))
         blocks = jax.device_put(padded.blocks, sharding)
-        return DsArray(blocks, self.grid)
+        return DsArray(blocks, self.grid, padded.pad_state)
 
     def sharding_spec(self, axes=("data", "model")) -> P:
         return P(axes[0], axes[1], None, None)

@@ -40,7 +40,7 @@ def save_npy(path: str, a: DsArray) -> None:
 def save_blocks(dirpath: str, a: DsArray) -> None:
     """One file per block-row (what each PyCOMPSs worker / TPU host writes)."""
     os.makedirs(dirpath, exist_ok=True)
-    blocks = np.asarray(a.blocks)
+    blocks = np.asarray(a.ensure_zero_pad().blocks)   # canonical on-disk form
     meta = {"shape": list(a.shape), "block_shape": list(a.block_shape),
             "stacked_grid": list(a.stacked_grid), "dtype": str(blocks.dtype)}
     with open(os.path.join(dirpath, "meta.json"), "w") as f:

@@ -23,7 +23,7 @@ All bodies take/return *mesh-local* stacked block tensors inside
 
 from __future__ import annotations
 
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -41,24 +41,30 @@ def _shmap(body, mesh, in_specs, out_specs):
 
 
 def _local_gemm(a: jnp.ndarray, b: jnp.ndarray,
-                gemm: Optional[Callable] = None) -> jnp.ndarray:
-    """Local blocked GEMM on stacked tiles: (gi,gk,bn,bk) x (gk,gj,bk,bm)."""
-    if gemm is None:
-        return jnp.einsum("ikab,kjbc->ijac", a, b,
-                          preferred_element_type=jnp.float32).astype(a.dtype)
-    gi, gk = a.shape[:2]
-    out = None
-    for k in range(gk):
-        partial = jax.vmap(lambda ab: jax.vmap(lambda bb: gemm(ab, bb))(b[k]))(a[:, k])
-        out = partial if out is None else out + partial
-    return out
+                gemm: Union[str, Callable, None] = None) -> jnp.ndarray:
+    """Local blocked GEMM on stacked tiles: (gi,gk,bn,bk) x (gk,gj,bk,bm).
+
+    Dispatches through ``kernels.matmul.local_matmul`` — on TPU the whole
+    shard contracts in ONE fused Pallas launch with the (grid-k x block-k)
+    reduction accumulating in a VMEM fp32 tile.  This replaces the old
+    per-grid-k Python loop of vmapped 2-D kernels, which launched O(gk)
+    kernels and round-tripped the full C partial through HBM at every step.
+    ``gemm`` selects a backend ("pallas" / "interpret" / "einsum", None =
+    auto) or is a callable taking the two stacked tensors.
+    """
+    from repro.kernels.matmul.ops import local_matmul
+    if callable(gemm):
+        return gemm(a, b)
+    return local_matmul(a, b, out_dtype=a.dtype, backend=gemm)
 
 
 def _prep_matmul(a: DsArray, b: DsArray, mesh: Mesh, axes):
     if a.shape[1] != b.shape[0] or a.block_shape[1] != b.block_shape[0]:
         raise ValueError("distributed matmul requires matching inner grid/block dims")
-    a = a.distribute(mesh, axes)
-    b = b.distribute(mesh, axes)
+    # shard bodies read raw blocks; the padded contraction is exact only
+    # with zero pads (enforced once here, not per schedule step)
+    a = a.ensure_zero_pad().distribute(mesh, axes)
+    b = b.ensure_zero_pad().distribute(mesh, axes)
     dn, dm = mesh.shape[axes[0]], mesh.shape[axes[1]]
     gk = round_up(max(a.stacked_grid[1], b.stacked_grid[0]), dn * dm)
     a = a._pad_grid_to((a.stacked_grid[0], gk))
@@ -68,7 +74,7 @@ def _prep_matmul(a: DsArray, b: DsArray, mesh: Mesh, axes):
 
 def summa_matmul(a: DsArray, b: DsArray, mesh: Mesh,
                  axes: Tuple[str, str] = ("data", "model"),
-                 gemm: Optional[Callable] = None) -> DsArray:
+                 gemm: Union[str, Callable, None] = None) -> DsArray:
     """C = A @ B with an explicit SUMMA (gather-form) schedule."""
     a, b = _prep_matmul(a, b, mesh, axes)
 
@@ -86,7 +92,7 @@ def summa_matmul(a: DsArray, b: DsArray, mesh: Mesh,
 
 def cannon_matmul(a: DsArray, b: DsArray, mesh: Mesh,
                   axes: Tuple[str, str] = ("data", "model"),
-                  gemm: Optional[Callable] = None) -> DsArray:
+                  gemm: Union[str, Callable, None] = None) -> DsArray:
     """Cannon's algorithm on a square (d × d) mesh slice.
 
     Steady state: per step, every device ppermutes its A panel one hop left
@@ -146,7 +152,9 @@ def transpose_pp(a: DsArray, mesh: Mesh,
 
     spec = P(axes[0], axes[1], None, None)
     out_blocks = _shmap(body, mesh, (spec,), spec)(a.blocks)
-    return DsArray(out_blocks, a.grid.transpose())
+    # pure permutation: the pad region maps onto the transposed pad region,
+    # so the operand's pad state (and constant) carries over
+    return DsArray(out_blocks, a.grid.transpose(), a.pad_state)
 
 
 def colsum_psum(a: DsArray, mesh: Mesh,
@@ -162,7 +170,7 @@ def colsum_psum(a: DsArray, mesh: Mesh,
 
     spec = P(axes[0], axes[1], None, None)
     out_spec = P(None, axes[1], None, None)
-    out_blocks = _shmap(body, mesh, (spec,), out_spec)(a._remask())
+    out_blocks = _shmap(body, mesh, (spec,), out_spec)(a.ensure_zero_pad().blocks)
     grid = BlockGrid((1, a.shape[1]), (1, a.block_shape[1]))
     return DsArray(out_blocks, grid)
 
@@ -188,7 +196,7 @@ def _redistribute(out: DsArray, mesh: Mesh, axes) -> DsArray:
     gn, gm = out.stacked_grid
     padded = out._pad_grid_to((round_up(gn, dn), round_up(gm, dm)))
     blocks = jax.device_put(padded.blocks, NamedSharding(mesh, spec))
-    return DsArray(blocks, out.grid)
+    return DsArray(blocks, out.grid, padded.pad_state)
 
 
 def slice_sharded(a: DsArray, key, mesh: Mesh,

@@ -40,7 +40,9 @@ def pseudo_shuffle(key, a: DsArray) -> DsArray:
     row_perms = jax.vmap(lambda k: jax.random.permutation(k, bn))(
         jax.random.split(k2, gn))
     blocks = jax.vmap(lambda b, p: b[:, p, :])(blocks, row_perms)
-    return DsArray(blocks, a.grid)
+    # both stages permute pad columns among themselves (rows tile evenly
+    # here), so the operand's pad state carries over untouched
+    return DsArray(blocks, a.grid, a.pad_state)
 
 
 def exact_shuffle(key, a: DsArray) -> DsArray:

@@ -91,7 +91,7 @@ def preserve_sharding(out: "DsArray", ref_blocks) -> "DsArray":
         return out
     try:
         blocks = jax.device_put(out.blocks, NamedSharding(sharding.mesh, sharding.spec))
-        return type(out)(blocks, out.grid)
+        return type(out)(blocks, out.grid, out.pad_state)
     except Exception:  # grid not placeable on that mesh anymore
         return out
 
@@ -128,6 +128,7 @@ def take_rows(a: "DsArray", idx, out_bn: Optional[int] = None) -> "DsArray":
     ``idx`` may be a traced jnp array — the selection shape is static
     (``len(idx)``) while the selected rows stay dynamic, so this jits.
     """
+    a = a.ensure_zero_pad()   # gathers re-use the source col pad as-is
     idx = jnp.asarray(idx)
     if idx.ndim != 1:
         raise IndexError(f"row index must be 1-D, got shape {idx.shape}")
@@ -151,6 +152,7 @@ def take_rows(a: "DsArray", idx, out_bn: Optional[int] = None) -> "DsArray":
 
 def take_cols(a: "DsArray", idx, out_bm: Optional[int] = None) -> "DsArray":
     """Column analogue of :func:`take_rows` (gather on the transposed grid)."""
+    a = a.ensure_zero_pad()
     idx = jnp.asarray(idx)
     if idx.ndim != 1:
         raise IndexError(f"col index must be 1-D, got shape {idx.shape}")
@@ -183,7 +185,8 @@ def aligned_slice(a: "DsArray", rows: slice, cols: slice) -> "DsArray":
     movement beyond the selected blocks, then an edge remask for the (possibly
     partial) last block row/col.
     """
-    n, m = a.shape
+    a = a.ensure_zero_pad()   # edge blocks re-use the source pad when the
+    n, m = a.shape            # slice stops at n/m
     bn, bm = a.block_shape
     r0, r1, rs = rows.indices(n)
     c0, c1, cs = cols.indices(m)
@@ -354,6 +357,7 @@ def rechunk(a: "DsArray", block_shape: Tuple[int, int]) -> "DsArray":
     block_shape = (int(block_shape[0]), int(block_shape[1]))
     if block_shape == a.block_shape:
         return a
+    a = a.ensure_zero_pad()   # regroup/gather paths carry the pad along
     grid = BlockGrid(a.shape, block_shape)   # validates block_shape > 0
     blocks = _rechunk_blocks(a.blocks, a.shape, block_shape)
     return preserve_sharding(type(a)(blocks, grid), a.blocks)
@@ -382,6 +386,7 @@ def concat_rows(arrays: Sequence["DsArray"]) -> "DsArray":
                 f"concat_rows column mismatch: {a.shape[1]} != {m}")
     bs = arrays[0].block_shape
     parts = [rechunk(a, bs) if a.block_shape != bs else a for a in arrays]
+    parts = [p.ensure_zero_pad() for p in parts]   # grid stack keeps tail pads
     nonempty = [p for p in parts if p.shape[0] > 0]
     parts = nonempty or parts[:1]
     bn, bm = bs
@@ -426,7 +431,7 @@ def gram(a: "DsArray") -> jnp.ndarray:
     ``(n, m)`` global layout; intended for skinny operands (m = latent
     factors) where the Gram is small and replicated.
     """
-    b = a.blocks  # pad-is-zero invariant: pad rows/cols contribute nothing
+    b = a.ensure_zero_pad().blocks  # zero pad contributes nothing to the Gram
     g = jnp.einsum("ijab,ikac->jbkc", b, b,
                    preferred_element_type=jnp.float32)
     gm, bm = b.shape[1], b.shape[3]

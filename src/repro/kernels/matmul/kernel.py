@@ -1,11 +1,19 @@
-"""Tiled MXU matmul kernel — the local GEMM under every ds-array ``@``.
+"""Tiled MXU matmul kernels — the local GEMM under every ds-array ``@``.
 
-Tiling: C is computed one (block_m × block_n) VMEM tile at a time; the K
-reduction runs as the innermost (sequential) grid dimension with an fp32
+Two entry points:
+
+* ``matmul_padded`` — dense 2-D ``(m, k) @ (k, n)`` on pre-padded shapes.
+* ``stacked_matmul`` — the ds-array-native form: consumes the stacked block
+  tensors ``(gi, gk, bn, bk) x (gk, gj, bk, bm)`` directly, grid dims as
+  Pallas grid dims, so the distributed ``@`` lowers into ONE kernel launch
+  with no relayout.
+
+Both compute C one VMEM tile at a time; the whole K reduction (grid-k and
+block-k) runs as the innermost (sequential) grid dimension with an fp32
 accumulator tile resident in VMEM, so each C tile is written to HBM exactly
-once.  Block sizes default to 512×512×512 fp32-equivalents; all dims must be
-multiples of 128 to keep the MXU systolic array full (the ops.py wrapper pads
-arbitrary shapes).
+once.  Tile sizes default to 512³ fp32-equivalents; dims should be multiples
+of 128 to keep the MXU systolic array full (the ops.py wrappers pad 2-D
+shapes / fall back to einsum for non-MXU block shapes).
 """
 
 from __future__ import annotations
@@ -34,6 +42,85 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
     @pl.when(k == n_k - 1)
     def _flush():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _stacked_matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[0, 0], b_ref[0, 0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick_tile(dim: int, target: int) -> int:
+    """Sub-tile a block dim only when it divides evenly; else take it whole."""
+    return target if (dim > target and dim % target == 0) else dim
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def stacked_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_m: int = 512,
+    block_n: int = 512,
+    block_k: int = 512,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused GEMM directly on stacked ds-array block tensors.
+
+    ``(gi, gk, bn, bk) x (gk, gj, bk, bm) -> (gi, gj, bn, bm)``: the ds-array
+    grid dims become Pallas grid dims and the whole k reduction — grid-k
+    times block-k — runs as the innermost (sequential) grid dimension with
+    one fp32 accumulator tile resident in VMEM, so each C tile is written to
+    HBM exactly once.  This replaces the per-grid-k Python loop of vmapped
+    2-D kernels (O(gk) pallas_call launches, each re-reading and re-writing
+    the full C partial) with a single launch and no HBM round-trips for
+    partial sums.
+
+    Block dims larger than ``block_*`` are sub-tiled when they divide evenly;
+    otherwise the whole block is one tile (ds-array blocks are VMEM-sized by
+    construction).  ``interpret=True`` runs the same kernel off-TPU.
+    """
+    gi, gk, bn, bk = a.shape
+    gk2, gj, bk2, bm = b.shape
+    if gk != gk2 or bk != bk2:
+        raise ValueError(f"stacked matmul inner mismatch {a.shape} x {b.shape}")
+    out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
+    tm, tn, tk = (_pick_tile(bn, block_m), _pick_tile(bm, block_n),
+                  _pick_tile(bk, block_k))
+    fm, fn, fk = bn // tm, bm // tn, bk // tk
+    grid = (gi * fm, gj * fn, gk * fk)
+    return pl.pallas_call(
+        functools.partial(_stacked_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, tm, tk),
+                         lambda i, j, k: (i // fm, k // fk, i % fm, k % fk)),
+            pl.BlockSpec((1, 1, tk, tn),
+                         lambda i, j, k: (k // fk, j // fn, k % fk, j % fn)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tm, tn),
+                               lambda i, j, k: (i // fm, j // fn, i % fm, j % fn)),
+        out_shape=jax.ShapeDtypeStruct((gi, gj, bn, bm), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b)
 
 
 def matmul_padded(

@@ -1,19 +1,89 @@
-"""Public wrapper for the tiled matmul kernel: padding + dtype policy.
+"""Public wrappers for the matmul kernels: padding, dtype and backend policy.
 
 ``matmul(a, b)`` accepts arbitrary (m, k) x (k, n) shapes; inputs are padded
 to MXU-aligned block multiples (pad contributes zeros to the K reduction, so
 results are exact) and the output is sliced back.
+
+``local_matmul(a, b)`` is the local GEMM under every distributed ds-array
+``@`` and every shmap schedule: it takes the stacked block tensors directly
+and dispatches to the fused Pallas ``stacked_matmul`` kernel on TPU (or in
+interpret mode), falling back to a stacked-block ``jnp.einsum`` off-TPU or
+for shapes/dtypes the MXU path does not cover.  The backend can be forced
+with the ``REPRO_GEMM`` env var (``pallas`` / ``interpret`` / ``einsum``) or
+the ``backend=`` argument — tests use ``interpret`` to assert the Pallas
+lowering without TPU hardware.
 """
 
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.blocking import round_up
-from repro.kernels.matmul.kernel import matmul_padded
+from repro.kernels.matmul.kernel import matmul_padded, stacked_matmul
+
+
+_PALLAS_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
+
+
+def _mxu_aligned(bn: int, bk: int, bm: int) -> bool:
+    """True when the block dims keep the MXU/VPU tiling constraints without
+    implicit padding: sublane multiples of 8, lane multiples of 128."""
+    return bn % 8 == 0 and bk % 128 == 0 and bm % 128 == 0
+
+
+def gemm_backend(bn: int, bk: int, bm: int, dtype,
+                 backend: Optional[str] = None) -> str:
+    """Resolve the local-GEMM backend: "pallas" | "interpret" | "einsum".
+
+    Priority: explicit ``backend`` arg > ``REPRO_GEMM`` env var > auto.  Auto
+    picks the compiled Pallas kernel exactly when it can win: TPU backend,
+    float dtype the fp32-accumulator path covers, MXU-aligned block dims.
+    Everything else (CPU/GPU, ints, ragged blocks) takes the einsum path,
+    which XLA fuses fine at small scale.
+    """
+    forced = (backend or os.environ.get("REPRO_GEMM", "auto")).lower()
+    if forced in ("pallas", "interpret", "einsum"):
+        return forced
+    if forced != "auto":
+        raise ValueError(
+            f"unknown GEMM backend {forced!r}: want pallas|interpret|einsum|auto")
+    if jax.default_backend() != "tpu":
+        return "einsum"
+    if dtype not in [jnp.dtype(d) for d in _PALLAS_DTYPES]:
+        return "einsum"
+    if not _mxu_aligned(bn, bk, bm):
+        return "einsum"
+    return "pallas"
+
+
+def local_matmul(a: jnp.ndarray, b: jnp.ndarray, *, out_dtype=None,
+                 backend: Optional[str] = None) -> jnp.ndarray:
+    """Blocked local GEMM on stacked tiles: (gi,gk,bn,bk) x (gk,gj,bk,bm).
+
+    The single entry point for every local contraction in the repo —
+    ``DsArray.__matmul__``, SUMMA and Cannon bodies — so the backend policy
+    lives in one place.
+    """
+    gi, gk, bn, bk = a.shape
+    gk2, gj, bk2, bm = b.shape
+    if gk != gk2 or bk != bk2:
+        raise ValueError(f"local_matmul inner mismatch {a.shape} x {b.shape}")
+    out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
+    mode = gemm_backend(bn, bk, bm, jnp.dtype(a.dtype), backend)
+    if mode == "einsum":
+        preferred = None
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            preferred = jnp.promote_types(a.dtype, jnp.float32)
+        out = jnp.einsum("ikab,kjbc->ijac", a, b,
+                         preferred_element_type=preferred)
+        return out.astype(out_dtype)
+    return stacked_matmul(a, b, out_dtype=jnp.dtype(out_dtype),
+                          interpret=(mode == "interpret"))
 
 
 def _pick_block(dim: int, target: int) -> int:

@@ -47,6 +47,15 @@ def test_shmap_collective_ops():
             assert np.allclose(transpose_pp(A, mesh).collect(), x.T)
             assert np.allclose(colsum_psum(A, mesh).collect(),
                                x.sum(0, keepdims=True), atol=1e-3)
+            # FILL-pad operands: matmul must re-zero, transpose must carry
+            # the pad state (regression: a dropped state let reductions skip
+            # the refill and count pad cells)
+            Af, Bf = A + 1.0, B - 2.0
+            assert np.allclose(summa_matmul(Af, Bf, mesh).collect(),
+                               (x + 1) @ (y - 2), atol=1e-3)
+            t = transpose_pp(Af, mesh)
+            assert t.pad_state == Af.pad_state
+            assert abs(float(t.sum()) - (x + 1).sum()) < 1e-2
         print("OK")
     """, devices=4)
     assert "OK" in out

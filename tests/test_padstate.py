@@ -1,0 +1,202 @@
+"""Pad-state tracking: claim soundness + remask elision on the jaxpr.
+
+Two families of assertions:
+
+* soundness — for every public op, the static claim must hold on the actual
+  pad region: ``pad_state == ZERO`` ⇒ pad exactly 0, ``FILL(v)`` ⇒ pad
+  exactly v (DIRTY claims nothing);
+* elision — an eager chain of 4 zero-preserving elementwise ops must emit
+  at most 1 mask/select pass (the seed emitted one per op), reductions on
+  identity-pad inputs emit none, and a non-identity pad costs exactly one
+  deferred pass at the consumer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DsArray, concat_rows, eye, from_array, full,
+                        pseudo_shuffle, random_array, zeros)
+from repro.core.dsarray import PAD_DIRTY, PAD_ZERO
+
+RNG = np.random.default_rng(11)
+
+
+def mk(n=13, m=9, bn=4, bm=3, shift=1.5):
+    x = (RNG.normal(size=(n, m)) + shift).astype(np.float32)
+    return x, from_array(x, (bn, bm))
+
+
+def assert_claim_holds(a: DsArray, label=""):
+    """pad_state == ZERO ⇒ pad region actually zero; FILL(v) ⇒ actually v."""
+    gn, gm, bn, bm = a.blocks.shape
+    g = np.asarray(a.blocks, np.float64).transpose(0, 2, 1, 3)
+    g = g.reshape(gn * bn, gm * bm)
+    n, m = a.shape
+    pad = np.concatenate([g[n:].ravel(), g[:n, m:].ravel()])
+    if a.pad_state.kind == "zero":
+        assert (pad == 0).all(), (label, a.pad_state, pad)
+    elif a.pad_state.kind == "fill":
+        assert (pad == float(a.pad_state.fill)).all(), (label, a.pad_state, pad)
+    # dirty claims nothing
+
+
+def test_every_public_op_keeps_its_claim():
+    x, a = mk()
+    y, b = mk()
+    idx = [0, 5, 12, 3]
+    cases = {
+        "from_array": a,
+        "add_ds": a + b,
+        "add_scalar": a + 1.5,          # FILL(1.5), no remask
+        "sub": a - b,
+        "rsub": 2.0 - a,
+        "mul": a * b,
+        "mul_scalar": a * 3.0,
+        "div_scalar": a / 2.0,
+        "rdiv": 3.0 / a,                # pad 3/0 = inf -> FILL(inf)
+        "pow": a ** 2,
+        "rpow": 2.0 ** a,               # FILL(1)
+        "neg": -a,
+        "sqrt": a.abs().sqrt(),
+        "exp": a.exp(),                 # FILL(1)
+        "abs": a.abs(),
+        "astype": (a + 1.0).astype(jnp.int32),
+        "transpose": (a + 1.0).T,
+        "sum0": a.sum(axis=0),
+        "sum1": (a + 1.0).sum(axis=1),  # deferred remask at the reduction
+        "max1": a.max(axis=1),          # FILL(-inf) result pad
+        "min0": a.min(axis=0),
+        "mean0": a.mean(axis=0),
+        "norm1": a.norm(axis=1),
+        "slice": (a + 1.0)[2:9, 1:7],
+        "filter": (a + 1.0)[idx],
+        "rechunk": (a + 1.0).rechunk((5, 2)),
+        "concat": concat_rows([a + 1.0, b]),
+        "matmul": (a + 1.0) @ (b.T + 2.0),
+        "map_blocks": a.map_blocks(lambda t: t * 2.0 + 1.0),   # FILL(1)
+        "shuffle": pseudo_shuffle(jax.random.PRNGKey(0),
+                                  from_array(x[:12], (4, 3)) + 1.0),
+        "zeros": zeros((7, 5), (3, 3)),
+        "full": full((7, 5), (3, 3), 4.5),
+        "eye": eye(7, (3, 3)),
+        "random": random_array(jax.random.PRNGKey(1), (11, 6), (4, 4)),
+    }
+    for label, res in cases.items():
+        if isinstance(res, DsArray):
+            assert_claim_holds(res, label)
+
+
+def test_fill_states_track_constants():
+    _, a = mk()
+    assert a.pad_state == PAD_ZERO
+    assert (a + 1.5).pad_state.fill == 1.5
+    assert (a + 1.5 - 1.5).pad_state.kind == "zero"
+    assert ((a + 2.0) * (a + 3.0)).pad_state.fill == 6.0
+    assert a.exp().pad_state.fill == 1.0
+    # nan pad (0/0) is unusable -> DIRTY
+    assert (a / a).pad_state == PAD_DIRTY
+    # a traced scalar operand cannot be probed -> DIRTY
+    seen = []
+
+    def f(t, s):
+        r = DsArray(t, a.grid) + s
+        seen.append(r.pad_state.kind)
+        return r.blocks
+
+    jax.make_jaxpr(f)(a.blocks, jnp.float32(2.0))
+    assert seen == ["dirty"]
+
+
+def test_dirty_chain_still_correct():
+    x, a = mk()
+    d = a / a                                    # DIRTY (nan pad)
+    s = np.asarray((d * 2.0 + 1.0).sum(axis=0).collect())
+    np.testing.assert_allclose(s, (x / x * 2.0 + 1.0).sum(0, keepdims=True),
+                               rtol=1e-5)
+    assert np.isfinite(s).all()
+
+
+def test_max_of_negative_data_refills():
+    """All-negative data: a zero pad would win max without the refill."""
+    x = -np.abs(RNG.normal(size=(10, 7))).astype(np.float32) - 1.0
+    a = from_array(x, (4, 3))
+    np.testing.assert_allclose(np.asarray(a.max(axis=1).collect()).ravel(),
+                               x.max(1), rtol=1e-6)
+    assert float(a.max()) == pytest.approx(float(x.max()))
+
+
+# ---------------------------------------------------------------------------
+# Remask elision, asserted on the jaxpr
+# ---------------------------------------------------------------------------
+
+
+def _count_selects(jaxpr) -> int:
+    cnt = 0
+
+    def visit(jx):
+        nonlocal cnt
+        for eqn in jx.eqns:
+            if eqn.primitive.name in ("select_n", "select"):
+                cnt += 1
+            for v in eqn.params.values():
+                for c in (v if isinstance(v, (list, tuple)) else [v]):
+                    sub = getattr(c, "jaxpr", None)
+                    if sub is not None:
+                        visit(sub)
+
+    visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+    return cnt
+
+
+def test_four_op_chain_has_at_most_one_mask_pass():
+    """The acceptance assertion: 4 zero-preserving elementwise ops, ≤1
+    select/mask pass in the trace (the seed emitted 4)."""
+    _, a = mk(64, 48, 8, 8)
+
+    def chain(p, q):
+        u = DsArray(p, a.grid)
+        v = DsArray(q, a.grid)
+        return (-((u + v) * 2.0 - v).abs()).blocks   # add, mul, sub, abs, neg
+
+    n_sel = _count_selects(jax.make_jaxpr(chain)(a.blocks, a.blocks))
+    assert n_sel <= 1, f"{n_sel} mask passes in a zero-preserving chain"
+
+
+def test_reduce_on_zero_pad_emits_no_mask_pass():
+    _, a = mk(64, 48, 8, 8)
+    jaxpr = jax.make_jaxpr(lambda p: DsArray(p, a.grid).sum())(a.blocks)
+    assert _count_selects(jaxpr) == 0
+
+
+def test_chain_into_reduce_pays_exactly_one_pass():
+    """FILL pad reaching a 0-identity reduction costs one deferred remask —
+    not one per op."""
+    _, a = mk(64, 48, 8, 8)
+
+    def f(p):
+        u = DsArray(p, a.grid)
+        return ((u + 1.0) * 2.0 + 3.0).sum()
+
+    assert _count_selects(jax.make_jaxpr(f)(a.blocks)) == 1
+
+
+def test_matmul_on_zero_pads_emits_no_mask_pass():
+    _, a = mk(64, 48, 8, 8)
+    _, b = mk(48, 32, 8, 8)
+
+    def f(p, q):
+        return (DsArray(p, a.grid) @ DsArray(q, b.grid)).blocks
+
+    assert _count_selects(jax.make_jaxpr(f)(a.blocks, b.blocks)) == 0
+
+
+def test_chain_values_match_numpy():
+    x, a = mk()
+    y, b = mk()
+    got = np.asarray((-((a + b) * 2.0 - b).abs()).collect())
+    np.testing.assert_allclose(got, -np.abs((x + y) * 2.0 - y), rtol=1e-5)
+    got2 = np.asarray(((a + 1.5) * 2.0).sum(axis=0).collect())
+    np.testing.assert_allclose(got2, ((x + 1.5) * 2.0).sum(0, keepdims=True),
+                               rtol=1e-5)
