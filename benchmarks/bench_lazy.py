@@ -1,0 +1,86 @@
+"""Lazy-plan fusion vs eager dispatch on an elementwise chain.
+
+The lazy layer's core claim (ISSUE 3 acceptance): a 6-op elementwise chain
+recorded under ``repro.lazy()`` compiles to ONE fused per-block body — one
+HBM read of the operand, one write of the result — while the eager path
+dispatches every op separately, reading and writing the full stacked tensor
+each time.  This bench measures both on the same data at 1024² and 4096²
+and reports the measured speedup next to the cost-model prediction
+(``costmodel.lazy_chain_hbm_bytes``: 2 passes fused vs 2·L eager, so the
+memory-bound ceiling is ~L×).
+
+The lazy timing includes recording + plan lookup per call (the compiled
+plan is cached by structural hash after the first call), so the reported
+ratio is end-to-end, not kernel-only.
+
+``run()`` fills ``JSON_RECORDS`` — ``{"op", "size", "us_per_call",
+"backend", "speedup"}`` — which ``benchmarks/run.py`` dumps to
+``BENCH_lazy.json`` for the cross-PR trajectory.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+import repro
+from benchmarks.common import Row, time_call
+from repro.core import costmodel, from_array, plan
+
+# filled by run(); dumped by benchmarks/run.py as BENCH_lazy.json
+JSON_RECORDS: List[Dict] = []
+
+CHAIN_OPS = 6
+
+
+def _chain(a):
+    # add, mul, sub, abs, mul, add — 6 elementwise ops, zero-preserving-free
+    # mix (two FILL pads in the middle) so pad bookkeeping is exercised too
+    return ((a + 1.0) * 2.0 - 3.0).abs() * 0.5 + 0.25
+
+
+def _record(op: str, size: int, us: float, speedup: float = 0.0) -> None:
+    JSON_RECORDS.append({"op": op, "size": size, "us_per_call": us,
+                         "backend": jax.default_backend(),
+                         "speedup": round(speedup, 3)})
+
+
+def run() -> List[Row]:
+    JSON_RECORDS.clear()
+    rows: List[Row] = []
+    for size, block, iters in ((1024, 256, 5), (4096, 512, 3)):
+        rng = np.random.default_rng(size)
+        x = rng.normal(size=(size, size)).astype(np.float32)
+        a = from_array(x, (block, block))
+
+        def eager():
+            return _chain(a).blocks
+
+        def lazy():
+            with repro.lazy():
+                r = _chain(a)
+            return r.compute().blocks
+
+        ok = np.allclose(np.asarray(eager()), np.asarray(lazy()), atol=1e-5)
+        t_e = time_call(eager, warmup=1, iters=iters)
+        t_l = time_call(lazy, warmup=1, iters=iters)
+        speed = t_e / t_l
+        _record(f"chain{CHAIN_OPS}_eager", size, t_e)
+        _record(f"chain{CHAIN_OPS}_lazy", size, t_l, speed)
+        with repro.lazy():
+            stats = plan.plan_for(_chain(a)).stats
+        saved = costmodel.lazy_chain_hbm_saved(CHAIN_OPS, size, size, 4)
+        rows.append((f"lazy/measured/chain{CHAIN_OPS}_eager_{size}", t_e,
+                     f"launches={costmodel.lazy_chain_launches(CHAIN_OPS, False)}"))
+        rows.append((f"lazy/measured/chain{CHAIN_OPS}_lazy_{size}", t_l,
+                     f"speedup={speed:.2f}x;allclose={ok};"
+                     f"nodes={stats['nodes_before']}->{stats['nodes_after']};"
+                     f"launches=1;model_hbm_saved={saved:.3e}B"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,10 +1,13 @@
 """Benchmark driver — one section per paper figure (+ beyond-paper tables).
 
 Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_matmul.json``
-(one record per measured GEMM: op, size, us_per_call, backend) next to the
-CSV so the matmul perf trajectory is machine-trackable across PRs.  Roofline
-tables come from the dry-run artifacts (see ``benchmarks/report_roofline.py``),
-not from here, since they require the 512-device lowering.
+(one record per measured GEMM: op, size, us_per_call, backend, interpret)
+and ``BENCH_lazy.json`` (lazy-vs-eager elementwise chains) next to the CSV
+so the perf trajectories are machine-trackable across PRs.  GEMM records
+with ``interpret: true`` are CPU emulations of the Pallas kernel and are
+excluded from headline comparisons.  Roofline tables come from the dry-run
+artifacts (see ``benchmarks/report_roofline.py``), not from here, since
+they require the 512-device lowering.
 """
 
 from __future__ import annotations
@@ -14,19 +17,25 @@ import os
 
 
 def main() -> None:
-    from benchmarks import (bench_als, bench_kmeans, bench_matmul,
-                            bench_shuffle, bench_slicing, bench_transpose)
+    from benchmarks import (bench_als, bench_kmeans, bench_lazy,
+                            bench_matmul, bench_shuffle, bench_slicing,
+                            bench_transpose)
     from benchmarks.common import emit
 
     print("name,us_per_call,derived")
     for mod in (bench_transpose, bench_als, bench_shuffle, bench_slicing,
-                bench_kmeans, bench_matmul):
+                bench_kmeans, bench_matmul, bench_lazy):
         emit(mod.run())
 
     out = os.environ.get("REPRO_BENCH_JSON", "BENCH_matmul.json")
     with open(out, "w") as f:
         json.dump(bench_matmul.JSON_RECORDS, f, indent=2)
     print(f"# wrote {out} ({len(bench_matmul.JSON_RECORDS)} records)")
+
+    lazy_out = os.environ.get("REPRO_BENCH_LAZY_JSON", "BENCH_lazy.json")
+    with open(lazy_out, "w") as f:
+        json.dump(bench_lazy.JSON_RECORDS, f, indent=2)
+    print(f"# wrote {lazy_out} ({len(bench_lazy.JSON_RECORDS)} records)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,11 @@
+"""repro — ds-array reproduction on JAX/TPU.
+
+Top-level conveniences: ``repro.lazy()`` arms lazy recording for ds-array
+ops (the paper's task-graph view; see ``repro.core.expr``), and the ds-array
+type/constructors re-export from ``repro.core``.
+"""
+
+from repro.core.expr import LazyDsArray, lazy
+from repro.core.dsarray import DsArray, from_array
+
+__all__ = ["lazy", "LazyDsArray", "DsArray", "from_array"]

@@ -25,14 +25,30 @@ from repro.core.dsarray import DsArray, from_array
 from repro.core.dataset_baseline import Dataset
 
 
+def _row_sq_norms(x: DsArray) -> jnp.ndarray:
+    """Per-row squared norms ``(gn, bn)`` via ONE fused lazy plan.
+
+    ``(x*x).sum(axis=1)`` recorded lazily lowers to a single jitted
+    square+row-reduce pass over the stacked tensor (mul fused into the
+    reduction, zero remasks on the ZERO pad).  The assignment step is
+    ``‖x‖² − 2·x·cᵀ + ‖c‖²``: ``‖x‖²`` does not change across Lloyd
+    iterations, so it is computed once here and threaded through
+    ``_center_stats`` instead of being re-derived per iteration (and the
+    structurally-hashed plan is shared by fit/predict/score)."""
+    s = (x.lazy() * x).sum(axis=1).compute()        # (n, 1) ds-array
+    gn, bn = x.blocks.shape[0], x.blocks.shape[2]
+    return s.blocks.reshape(gn, bn).astype(jnp.float32)
+
+
 def _center_stats(blocks: jnp.ndarray, row_valid: jnp.ndarray,
-                  centers: jnp.ndarray, block_shape: Tuple[int, int],
+                  centers: jnp.ndarray, x_sq: jnp.ndarray,
                   n_cols: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Distance + assign + partial sums over the stacked block tensor.
 
     blocks:    (gn, gm, bn, bm) feature-blocked samples (pad = 0)
     row_valid: (gn, bn) bool
     centers:   (k, m_padded)    pad columns zero
+    x_sq:      (gn, bn) per-row squared norms (see ``_row_sq_norms``)
     returns (labels (gn, bn), sums (k, m_padded), counts (k,))
     """
     gn, gm, bn, bm = blocks.shape
@@ -40,8 +56,6 @@ def _center_stats(blocks: jnp.ndarray, row_valid: jnp.ndarray,
     c_blocks = centers.reshape(k, gm, bm)
     # x . c^T summed over feature blocks: (gn, bn, k)
     dots = jnp.einsum("ijab,kjb->iak", blocks, c_blocks,
-                      preferred_element_type=jnp.float32)
-    x_sq = jnp.einsum("ijab,ijab->ia", blocks, blocks,
                       preferred_element_type=jnp.float32)
     c_sq = jnp.einsum("km,km->k", centers, centers,
                       preferred_element_type=jnp.float32)
@@ -57,7 +71,7 @@ def _center_stats(blocks: jnp.ndarray, row_valid: jnp.ndarray,
 
 
 @functools.partial(jax.jit, static_argnames=("n_cols", "tol", "max_iter"))
-def _kmeans_run(blocks, centers0, row_valid, n_cols, tol, max_iter):
+def _kmeans_run(blocks, centers0, row_valid, x_sq, n_cols, tol, max_iter):
     """Lloyd iterations as a jitted while_loop (module-level so repeated
     ``fit`` calls hit the jit cache)."""
 
@@ -68,7 +82,7 @@ def _kmeans_run(blocks, centers0, row_valid, n_cols, tol, max_iter):
     def body(state):
         centers, _, it = state
         _, sums, counts = _center_stats(blocks, row_valid, centers,
-                                        None, n_cols)
+                                        x_sq, n_cols)
         safe = jnp.maximum(counts, 1.0)[:, None]
         new = jnp.where(counts[:, None] > 0, sums / safe, centers)
         shift = jnp.sqrt(((new - centers) ** 2).sum())
@@ -164,7 +178,10 @@ class KMeans:
         # stacked tensor; no x.collect() — the array never leaves the devices)
         init = _kmeanspp_init_ds(x, self.n_clusters,
                                  np.random.default_rng(self.seed), row_valid)
-        centers, _, iters = _kmeans_run(x.blocks, init, row_valid, m,
+        # assignment-step invariant ‖x‖², hoisted out of the Lloyd loop and
+        # computed by one fused lazy plan (was re-derived every iteration)
+        x_sq = _row_sq_norms(x)
+        centers, _, iters = _kmeans_run(x.blocks, init, row_valid, x_sq, m,
                                         self.tol, self.max_iter)
         self.centers_ = centers[:, :m]
         self.n_iter_ = int(iters)
@@ -180,7 +197,7 @@ class KMeans:
         m_pad = gm * bm
         centers = jnp.pad(self.centers_, ((0, 0), (0, m_pad - self.centers_.shape[1])))
         labels, _, _ = _center_stats(x.blocks, self._row_valid(x), centers,
-                                     x.block_shape, x.shape[1])
+                                     _row_sq_norms(x), x.shape[1])
         flat = labels.reshape(-1, 1).astype(jnp.int32)[: x.shape[0]]
         return from_array(flat, (x.block_shape[0], 1))
 
@@ -192,7 +209,7 @@ class KMeans:
         centers = jnp.pad(self.centers_, ((0, 0), (0, m_pad - self.centers_.shape[1])))
         c_blocks = centers.reshape(-1, gm, bm)
         dots = jnp.einsum("ijab,kjb->iak", x.blocks, c_blocks)
-        x_sq = jnp.einsum("ijab,ijab->ia", x.blocks, x.blocks)
+        x_sq = _row_sq_norms(x)
         c_sq = jnp.einsum("km,km->k", centers, centers)
         dist = x_sq[..., None] - 2 * dots + c_sq[None, None, :]
         best = dist.min(axis=-1)

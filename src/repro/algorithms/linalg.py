@@ -63,24 +63,24 @@ def pca(x: DsArray, n_components: int, n_iter: int = 30, seed: int = 0
     Returns (components (k, m), explained_variance (k,)).  Centers the data
     via the ds-array mean (paper Fig. 5 column reduction) subtracted through
     a block-native row broadcast, then runs orthogonal (power) iteration on
-    the Gram operator.  The whole iteration body — two ds-array matmuls plus
-    the (m, k) QR — is one jitted function, so the loop stays on device and
-    the only host round-trip per call is the loop counter.
+    the Gram operator.  The iteration body ``xcᵀ @ (xc @ q)`` is recorded
+    through the lazy expression layer: the optimizer folds the transpose
+    into the GEMM block-index maps (``matmul_ta`` — the transposed stacked
+    tensor is never materialized in HBM) and the structurally-hashed plan
+    compiles ONCE and replays every iteration; only the small (m, k) QR
+    runs outside the plan.
     """
     n, m = x.shape
     mean = x.mean(axis=0)                         # (1, m) ds-array
     xc = x - _broadcast_rows(mean, n, x.block_shape[0])
     bq = (x.block_shape[1], n_components)
 
-    @jax.jit
-    def step(xc: DsArray, q: jnp.ndarray) -> jnp.ndarray:
-        y = xc.transpose() @ (xc @ from_array(q, bq))   # (m, k) ds-array
-        return jnp.linalg.qr(y.collect())[0]            # (m, k): small, local
-
+    xl = xc.lazy()
     q = jnp.linalg.qr(
         jax.random.normal(jax.random.PRNGKey(seed), (m, n_components)))[0]
     for _ in range(n_iter):
-        q = step(xc, q)
+        y = (xl.T @ (xl @ from_array(q, bq))).compute()  # (m, k) ds-array
+        q = jnp.linalg.qr(y.collect())[0]                # (m, k): small, local
     proj = xc @ from_array(q, bq)                 # (n, k)
     var = jnp.asarray((proj * proj).sum(axis=0).collect()).ravel() / (n - 1)
     order = jnp.argsort(-var)

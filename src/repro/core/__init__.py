@@ -11,17 +11,22 @@ from repro.core.dsarray import (
     PAD_DIRTY,
     PAD_ZERO,
     PadState,
+    apply_along_axis,
     concat_rows,
     eye,
     from_array,
     full,
     identity_like,
+    matmul_ta,
     pad_state_of,
     random_array,
     zeros,
 )
 from repro.core.shuffle import exact_shuffle, pseudo_shuffle
 from repro.core import compat, costmodel, structural
+from repro.core import expr, plan
+from repro.core.expr import LazyDsArray, lazy
+from repro.core.plan import compute, compute_multi
 from repro.core.structural import gram, take_cols, take_rows
 from repro.core.dataset_baseline import Dataset, Subset, TaskCounter
 
@@ -31,5 +36,7 @@ __all__ = [
     "from_array", "zeros", "full", "eye", "identity_like", "random_array",
     "concat_rows", "pseudo_shuffle", "exact_shuffle", "costmodel",
     "compat", "structural", "gram", "take_rows", "take_cols",
+    "apply_along_axis", "matmul_ta",
+    "expr", "plan", "LazyDsArray", "lazy", "compute", "compute_multi",
     "ceil_div", "round_up",
 ]

@@ -243,3 +243,56 @@ def chain_remask_passes(n_ops: int, pad_tracked: bool = True,
     if not pad_tracked:
         return n_ops
     return 0 if zero_preserving else min(1, n_ops)
+
+
+# ---------------------------------------------------------------------------
+# Lazy-plan laws: what record→optimize→fuse buys over eager dispatch.
+#
+# An eager elementwise chain of L ops issues L dispatches, each reading and
+# writing the full padded stacked tensor in HBM; the lazy plan fuses the
+# chain into ONE per-block function inside one jit, so the tensor is read
+# once and only the final result is written.  These laws quantify the three
+# axes the optimizer reports: plan size (nodes), HBM traffic, and dispatch
+# (launch) count.
+# ---------------------------------------------------------------------------
+
+
+def plan_nodes_after_fusion(n_elementwise: int, n_other: int = 0) -> int:
+    """Non-leaf plan nodes after optimization: a run of ``n_elementwise``
+    fusible Blockwise nodes collapses to 1; reductions/matmuls/structural
+    nodes (``n_other``) survive as fusion barriers."""
+    return (1 if n_elementwise else 0) + n_other
+
+
+def lazy_chain_hbm_bytes(n_ops: int, n: int, m: int, e: int,
+                         fused: bool = True) -> float:
+    """HBM traffic of an ``n_ops`` elementwise chain over an (n, m) array,
+    element size ``e``.  Eager: every op reads its input and writes its
+    result — ``2·L`` passes.  Fused: one read of the operand + one write of
+    the result, independent of chain length (intermediates live in
+    registers/VMEM inside the single fused body)."""
+    per_pass = float(n) * m * e
+    if fused:
+        return 2.0 * per_pass
+    return 2.0 * n_ops * per_pass
+
+
+def lazy_chain_hbm_saved(n_ops: int, n: int, m: int, e: int) -> float:
+    """Bytes the fused plan deletes vs eager dispatch (the headline the
+    ``bench_lazy`` speedup should track on memory-bound chains)."""
+    return (lazy_chain_hbm_bytes(n_ops, n, m, e, fused=False)
+            - lazy_chain_hbm_bytes(n_ops, n, m, e, fused=True))
+
+
+def lazy_chain_launches(n_ops: int, fused: bool = True) -> int:
+    """Dispatch law: the compiled plan is ONE launch however long the chain
+    (and a cache hit skips re-tracing); eager pays one per op — the TPU
+    analogue of the paper's per-task scheduler overhead (Figs. 6/8)."""
+    return 1 if fused else n_ops
+
+
+def merged_reduction_passes(n_reductions: int, merged: bool = True) -> int:
+    """Sibling reductions over the same operand: the plan evaluates the
+    shared operand (and any fused chain feeding it) once for all of them;
+    eager evaluates it per reduction."""
+    return 1 if merged else max(1, n_reductions)

@@ -42,6 +42,9 @@ elementwise chain (L)   L remask passes           0 remask passes (ZERO-
                                                     preserving) or 1 at the
                                                     consuming reduction
 ``_reduce`` refill      1 select pass always      0 when pad == identity
+``apply_along_axis``    collect + host loop       1 nested-vmap call in
+                                                    block layout
+``exact_shuffle``       O(N) collect + take       1 per-block row gather
 ======================  ========================  ==========================
 
 Remask-elision rules: a binary/unary op on known pad states yields the op of
@@ -49,6 +52,26 @@ the pad constants (probed on 0-d values at trace time) — nan or a traced
 operand demotes to DIRTY; ``_reduce`` refills only when the pad state
 differs from the reduction identity; ``__matmul__`` and every structural op
 call ``ensure_zero_pad()`` (a no-op on ZERO) before touching raw blocks.
+
+Lazy plans (``core.expr`` / ``core.plan``): inside ``repro.lazy():`` — or
+from ``a.lazy()`` — every op above records an ``Expr`` node instead of
+dispatching, and ``compute()`` optimizes the whole DAG before lowering it
+back onto these eager primitives in one ``jax.jit``.  Fusion rules:
+
+* a run of elementwise/``map_blocks`` nodes whose intermediates have a
+  single consumer composes into ONE per-block function — an L-op chain is
+  one launch, one HBM read + one write (eager: L dispatches, 2·L passes);
+* pad states propagate symbolically across the plan (the composed function
+  is re-probed on the leaf pad constants), so a chain pays at most one
+  remask at its consumer — zero when it stays ZERO-preserving;
+* ``T(T(x)) → x``; elementwise over all-transposed operands hoists the
+  transpose; ``(A.T) @ B`` folds into the fused Pallas GEMM with the
+  transpose absorbed by block-index maps (``matmul_ta`` — the transposed
+  stacked tensor never materializes);
+* hash-consing shares identical subexpressions, so sibling reductions over
+  the same operand evaluate it once; compiled plans are cached by
+  structural hash (node kinds + static params + leaf geometry/dtype/pad,
+  never data), so hot-loop bodies compile once and replay.
 
 None of the block-native paths form a rank-2 global ``(n, m)`` tensor, so
 they compose with ``jit``/sharding without pulling the array onto one host,
@@ -60,6 +83,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import sys
 from typing import Any, Callable, Optional, Sequence, Tuple, Union
 
 import jax
@@ -70,6 +94,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.blocking import BlockGrid, ceil_div, round_up
 
 Number = Union[int, float]
+
+
+def _lazy_mode() -> bool:
+    """True when ``repro.lazy()`` recording is armed (see ``core.expr``).
+
+    Checked at the top of every recordable op; resolved through
+    ``sys.modules`` so arrays never pay an import until the lazy layer has
+    actually been loaded (it cannot be active before it is imported).
+    """
+    expr = sys.modules.get("repro.core.expr")
+    return expr is not None and expr.lazy_active()
 
 
 def _axis_mask(size: int, g: int, b: int) -> jnp.ndarray:
@@ -301,8 +336,20 @@ class DsArray:
         gn, gm, bn, bm = me.blocks.shape
         return me.blocks.transpose(0, 2, 1, 3).reshape(gn * bn, gm * bm)
 
+    # -- laziness -------------------------------------------------------------
+    def lazy(self) -> "LazyDsArray":
+        """This array lifted into the lazy expression layer: subsequent ops
+        record an ``Expr`` plan that ``compute()`` optimizes (elementwise
+        fusion, transpose-folded GEMM, plan-wide pad propagation) before
+        running.  See ``core.expr`` / ``core.plan``."""
+        from repro.core import expr
+        return expr.lift_lazy(self)
+
     # -- elementwise ----------------------------------------------------------
     def _binary(self, other, op: Callable, reverse: bool = False) -> "DsArray":
+        if _lazy_mode():
+            from repro.core import expr
+            return expr.lift_lazy(self)._binary(other, op, reverse)
         me = self
         if isinstance(other, DsArray):
             if other.shape != self.shape or other.block_shape != self.block_shape:
@@ -370,6 +417,9 @@ class DsArray:
         zero-preserving fns (neg, sqrt, abs, ...) keep ZERO with no mask pass.
         Non-elementwise fns must pass ``pad=`` explicitly (``PAD_DIRTY`` when
         unknown); the probe cannot see position dependence."""
+        if _lazy_mode():
+            from repro.core import expr
+            return expr.lift_lazy(self).map_blocks(fn, pad=pad)
         out = fn(self.blocks)
         if out.shape != self.blocks.shape:
             raise ValueError("map_blocks must preserve block shapes")
@@ -387,6 +437,9 @@ class DsArray:
         return self.map_blocks(jnp.abs)
 
     def astype(self, dtype) -> "DsArray":
+        if _lazy_mode():
+            from repro.core import expr
+            return expr.lift_lazy(self).astype(dtype)
         pad = self.pad_state
         if pad.kind == "fill":
             # the physical pad is cast too; re-derive the constant the same way
@@ -404,6 +457,9 @@ class DsArray:
         grid-dim swap to a single all-to-all (vs. the Dataset baseline's
         N^2 + N scatter/gather — see core/dataset_baseline.py).
         """
+        if _lazy_mode():
+            from repro.core import expr
+            return expr.lift_lazy(self).transpose()
         out = jnp.swapaxes(jnp.swapaxes(self.blocks, 0, 1), 2, 3)
         return DsArray(out, self.grid.transpose(), self.pad_state)
 
@@ -429,6 +485,9 @@ class DsArray:
         global ``(n, m)`` intermediate is formed either way (see
         ``core.structural.rechunk``).
         """
+        if _lazy_mode():
+            from repro.core import expr
+            return expr.lift_lazy(self).rechunk(block_shape)
         from repro.core import structural
         return structural.rechunk(self, tuple(block_shape))
 
@@ -446,6 +505,10 @@ class DsArray:
         result pad is therefore exactly zero.
         """
         from repro.kernels.matmul.ops import local_matmul
+        if _lazy_mode():
+            from repro.core import expr
+            if isinstance(other, (DsArray, expr.LazyDsArray)):
+                return expr.lift_lazy(self) @ other
         if not isinstance(other, DsArray):
             return NotImplemented
         if self.shape[1] != other.shape[0]:
@@ -467,6 +530,9 @@ class DsArray:
 
     # -- reductions ---------------------------------------------------------
     def _reduce(self, op: str, axis: Optional[int]) -> Union["DsArray", jnp.ndarray]:
+        if _lazy_mode():
+            from repro.core import expr
+            return expr.lift_lazy(self)._reduce(op, axis)
         fill = {"sum": 0, "max": -jnp.inf, "min": jnp.inf}[op]
         if jnp.issubdtype(self.dtype, jnp.integer):
             fill = {"sum": 0,
@@ -525,12 +591,19 @@ class DsArray:
         return s / denom
 
     def norm(self, axis: Optional[int] = None):
-        """Euclidean norm along an axis (paper's ``w.norm(axis=1)`` example)."""
-        sq = self._binary(self, jnp.multiply)  # x*x keeps pad zero
-        s = sq.sum(axis)
-        if isinstance(s, DsArray):
-            return s.sqrt()
-        return jnp.sqrt(s)
+        """Euclidean norm along an axis (paper's ``w.norm(axis=1)`` example).
+
+        Per-axis norms are expressed through :func:`apply_along_axis` (the
+        paper's 1-D-slice API): one vmapped per-slice call in block layout,
+        no ``collect()``.  The all-elements norm stays a fused square+sum.
+        """
+        if _lazy_mode():
+            from repro.core import expr
+            return expr.lift_lazy(self).norm(axis)
+        if axis is None:
+            sq = self._binary(self, jnp.multiply)  # x*x keeps pad zero
+            return jnp.sqrt(sq.sum())
+        return apply_along_axis(lambda v: jnp.sqrt(jnp.sum(v * v)), axis, self)
 
     # -- indexing ------------------------------------------------------------
     def __getitem__(self, key) -> "DsArray":
@@ -544,6 +617,9 @@ class DsArray:
         axis (``core.structural.getitem``) — the global array is never
         materialized and sharding survives.
         """
+        if _lazy_mode():
+            from repro.core import expr
+            return expr.lift_lazy(self)[key]
         from repro.core import structural
         return structural.getitem(self, key)
 
@@ -564,6 +640,86 @@ class DsArray:
 
     def sharding_spec(self, axes=("data", "model")) -> P:
         return P(axes[0], axes[1], None, None)
+
+
+# ---------------------------------------------------------------------------
+# Derived block-native routines
+# ---------------------------------------------------------------------------
+
+
+def matmul_ta(a: DsArray, b: DsArray) -> DsArray:
+    """``Aᵀ @ B`` with the transpose folded into the GEMM.
+
+    The lazy optimizer rewrites ``MatMul(Transpose(a), b)`` to this: ``a``
+    stays in its untransposed stacked layout and ``local_matmul`` absorbs
+    the transpose into the contraction (block-index maps on the Pallas path,
+    a relabeled einsum otherwise), so the transposed stacked tensor — a full
+    HBM relayout under eager ``a.T @ b`` — is never materialized.  Also
+    callable eagerly (the PCA Gram-vector products use it every iteration).
+    """
+    from repro.core import structural
+    from repro.kernels.matmul.ops import local_matmul
+    if not isinstance(b, DsArray):
+        raise TypeError("matmul_ta wants DsArray operands")
+    if a.shape[0] != b.shape[0]:
+        raise ValueError(f"matmul_ta shape mismatch {a.shape}ᵀ @ {b.shape}")
+    if a.block_shape[0] != b.block_shape[0]:
+        b = structural.rechunk(b, (a.block_shape[0], b.block_shape[1]))
+    if a.stacked_grid[0] != b.stacked_grid[0]:
+        k = max(a.stacked_grid[0], b.stacked_grid[0])
+        a = a._pad_grid_to((k, a.stacked_grid[1]))
+        b = b._pad_grid_to((k, b.stacked_grid[1]))
+    a, b = a.ensure_zero_pad(), b.ensure_zero_pad()
+    out = local_matmul(a.blocks, b.blocks,
+                       out_dtype=jnp.promote_types(a.dtype, b.dtype),
+                       transpose_a=True)
+    grid = BlockGrid((a.shape[1], b.shape[1]),
+                     (a.block_shape[1], b.block_shape[1]))
+    return DsArray(out, grid, PAD_ZERO)
+
+
+def apply_along_axis(fn: Callable[[jnp.ndarray], jnp.ndarray], axis: int,
+                     a: DsArray) -> DsArray:
+    """Paper §4.2.3 ``apply_along_axis``: ``fn`` over every 1-D slice.
+
+    ``axis=1`` applies ``fn`` to each row, ``axis=0`` to each column; ``fn``
+    must map a 1-D vector to a scalar or a fixed-length 1-D vector.  Block-
+    native: the stacked tensor is regrouped so each slice is contiguous in
+    block layout (rank-3, grid dim leading — never the global ``(n, m)``
+    rank-2 form) and ``fn`` runs as ONE nested-vmap call over all slices; no
+    ``collect()``, and sharding is re-placed on the result.
+    """
+    from repro.core import structural
+    if axis not in (0, 1):
+        raise ValueError(f"axis must be 0 or 1, got {axis}")
+    a2 = a.ensure_zero_pad()
+    gn, gm, bn, bm = a2.blocks.shape
+    n, m = a2.shape
+    if axis == 1:
+        rows = a2.blocks.transpose(0, 2, 1, 3).reshape(gn, bn, gm * bm)[..., :m]
+        out = jax.vmap(jax.vmap(fn))(rows)              # (gn, bn[, k])
+        if out.ndim not in (2, 3):
+            raise ValueError("fn must return a scalar or 1-D vector")
+        if out.ndim == 2:
+            out = out[..., None]
+        k = out.shape[-1]
+        blocks = out[:, None]                           # (gn, 1, bn, k)
+        if gn * bn > n:     # fn of an all-pad row is garbage: mask it
+            blocks = structural._mask_axes(blocks, n=n)
+        res = DsArray(blocks, BlockGrid((n, k), (bn, k)), PAD_ZERO)
+    else:
+        cols = a2.blocks.transpose(1, 3, 0, 2).reshape(gm, bm, gn * bn)[..., :n]
+        out = jax.vmap(jax.vmap(fn))(cols)              # (gm, bm[, k])
+        if out.ndim not in (2, 3):
+            raise ValueError("fn must return a scalar or 1-D vector")
+        if out.ndim == 2:
+            out = out[..., None]
+        k = out.shape[-1]
+        blocks = out.transpose(0, 2, 1)[None]           # (1, gm, k, bm)
+        if gm * bm > m:
+            blocks = structural._mask_axes(blocks, m=m)
+        res = DsArray(blocks, BlockGrid((k, m), (k, bm)), PAD_ZERO)
+    return structural.preserve_sharding(res, a.blocks)
 
 
 # ---------------------------------------------------------------------------
@@ -592,8 +748,10 @@ def zeros(shape: Tuple[int, int], block_shape: Tuple[int, int], dtype=jnp.float3
 
 
 def full(shape, block_shape, fill_value, dtype=jnp.float32) -> DsArray:
-    z = zeros(shape, block_shape, dtype)
-    return z + fill_value
+    # built directly (not zeros+add) so creation stays eager under repro.lazy()
+    grid = BlockGrid(tuple(shape), tuple(block_shape))
+    blocks = jnp.full(grid.stacked_shape, fill_value, dtype)
+    return DsArray(blocks, grid, pad_state_of(fill_value))
 
 
 def eye(n: int, block_shape: Tuple[int, int], dtype=jnp.float32) -> DsArray:
@@ -639,5 +797,8 @@ def concat_rows(arrays: Sequence[DsArray]) -> DsArray:
     stacked directly (O(1) data movement); otherwise parts are re-tiled with
     per-block gathers.  See ``core.structural.concat_rows``.
     """
+    if _lazy_mode():
+        from repro.core import expr
+        return expr.record_concat(list(arrays))
     from repro.core import structural
     return structural.concat_rows(arrays)

@@ -1,0 +1,851 @@
+"""Lazy expression IR for ds-array op chains: record now, optimize+fuse later.
+
+The paper's ds-array is lazy by construction — every op is a PyCOMPSs task
+returning futures, and the runtime sees the whole task graph before anything
+runs.  The eager stacked-tensor port lost that: each ``DsArray`` op was its
+own dispatch (its own XLA program when un-jitted), and the pad-state
+machinery of PR 2 could only elide masks one op at a time.  This module
+restores the graph view, in the style of dask's ``dask_expr``: ops are
+**recorded** as ``Expr`` nodes, a :class:`LazyDsArray` facade mirrors the
+``DsArray`` API over an expression, and ``compute()`` (in ``core.plan``)
+optimizes the whole DAG — fusing elementwise runs into one per-block
+function, folding transposes into GEMM index maps, sharing subexpressions —
+before lowering it onto the existing eager block-native primitives inside a
+single ``jax.jit``.
+
+Opt-in is explicit, two ways::
+
+    with repro.lazy():                # every DsArray op records
+        y = ((a + b) * 2.0).abs().sum(axis=0)
+    y = y.compute()
+
+    y = a.lazy() + b                  # or lift one array into the lazy world
+    y.compute()
+
+Node inventory (each node knows how to ``lower`` itself onto the eager
+primitives, and its output metadata — grid, dtype, pad state — is inferred
+at record time by running that lowering under ``jax.eval_shape``, so the
+static pad-state propagation of the eager layer carries over symbolically to
+whole plans):
+
+==============  ==========================================================
+node            records
+==============  ==========================================================
+``Leaf``        a concrete DsArray (plan input)
+``ArrayLeaf``   a raw array input (index vectors, PRNG keys)
+``Blockwise``   elementwise / map_blocks over aligned operands (fusible)
+``Transpose``   block transpose + grid swap
+``PadGrid``     stacked-grid growth (operand alignment)
+``AsType``      dtype cast
+``MatMul``      blocked GEMM, optionally with A-transpose folded in
+``Reduce``      sum/max/min over an axis (or all)
+``GetItem``     slice / integer-array selection
+``Rechunk``     re-blocking
+``ConcatRows``  vertical concat
+``Shuffle``     pseudo / exact row shuffle
+==============  ==========================================================
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Callable, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocking import BlockGrid
+from repro.core.dsarray import (DsArray, PAD_DIRTY, PadState, matmul_ta,
+                                pad_state_of)
+
+Number = Union[int, float]
+
+# ---------------------------------------------------------------------------
+# Lazy-mode switch.
+#
+# ``lazy()`` arms recording: DsArray entry points (``_binary``, ``map_blocks``,
+# ``transpose``, ``__matmul__``, ``_reduce``, ``__getitem__``, ``rechunk``,
+# ``astype``, ``norm``) check ``lazy_active()`` and return LazyDsArray
+# recordings instead of eager results.  ``suspend_lazy()`` masks the flag —
+# used by metadata inference and plan execution, which trace the very same
+# eager methods and must not re-enter the recorder.
+# ---------------------------------------------------------------------------
+
+_STATE = threading.local()
+
+
+def _depth(name: str) -> int:
+    return getattr(_STATE, name, 0)
+
+
+def lazy_active() -> bool:
+    return _depth("lazy") > 0 and _depth("suspend") == 0
+
+
+@contextlib.contextmanager
+def lazy():
+    """Context manager arming lazy recording for DsArray ops (re-entrant)."""
+    _STATE.lazy = _depth("lazy") + 1
+    try:
+        yield
+    finally:
+        _STATE.lazy = _depth("lazy") - 1
+
+
+@contextlib.contextmanager
+def suspend_lazy():
+    """Mask ``lazy_active()`` while tracing/lowering eager primitives."""
+    _STATE.suspend = _depth("suspend") + 1
+    try:
+        yield
+    finally:
+        _STATE.suspend = _depth("suspend") - 1
+
+
+# ---------------------------------------------------------------------------
+# Expression nodes
+# ---------------------------------------------------------------------------
+
+
+def _is_ds(meta) -> bool:
+    return isinstance(meta, DsArray)
+
+
+def _meta_sig(meta) -> tuple:
+    """Hashable signature of a node's output metadata."""
+    if _is_ds(meta):
+        return ("ds", tuple(meta.blocks.shape), str(meta.blocks.dtype),
+                meta.grid, meta.pad_state)
+    return ("arr", tuple(meta.shape), str(meta.dtype))
+
+
+# Metadata memo: a node's meta is a pure function of (class, static params,
+# child metas), so inference runs ONCE per distinct structure instead of per
+# recorded node — re-recording the same hot-loop body (pca power iteration,
+# kmeans ‖x‖²) and the optimizer's rebuilds all hit this instead of paying
+# a fresh jax.eval_shape (~ms) per node.  Bounded by wholesale clearing.
+_META_MEMO: dict = {}
+_META_MEMO_MAX = 4096
+
+
+class Expr:
+    """A node of the recorded DAG.
+
+    ``children`` are input Exprs; ``meta`` is the output described as a
+    DsArray whose ``blocks`` is a ShapeDtypeStruct (so grid/pad-state ride
+    along as static aux data) or a bare ShapeDtypeStruct for scalar results.
+    ``lower(*vals)`` maps child values to the output value using ONLY the
+    eager block-native primitives — it is the single source of truth for
+    both metadata inference (under ``eval_shape``) and plan execution
+    (under ``jit``).
+    """
+
+    __slots__ = ("children", "meta")
+
+    def lower(self, *vals):
+        raise NotImplementedError
+
+    def local_key(self):
+        """Hashable structural identity of this node EXCLUDING children."""
+        raise NotImplementedError
+
+    def _meta_key_extra(self) -> tuple:
+        """Extra memo-key state that affects ``lower`` but is not (always)
+        part of ``local_key`` — e.g. a Blockwise's resolved pad."""
+        return ()
+
+    def _infer_meta(self) -> None:
+        try:
+            key = (type(self), self.local_key(), self._meta_key_extra(),
+                   tuple(_meta_sig(c.meta) for c in self.children))
+        except TypeError:           # unhashable param: infer uncached
+            key = None
+        if key is not None:
+            hit = _META_MEMO.get(key)
+            if hit is not None:
+                self.meta = hit
+                return
+        with suspend_lazy():
+            self.meta = jax.eval_shape(self.lower, *[c.meta for c in self.children])
+        if key is not None:
+            if len(_META_MEMO) >= _META_MEMO_MAX:
+                _META_MEMO.clear()
+            _META_MEMO[key] = self.meta
+
+    # rebuild with new children (used by the optimizer); subclasses with
+    # extra state override
+    def rebuild(self, children: Sequence["Expr"]) -> "Expr":
+        raise NotImplementedError
+
+
+class Leaf(Expr):
+    """A concrete DsArray: a plan input.  Identity (not data) keyed — two
+    plans over different arrays with the same structural signature share one
+    compiled program."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value: DsArray):
+        self.value = value
+        self.children = ()
+        self.meta = DsArray(
+            jax.ShapeDtypeStruct(value.blocks.shape, value.blocks.dtype),
+            value.grid, value.pad_state)
+
+    def signature(self):
+        g = self.value.grid
+        return ("leaf", g.shape, g.block_shape, self.value.stacked_grid,
+                str(self.value.dtype), self.value.pad_state)
+
+    def local_key(self):
+        return self.signature()
+
+    def rebuild(self, children):
+        return self
+
+
+class ArrayLeaf(Expr):
+    """A raw array plan input (index vectors, shuffle PRNG keys): its VALUES
+    are runtime data, so re-running a structurally-identical plan with a new
+    index array hits the compiled-plan cache."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value):
+        self.value = jnp.asarray(value)
+        self.children = ()
+        self.meta = jax.ShapeDtypeStruct(self.value.shape, self.value.dtype)
+
+    def signature(self):
+        return ("aleaf", self.value.shape, str(self.value.dtype))
+
+    def local_key(self):
+        return self.signature()
+
+    def rebuild(self, children):
+        return self
+
+
+class Blockwise(Expr):
+    """Elementwise / map_blocks op over grid-aligned operands.
+
+    ``fn(*blocks)`` consumes the children's stacked block tensors (plus any
+    0-d scalar-expression values) and returns one stacked tensor of the same
+    shape.  The optimizer fuses chains of these into ONE composed per-block
+    function, and the output pad state is re-derived by probing the composed
+    function on the leaf pad constants — pad-state propagation over the
+    whole plan, paying at most one remask at the eventual consumer.
+
+    With no ds-array children (all 0-d operands) the node is a scalar
+    computation and ``lower`` returns the raw array.
+
+    ``elementwise`` marks fns known to be position-independent (everything
+    the facade records itself); user ``map_blocks`` fns are conservatively
+    NOT, which gates the optimizer's transpose-hoist rule — a
+    position-dependent fn does not commute with the block transpose.
+    """
+
+    __slots__ = ("fn", "key", "pad", "elementwise")
+
+    def __init__(self, fn: Callable, children: Sequence[Expr], key,
+                 pad: Optional[PadState] = None, elementwise: bool = False):
+        self.fn = fn
+        self.key = key
+        self.elementwise = elementwise
+        self.children = tuple(children)
+        self.pad = self._probe_pad() if pad is None else pad
+        self._infer_meta()
+
+    def _probe_pad(self) -> PadState:
+        metas = [c.meta for c in self.children]
+        if not any(_is_ds(m) for m in metas):
+            return PAD_DIRTY     # scalar node: pad meaningless
+        probes = []
+        for m in metas:
+            if not _is_ds(m):
+                return PAD_DIRTY  # 0-d expr operand: value unknown statically
+            if m.pad_state.kind == "dirty":
+                return PAD_DIRTY
+            try:
+                probes.append(jnp.full((1, 1, 1, 1),
+                                       np.asarray(m.pad_state.value).item(),
+                                       m.blocks.dtype))
+            except Exception:
+                return PAD_DIRTY
+        try:
+            out = self.fn(*probes)
+            if isinstance(out, jax.core.Tracer) or \
+                    getattr(out, "shape", None) != (1, 1, 1, 1):
+                return PAD_DIRTY
+            return pad_state_of(out)
+        except Exception:
+            return PAD_DIRTY
+
+    def lower(self, *vals):
+        blocks = [v.blocks if isinstance(v, DsArray) else v for v in vals]
+        out = self.fn(*blocks)
+        ref = next((v for v in vals if isinstance(v, DsArray)), None)
+        if ref is None:
+            return out
+        return DsArray(out, ref.grid, self.pad)
+
+    def local_key(self):
+        return ("bw", self.key)
+
+    def _meta_key_extra(self):
+        return (self.pad,)
+
+    def rebuild(self, children):
+        # keep the RESOLVED pad: an explicit pad (e.g. PAD_DIRTY on a
+        # position-dependent map_blocks) must survive DAG rewrites — the
+        # probe cannot re-derive it
+        return Blockwise(self.fn, children, self.key, pad=self.pad,
+                         elementwise=self.elementwise)
+
+
+class Transpose(Expr):
+    __slots__ = ()
+
+    def __init__(self, child: Expr):
+        self.children = (child,)
+        self._infer_meta()
+
+    def lower(self, v):
+        return v.transpose()
+
+    def local_key(self):
+        return ("T",)
+
+    def rebuild(self, children):
+        return Transpose(children[0])
+
+
+class PadGrid(Expr):
+    """Grow the stacked grid (operand alignment before a Blockwise)."""
+
+    __slots__ = ("target",)
+
+    def __init__(self, child: Expr, target: Tuple[int, int]):
+        self.target = tuple(target)
+        self.children = (child,)
+        self._infer_meta()
+
+    def lower(self, v):
+        return v._pad_grid_to(self.target)
+
+    def local_key(self):
+        return ("padgrid", self.target)
+
+    def rebuild(self, children):
+        return PadGrid(children[0], self.target)
+
+
+class AsType(Expr):
+    __slots__ = ("dtype",)
+
+    def __init__(self, child: Expr, dtype):
+        self.dtype = jnp.dtype(dtype)
+        self.children = (child,)
+        self._infer_meta()
+
+    def lower(self, v):
+        return v.astype(self.dtype)
+
+    def local_key(self):
+        return ("astype", str(self.dtype))
+
+    def rebuild(self, children):
+        return AsType(children[0], self.dtype)
+
+
+class MatMul(Expr):
+    """Blocked GEMM.  ``transpose_a=True`` is the optimizer's folded form of
+    ``MatMul(Transpose(x), y)``: it lowers through ``matmul_ta`` → the fused
+    Pallas kernel with the transpose absorbed into block-index maps, never
+    materializing the transposed stacked tensor."""
+
+    __slots__ = ("transpose_a",)
+
+    def __init__(self, a: Expr, b: Expr, transpose_a: bool = False):
+        self.transpose_a = transpose_a
+        self.children = (a, b)
+        self._infer_meta()
+
+    def lower(self, a, b):
+        if self.transpose_a:
+            return matmul_ta(a, b)
+        return a @ b
+
+    def local_key(self):
+        return ("mm", self.transpose_a)
+
+    def rebuild(self, children):
+        return MatMul(children[0], children[1], self.transpose_a)
+
+
+class Reduce(Expr):
+    __slots__ = ("op", "axis")
+
+    def __init__(self, child: Expr, op: str, axis: Optional[int]):
+        self.op = op
+        self.axis = axis
+        self.children = (child,)
+        self._infer_meta()
+
+    def lower(self, v):
+        return v._reduce(self.op, self.axis)
+
+    def local_key(self):
+        return ("reduce", self.op, self.axis)
+
+    def rebuild(self, children):
+        return Reduce(children[0], self.op, self.axis)
+
+
+def _norm_index(k, size: int):
+    """Record-time normalization of one axis of a getitem key.
+
+    -> ("static", hashable descriptor, rebuild value) for ints/slices, or
+       ("array", ArrayLeaf) for integer/bool array selection (the values
+       stay runtime inputs, so structurally-identical selections share a
+       compiled plan).
+    """
+    if isinstance(k, (int, np.integer)):
+        return ("static", ("i", int(k)), int(k))
+    if isinstance(k, slice):
+        desc = ("s", k.start, k.stop, k.step)
+        return ("static", desc, k)
+    if isinstance(k, jax.core.Tracer):
+        raise TypeError("lazy getitem needs concrete index arrays "
+                        "(record outside jit or pass an eager index)")
+    arr = np.asarray(k) if not isinstance(k, jnp.ndarray) else k
+    if getattr(arr, "dtype", None) is not None and arr.dtype == bool:
+        arr = np.flatnonzero(np.asarray(arr))
+    return ("array", ArrayLeaf(jnp.asarray(arr)), None)
+
+
+class GetItem(Expr):
+    """Slice / filter.  Static parts (ints, slices) are plan structure;
+    index arrays become ``ArrayLeaf`` children."""
+
+    __slots__ = ("rows_desc", "cols_desc")
+
+    def __init__(self, child: Expr, rows, cols):
+        self.rows_desc = rows
+        self.cols_desc = cols
+        kids = [child]
+        for d in (rows, cols):
+            if d[0] == "array":
+                kids.append(d[1])
+        self.children = tuple(kids)
+        self._infer_meta()
+
+    def _key_of(self, desc, arrays):
+        if desc[0] == "static":
+            return desc[2]
+        return arrays.pop(0)
+
+    def lower(self, v, *idx_arrays):
+        arrays = list(idx_arrays)
+        rows = self._key_of(self.rows_desc, arrays)
+        cols = self._key_of(self.cols_desc, arrays)
+        from repro.core import structural
+        return structural.getitem(v, (rows, cols))
+
+    def local_key(self):
+        def part(desc):
+            return desc[1] if desc[0] == "static" else ("a",)
+        return ("getitem", part(self.rows_desc), part(self.cols_desc))
+
+    def rebuild(self, children):
+        rows, cols = self.rows_desc, self.cols_desc
+        kids = list(children)
+        child = kids.pop(0)
+        if rows[0] == "array":
+            rows = ("array", kids.pop(0), None)
+        if cols[0] == "array":
+            cols = ("array", kids.pop(0), None)
+        return GetItem(child, rows, cols)
+
+
+class Rechunk(Expr):
+    __slots__ = ("block_shape",)
+
+    def __init__(self, child: Expr, block_shape: Tuple[int, int]):
+        self.block_shape = (int(block_shape[0]), int(block_shape[1]))
+        self.children = (child,)
+        self._infer_meta()
+
+    def lower(self, v):
+        from repro.core import structural
+        return structural.rechunk(v, self.block_shape)
+
+    def local_key(self):
+        return ("rechunk", self.block_shape)
+
+    def rebuild(self, children):
+        return Rechunk(children[0], self.block_shape)
+
+
+class ConcatRows(Expr):
+    __slots__ = ()
+
+    def __init__(self, parts: Sequence[Expr]):
+        self.children = tuple(parts)
+        self._infer_meta()
+
+    def lower(self, *vals):
+        from repro.core import structural
+        return structural.concat_rows(list(vals))
+
+    def local_key(self):
+        return ("concat", len(self.children))
+
+    def rebuild(self, children):
+        return ConcatRows(children)
+
+
+class Shuffle(Expr):
+    """Row shuffle; the PRNG key is an ``ArrayLeaf`` runtime input."""
+
+    __slots__ = ("kind",)
+
+    def __init__(self, child: Expr, key_leaf: ArrayLeaf, kind: str):
+        assert kind in ("pseudo", "exact"), kind
+        self.kind = kind
+        self.children = (child, key_leaf)
+        self._infer_meta()
+
+    def lower(self, v, key):
+        from repro.core import shuffle as _shuffle
+        fn = (_shuffle.pseudo_shuffle if self.kind == "pseudo"
+              else _shuffle.exact_shuffle)
+        return fn(key, v)
+
+    def local_key(self):
+        return ("shuffle", self.kind)
+
+    def rebuild(self, children):
+        return Shuffle(children[0], children[1], self.kind)
+
+
+# ---------------------------------------------------------------------------
+# Recording helpers
+# ---------------------------------------------------------------------------
+
+
+def lift(x) -> Expr:
+    """x as an Expr: LazyDsArray → its expr, DsArray → Leaf."""
+    if isinstance(x, (LazyDsArray, LazyScalar)):
+        return x.expr
+    if isinstance(x, DsArray):
+        return Leaf(x)
+    raise TypeError(f"cannot lift {type(x).__name__} into the lazy IR")
+
+
+def lift_lazy(x: DsArray) -> "LazyDsArray":
+    return LazyDsArray(Leaf(x))
+
+
+def _scalar_key(v):
+    """Hashable identity of a baked scalar operand, INCLUDING its dtype:
+    plan-cache keys must not collide across `1`, `1.0` and `True` (tuple
+    hashing treats them as equal), or an int plan would answer a float
+    recording with wrongly-typed cached results."""
+    try:
+        arr = np.asarray(v)
+        return (arr.item(), str(arr.dtype))
+    except Exception:
+        return None
+
+
+def _align(a: Expr, b: Expr) -> Tuple[Expr, Expr]:
+    """Insert Rechunk/PadGrid so both operands have identical stacked shapes
+    (the recorded mirror of eager ``_binary``'s alignment)."""
+    am, bm = a.meta, b.meta
+    if am.shape != bm.shape:
+        raise ValueError(f"shape mismatch {am.shape} vs {bm.shape}")
+    if am.block_shape != bm.block_shape:
+        b = Rechunk(b, am.block_shape)
+        bm = b.meta
+    if am.stacked_grid != bm.stacked_grid:
+        common = (max(am.stacked_grid[0], bm.stacked_grid[0]),
+                  max(am.stacked_grid[1], bm.stacked_grid[1]))
+        if am.stacked_grid != common:
+            a = PadGrid(a, common)
+        if bm.stacked_grid != common:
+            b = PadGrid(b, common)
+    return a, b
+
+
+def _wrap(e: Expr):
+    """Expr → LazyDsArray for ds-shaped results, LazyScalar otherwise."""
+    return LazyDsArray(e) if _is_ds(e.meta) else LazyScalar(e)
+
+
+class LazyScalar:
+    """A 0-d expression (whole-array reduction).  Supports the small algebra
+    the ds-array API needs (scale, sqrt) and ``compute()``."""
+
+    __slots__ = ("expr",)
+
+    def __init__(self, expr: Expr):
+        self.expr = expr
+
+    @property
+    def dtype(self):
+        return self.expr.meta.dtype
+
+    def _map(self, fn: Callable, key) -> "LazyScalar":
+        return LazyScalar(Blockwise(fn, (self.expr,), key, elementwise=True))
+
+    def _binary(self, other, op: Callable, reverse: bool, name: str):
+        if isinstance(other, (LazyDsArray, LazyScalar, DsArray)):
+            oe = lift(other)
+            fn = (lambda x, y: op(y, x)) if reverse else (lambda x, y: op(x, y))
+            return _wrap(Blockwise(fn, (self.expr, oe), (name, reverse),
+                                   elementwise=True))
+        sk = _scalar_key(other)
+        if sk is None:
+            return NotImplemented
+        if reverse:
+            return self._map(lambda x: op(other, x), (name, True, sk))
+        return self._map(lambda x: op(x, other), (name, False, sk))
+
+    def __add__(self, o):
+        return self._binary(o, jnp.add, False, "add")
+
+    __radd__ = __add__
+
+    def __sub__(self, o):
+        return self._binary(o, jnp.subtract, False, "sub")
+
+    def __rsub__(self, o):
+        return self._binary(o, jnp.subtract, True, "sub")
+
+    def __mul__(self, o):
+        return self._binary(o, jnp.multiply, False, "mul")
+
+    __rmul__ = __mul__
+
+    def __truediv__(self, o):
+        return self._binary(o, jnp.divide, False, "div")
+
+    def __rtruediv__(self, o):
+        return self._binary(o, jnp.divide, True, "div")
+
+    def sqrt(self) -> "LazyScalar":
+        return self._map(jnp.sqrt, ("sqrt",))
+
+    def compute(self):
+        from repro.core import plan
+        return plan.compute(self.expr)
+
+    def __float__(self) -> float:
+        return float(self.compute())
+
+
+class LazyDsArray:
+    """Recorded ds-array: mirrors the ``DsArray`` API, but every op appends
+    an ``Expr`` node instead of dispatching.  ``compute()`` optimizes and
+    runs the whole recorded plan (see ``core.plan``)."""
+
+    __slots__ = ("expr",)
+
+    def __init__(self, expr: Expr):
+        if not _is_ds(expr.meta):
+            raise TypeError("expression does not produce a ds-array")
+        self.expr = expr
+
+    # -- metadata (from the symbolically-propagated meta) --------------------
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.expr.meta.shape
+
+    @property
+    def block_shape(self) -> Tuple[int, int]:
+        return self.expr.meta.block_shape
+
+    @property
+    def grid(self) -> BlockGrid:
+        return self.expr.meta.grid
+
+    @property
+    def stacked_grid(self) -> Tuple[int, int]:
+        return self.expr.meta.stacked_grid
+
+    @property
+    def dtype(self):
+        return self.expr.meta.dtype
+
+    @property
+    def pad_state(self) -> PadState:
+        return self.expr.meta.pad_state
+
+    @property
+    def ndim(self) -> int:
+        return 2
+
+    @property
+    def T(self) -> "LazyDsArray":
+        return self.transpose()
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"LazyDsArray(shape={self.shape}, "
+                f"block_shape={self.block_shape}, dtype={self.dtype})")
+
+    # -- materialization -----------------------------------------------------
+    def compute(self) -> DsArray:
+        from repro.core import plan
+        return plan.compute(self.expr)
+
+    def collect(self) -> jnp.ndarray:
+        return self.compute().collect()
+
+    def lazy(self) -> "LazyDsArray":
+        return self
+
+    # -- elementwise ---------------------------------------------------------
+    def _binary(self, other, op: Callable, reverse: bool = False,
+                name: Optional[str] = None):
+        name = name or getattr(op, "__name__", "op")
+        if isinstance(other, (LazyDsArray, DsArray)):
+            a, b = _align(self.expr, lift(other))
+            fn = (lambda x, y: op(y, x)) if reverse else (lambda x, y: op(x, y))
+            return LazyDsArray(Blockwise(fn, (a, b), (name, reverse),
+                                         elementwise=True))
+        if isinstance(other, LazyScalar):
+            fn = (lambda x, s: op(s, x)) if reverse else (lambda x, s: op(x, s))
+            return LazyDsArray(Blockwise(fn, (self.expr, other.expr),
+                                         (name, reverse), elementwise=True))
+        if isinstance(other, (int, float, jnp.ndarray, np.ndarray)) \
+                and jnp.ndim(other) == 0:
+            sk = _scalar_key(other)
+            if sk is None:
+                return NotImplemented
+            if reverse:
+                fn = lambda x: op(other, x)          # noqa: E731
+            else:
+                fn = lambda x: op(x, other)          # noqa: E731
+            return LazyDsArray(Blockwise(fn, (self.expr,),
+                                         (name, reverse, sk),
+                                         elementwise=True))
+        return NotImplemented
+
+    def __add__(self, o):
+        return self._binary(o, jnp.add)
+
+    __radd__ = __add__
+
+    def __sub__(self, o):
+        return self._binary(o, jnp.subtract)
+
+    def __rsub__(self, o):
+        return self._binary(o, jnp.subtract, reverse=True)
+
+    def __mul__(self, o):
+        return self._binary(o, jnp.multiply)
+
+    __rmul__ = __mul__
+
+    def __truediv__(self, o):
+        return self._binary(o, jnp.divide)
+
+    def __rtruediv__(self, o):
+        return self._binary(o, jnp.divide, reverse=True)
+
+    def __pow__(self, o):
+        return self._binary(o, jnp.power)
+
+    def __rpow__(self, o):
+        return self._binary(o, jnp.power, reverse=True)
+
+    def __neg__(self):
+        return self.map_blocks(jnp.negative, _key=("neg",), _elementwise=True)
+
+    def map_blocks(self, fn: Callable, pad: Optional[PadState] = None,
+                   _key=None, _elementwise: bool = False) -> "LazyDsArray":
+        # the fn OBJECT is part of the key (functions hash by identity, and
+        # holding it in the cached-plan key keeps the id stable); user fns
+        # are NOT marked elementwise — they may be position-dependent, which
+        # must block the optimizer's transpose-hoist rule
+        key = _key if _key is not None else ("map", fn, pad)
+        return LazyDsArray(Blockwise(fn, (self.expr,), key, pad=pad,
+                                     elementwise=_elementwise))
+
+    def sqrt(self) -> "LazyDsArray":
+        return self.map_blocks(jnp.sqrt, _key=("sqrt",), _elementwise=True)
+
+    def exp(self) -> "LazyDsArray":
+        return self.map_blocks(jnp.exp, _key=("exp",), _elementwise=True)
+
+    def abs(self) -> "LazyDsArray":
+        return self.map_blocks(jnp.abs, _key=("abs",), _elementwise=True)
+
+    def astype(self, dtype) -> "LazyDsArray":
+        return LazyDsArray(AsType(self.expr, dtype))
+
+    # -- structural ----------------------------------------------------------
+    def transpose(self) -> "LazyDsArray":
+        return LazyDsArray(Transpose(self.expr))
+
+    def rechunk(self, block_shape: Tuple[int, int]) -> "LazyDsArray":
+        bs = (int(block_shape[0]), int(block_shape[1]))
+        if bs == self.block_shape:
+            return self
+        return LazyDsArray(Rechunk(self.expr, bs))
+
+    def __getitem__(self, key) -> "LazyDsArray":
+        if not isinstance(key, tuple):
+            key = (key, slice(None))
+        if len(key) != 2:
+            raise IndexError("ds-arrays are 2-D")
+        return LazyDsArray(GetItem(self.expr, _norm_index(key[0], self.shape[0]),
+                                   _norm_index(key[1], self.shape[1])))
+
+    def __matmul__(self, other):
+        if not isinstance(other, (LazyDsArray, DsArray)):
+            return NotImplemented
+        return LazyDsArray(MatMul(self.expr, lift(other)))
+
+    def __rmatmul__(self, other):
+        if not isinstance(other, DsArray):
+            return NotImplemented
+        return LazyDsArray(MatMul(lift(other), self.expr))
+
+    # -- reductions ----------------------------------------------------------
+    def _reduce(self, op: str, axis: Optional[int]):
+        return _wrap(Reduce(self.expr, op, axis))
+
+    def sum(self, axis: Optional[int] = None):
+        return self._reduce("sum", axis)
+
+    def max(self, axis: Optional[int] = None):
+        return self._reduce("max", axis)
+
+    def min(self, axis: Optional[int] = None):
+        return self._reduce("min", axis)
+
+    def mean(self, axis: Optional[int] = None):
+        n, m = self.shape
+        denom = {None: n * m, 0: n, 1: m}[axis]
+        me = self
+        if not jnp.issubdtype(self.dtype, jnp.floating):
+            me = self.astype(jnp.promote_types(self.dtype, jnp.float32))
+        return me.sum(axis) / float(denom)
+
+    def norm(self, axis: Optional[int] = None):
+        sq = self._binary(self, jnp.multiply)
+        s = sq.sum(axis)
+        return s.sqrt()
+
+
+def record_shuffle(key, a, kind: str):
+    """Record a shuffle of a lazy (or lazily-flagged) operand."""
+    return LazyDsArray(Shuffle(lift(a), ArrayLeaf(key), kind))
+
+
+def record_concat(arrays: Sequence) -> LazyDsArray:
+    return LazyDsArray(ConcatRows(tuple(lift(a) for a in arrays)))

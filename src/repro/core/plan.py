@@ -1,0 +1,399 @@
+"""Optimize, compile and cache lazy ds-array expression plans.
+
+``compute()`` takes recorded ``Expr`` DAGs (see ``core.expr``) through three
+stages:
+
+1. **optimize** —
+   (a) canonicalize + hash-cons (CSE): identical subexpressions become one
+       node, so sibling reductions over the same operand evaluate it once
+       and duplicate reductions collapse entirely;
+   (b) transpose rules: ``T(T(x)) → x``; a Blockwise whose ds operands are
+       all transposes hoists the transpose above the elementwise work (so
+       chains keep fusing and the matmul fold below can fire);
+       ``(A.T) @ B → MatMul(A, B, transpose_a=True)``, which lowers through
+       the fused Pallas GEMM with the transpose folded into block-index
+       maps — the transposed stacked tensor is never materialized;
+   (c) blockwise fusion: runs of elementwise/map_blocks nodes with
+       single-consumer intermediates compose into ONE per-block function,
+       whose pad state is re-probed on the leaf pad constants — the eager
+       layer's pad tracking, propagated symbolically across the whole plan,
+       so a chain pays at most one remask at its consumer.
+
+2. **compile** — the optimized DAG is lowered onto the eager block-native
+   primitives (each node's ``lower``) inside a single ``jax.jit``; leaf
+   arrays are the only runtime inputs.  A fused elementwise chain is one
+   jitted body with one HBM write — the eager path dispatched every op
+   separately.
+
+3. **cache** — compiled plans are keyed by a structural hash (node kinds +
+   static params + leaf signatures, NOT leaf data), so hot-loop bodies like
+   the PCA power iteration compile once and replay.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core import expr as _expr
+from repro.core.dsarray import DsArray
+from repro.core.expr import (ArrayLeaf, Blockwise, Expr, Leaf, MatMul,
+                             Transpose, _is_ds)
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+
+def _count_nodes(roots: Sequence[Expr]) -> int:
+    seen = set()
+
+    def visit(n):
+        if id(n) in seen:
+            return
+        seen.add(id(n))
+        for c in n.children:
+            visit(c)
+
+    for r in roots:
+        visit(r)
+    return sum(1 for i in seen)
+
+
+def _rules(n: Expr) -> Expr:
+    """Local rewrite rules, applied bottom-up after children are canonical."""
+    if isinstance(n, Transpose) and isinstance(n.children[0], Transpose):
+        return n.children[0].children[0]
+    if isinstance(n, MatMul) and not n.transpose_a \
+            and isinstance(n.children[0], Transpose):
+        return MatMul(n.children[0].children[0], n.children[1],
+                      transpose_a=True)
+    if isinstance(n, Blockwise) and n.elementwise and _is_ds(n.meta) \
+            and n.children \
+            and all(isinstance(c, Transpose) for c in n.children):
+        # elementwise only: a position-dependent map_blocks fn does not
+        # commute with the block transpose.  Transpose preserves pad
+        # constants, so the resolved pad carries over unchanged.
+        inner = Blockwise(n.fn, tuple(c.children[0] for c in n.children),
+                          ("hoistT", n.key), pad=n.pad, elementwise=True)
+        return Transpose(inner)
+    return n
+
+
+def _canonicalize(roots: Sequence[Expr]) -> List[Expr]:
+    """Bottom-up rewrite + hash-consing (CSE) over the whole DAG."""
+    memo: Dict[int, Expr] = {}
+    cons: Dict[tuple, Expr] = {}
+
+    def canon(node: Expr) -> Expr:
+        if id(node) in memo:
+            return memo[id(node)]
+        kids = [canon(c) for c in node.children]
+        n2 = node if all(a is b for a, b in zip(kids, node.children)) \
+            else node.rebuild(kids)
+        n2 = _rules(n2)
+        if isinstance(n2, Leaf):
+            key = ("leafid", id(n2.value))
+        elif isinstance(n2, ArrayLeaf):
+            key = ("aleafid", id(n2.value))
+        else:
+            key = (type(n2).__name__, n2.local_key(),
+                   tuple(id(c) for c in n2.children))
+        n2 = cons.setdefault(key, n2)
+        memo[id(node)] = n2
+        return n2
+
+    return [canon(r) for r in roots]
+
+
+def _use_counts(roots: Sequence[Expr]) -> Dict[int, int]:
+    counts: Dict[int, int] = {}
+    seen = set()
+
+    def visit(n):
+        for c in n.children:
+            counts[id(c)] = counts.get(id(c), 0) + 1
+            if id(c) not in seen:
+                seen.add(id(c))
+                visit(c)
+
+    for r in roots:
+        counts[id(r)] = counts.get(id(r), 0) + 1
+        if id(r) not in seen:
+            seen.add(id(r))
+            visit(r)
+    return counts
+
+
+def _compose(parent_fn, specs):
+    """One per-block function for a fused Blockwise: each spec is
+    ('arg', slot) — pass input through — or ('call', child_fn, slots) —
+    inline the child's computation."""
+
+    def fused(*args):
+        vals = []
+        for kind, payload in specs:
+            if kind == "arg":
+                vals.append(args[payload])
+            else:
+                cfn, idxs = payload
+                vals.append(cfn(*[args[i] for i in idxs]))
+        return parent_fn(*vals)
+
+    return fused
+
+
+def _fuse(roots: Sequence[Expr]) -> Tuple[List[Expr], int]:
+    """Fuse single-consumer Blockwise chains into composed Blockwise nodes."""
+    counts = _use_counts(roots)
+    memo: Dict[int, Expr] = {}
+    fused_away = 0
+
+    def fuse(node: Expr) -> Expr:
+        nonlocal fused_away
+        if id(node) in memo:
+            return memo[id(node)]
+        kids = [fuse(c) for c in node.children]
+        out = node if all(a is b for a, b in zip(kids, node.children)) \
+            else node.rebuild(kids)
+        if isinstance(out, Blockwise) and _is_ds(out.meta):
+            specs, new_children, key_parts = [], [], []
+            slot_of: Dict[int, int] = {}
+            inlined = 0
+
+            def slot(child: Expr) -> int:
+                if id(child) not in slot_of:
+                    slot_of[id(child)] = len(new_children)
+                    new_children.append(child)
+                return slot_of[id(child)]
+
+            for orig_c, new_c in zip(node.children, kids):
+                fusible = (isinstance(new_c, Blockwise)
+                           and _is_ds(new_c.meta)
+                           and counts.get(id(orig_c), 2) == 1
+                           and new_c.meta.blocks.shape == out.meta.blocks.shape
+                           and new_c.meta.grid == out.meta.grid)
+                if fusible:
+                    idxs = [slot(gc) for gc in new_c.children]
+                    specs.append(("call", (new_c.fn, idxs)))
+                    key_parts.append(("call", new_c.key, tuple(idxs)))
+                    inlined += 1
+                else:
+                    s = slot(new_c)
+                    specs.append(("arg", s))
+                    key_parts.append(("arg", s))
+            if inlined:
+                fused_away += inlined
+                # the fused node computes exactly what the outer node did,
+                # so its pad is the outer node's RESOLVED pad — re-probing
+                # the composed fn could wrongly upgrade an explicit DIRTY
+                ew = out.elementwise and all(
+                    c.elementwise for s, c in zip(specs, kids)
+                    if s[0] == "call")
+                out = Blockwise(
+                    _compose(out.fn, specs), new_children,
+                    ("fused", out.key, tuple(key_parts)), pad=out.pad,
+                    elementwise=ew)
+        memo[id(node)] = out
+        return out
+
+    new_roots = [fuse(r) for r in roots]
+    return new_roots, fused_away
+
+
+def optimize(roots: Sequence[Expr]) -> Tuple[List[Expr], Dict[str, int]]:
+    before = _count_nodes(roots)
+    roots = _canonicalize(roots)
+    roots, fused = _fuse(roots)
+    # fusion can leave freshly-composed siblings identical: re-cons
+    roots = _canonicalize(roots)
+    after = _count_nodes(roots)
+    return roots, {"nodes_before": before, "nodes_after": after,
+                   "fused_elementwise": fused}
+
+
+# ---------------------------------------------------------------------------
+# Detached inputs (so cached compiled plans never pin leaf DATA alive)
+# ---------------------------------------------------------------------------
+
+
+class _Input(Expr):
+    """Positional plan input: carries only the leaf's static metadata."""
+
+    __slots__ = ("idx", "is_ds", "grid", "pad")
+
+    def __init__(self, leaf: Expr, idx: int):
+        self.idx = idx
+        self.is_ds = isinstance(leaf, Leaf)
+        if self.is_ds:
+            self.grid = leaf.value.grid
+            self.pad = leaf.value.pad_state
+        else:
+            self.grid = self.pad = None
+        self.children = ()
+        self.meta = leaf.meta        # ShapeDtypeStruct-based: holds no data
+
+    def bind(self, val):
+        return DsArray(val, self.grid, self.pad) if self.is_ds else val
+
+    def lower(self):  # pragma: no cover - inputs are bound, not lowered
+        raise RuntimeError("plan inputs are bound at execution")
+
+    def rebuild(self, children):
+        return self
+
+
+def _detach(roots: Sequence[Expr], leaves: Sequence[Expr]) -> List[Expr]:
+    """Clone the DAG with Leaf/ArrayLeaf replaced by ``_Input`` stubs, so the
+    compiled closure references no concrete arrays."""
+    memo: Dict[int, Expr] = {
+        id(l): _Input(l, i) for i, l in enumerate(leaves)}
+
+    def clone(node: Expr) -> Expr:
+        if id(node) in memo:
+            return memo[id(node)]
+        kids = [clone(c) for c in node.children]
+        out = node.rebuild(kids)
+        memo[id(node)] = out
+        return out
+
+    return [clone(r) for r in roots]
+
+
+# ---------------------------------------------------------------------------
+# Structural plan key + compiled-plan cache
+# ---------------------------------------------------------------------------
+
+
+def _plan_key(roots: Sequence[Expr]) -> Tuple[tuple, List[Expr]]:
+    """Linear structural encoding of the DAG + the ordered leaf list.
+
+    Keys capture node kinds, static params and LEAF SIGNATURES (geometry,
+    dtype, pad state) — never leaf data — so re-running a structurally
+    identical plan on fresh arrays reuses the compiled program.
+    """
+    entries: List[tuple] = []
+    index: Dict[int, int] = {}
+    leaves: List[Expr] = []
+
+    def key(node: Expr) -> int:
+        if id(node) in index:
+            return index[id(node)]
+        cids = tuple(key(c) for c in node.children)
+        if isinstance(node, (Leaf, ArrayLeaf)):
+            leaves.append(node)
+            entry = ("input", node.signature())
+        else:
+            entry = (type(node).__name__, node.local_key(), cids)
+        entries.append(entry)
+        index[id(node)] = len(entries) - 1
+        return index[id(node)]
+
+    rids = tuple(key(r) for r in roots)
+    return (tuple(entries), rids), leaves
+
+
+# LRU-bounded: structural keys can embed user fn objects (map_blocks), so a
+# loop that records a FRESH lambda per iteration would otherwise grow the
+# cache — and pin each jitted executable + closure — without bound.
+_CACHE: "OrderedDict[tuple, callable]" = OrderedDict()
+_CACHE_MAX = 256
+_STATS = {"hits": 0, "misses": 0, "launches": 0}
+
+
+def cache_stats() -> Dict[str, int]:
+    return dict(_STATS)
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+    _STATS.update(hits=0, misses=0, launches=0)
+
+
+class Plan:
+    """An optimized, compilable plan over one or more roots."""
+
+    def __init__(self, roots: Sequence[Expr]):
+        self.stats: Dict[str, int]
+        opt_roots, self.stats = optimize(list(roots))
+        self.key, self.leaves = _plan_key(opt_roots)
+        self.roots = opt_roots
+        self.stats["n_inputs"] = len(self.leaves)
+
+    def _make_run(self):
+        detached = _detach(self.roots, self.leaves)
+        n_inputs = len(self.leaves)
+
+        def run(*vals):
+            assert len(vals) == n_inputs
+            memo: Dict[int, object] = {}
+
+            def ev(node: Expr):
+                nid = id(node)
+                if nid in memo:
+                    return memo[nid]
+                if isinstance(node, _Input):
+                    out = node.bind(vals[node.idx])
+                else:
+                    out = node.lower(*[ev(c) for c in node.children])
+                memo[nid] = out
+                return out
+
+            return tuple(ev(r) for r in detached)
+
+        return run
+
+    def leaf_values(self) -> List:
+        return [l.value.blocks if isinstance(l, Leaf) else l.value
+                for l in self.leaves]
+
+    def jaxpr(self):
+        """make_jaxpr of the compiled body (for tests/inspection)."""
+        with _expr.suspend_lazy():
+            return jax.make_jaxpr(self._make_run())(*self.leaf_values())
+
+    def lowered(self):
+        """jit-lowered (unoptimized-HLO-capable) form for inspection."""
+        with _expr.suspend_lazy():
+            return jax.jit(self._make_run()).lower(*self.leaf_values())
+
+    def execute(self) -> tuple:
+        compiled = _CACHE.get(self.key)
+        if compiled is None:
+            _STATS["misses"] += 1
+            compiled = jax.jit(self._make_run())
+            _CACHE[self.key] = compiled
+            while len(_CACHE) > _CACHE_MAX:
+                _CACHE.popitem(last=False)
+        else:
+            _STATS["hits"] += 1
+            _CACHE.move_to_end(self.key)
+        _STATS["launches"] += 1
+        with _expr.suspend_lazy():
+            return compiled(*self.leaf_values())
+
+
+def compute_multi(*exprs: Expr) -> tuple:
+    """Evaluate several recorded expressions as ONE plan.
+
+    CSE runs across the roots, so sibling reductions over the same operand
+    share a single evaluation of it (and of any fused chain feeding it) —
+    the plan-level analogue of the paper's shared task graph.
+    """
+    roots = [e.expr if isinstance(e, (_expr.LazyDsArray, _expr.LazyScalar))
+             else e for e in exprs]
+    return Plan(roots).execute()
+
+
+def compute(e) -> object:
+    """Evaluate one recorded expression; DsArray out for ds-shaped plans."""
+    return compute_multi(e)[0]
+
+
+def plan_for(*exprs) -> Plan:
+    """The optimized Plan for inspection (stats, jaxpr) without executing."""
+    roots = [e.expr if isinstance(e, (_expr.LazyDsArray, _expr.LazyScalar))
+             else e for e in exprs]
+    return Plan(roots)

@@ -44,15 +44,17 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def _stacked_matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+def _stacked_matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int,
+                           transpose_a: bool = False):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    a_tile = a_ref[0, 0].T if transpose_a else a_ref[0, 0]
     acc_ref[...] += jnp.dot(
-        a_ref[0, 0], b_ref[0, 0], preferred_element_type=jnp.float32
+        a_tile, b_ref[0, 0], preferred_element_type=jnp.float32
     )
 
     @pl.when(k == n_k - 1)
@@ -67,7 +69,8 @@ def _pick_tile(dim: int, target: int) -> int:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret",
+                     "transpose_a"),
 )
 def stacked_matmul(
     a: jnp.ndarray,
@@ -78,6 +81,7 @@ def stacked_matmul(
     block_k: int = 512,
     out_dtype=None,
     interpret: bool = False,
+    transpose_a: bool = False,
 ) -> jnp.ndarray:
     """Fused GEMM directly on stacked ds-array block tensors.
 
@@ -90,12 +94,22 @@ def stacked_matmul(
     the full C partial) with a single launch and no HBM round-trips for
     partial sums.
 
+    ``transpose_a=True`` computes ``Aᵀ @ B`` with ``a`` still in its
+    UNtransposed stacked layout ``(gk, gi, bk, bn)``: the transpose is folded
+    into the A-operand block-index map (grid dims swapped) plus an in-VMEM
+    tile transpose fed to the MXU — the relayout of the full stacked tensor
+    that an eager ``A.T`` would materialize in HBM never happens.
+
     Block dims larger than ``block_*`` are sub-tiled when they divide evenly;
     otherwise the whole block is one tile (ds-array blocks are VMEM-sized by
     construction).  ``interpret=True`` runs the same kernel off-TPU.
     """
-    gi, gk, bn, bk = a.shape
-    gk2, gj, bk2, bm = b.shape
+    if transpose_a:
+        gk, gi, bk, bn = a.shape
+        gk2, gj, bk2, bm = b.shape
+    else:
+        gi, gk, bn, bk = a.shape
+        gk2, gj, bk2, bm = b.shape
     if gk != gk2 or bk != bk2:
         raise ValueError(f"stacked matmul inner mismatch {a.shape} x {b.shape}")
     out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
@@ -103,12 +117,20 @@ def stacked_matmul(
                   _pick_tile(bk, block_k))
     fm, fn, fk = bn // tm, bm // tn, bk // tk
     grid = (gi * fm, gj * fn, gk * fk)
+    if transpose_a:
+        # A block (i, k) of Aᵀ lives at a[k, i] with dims (bk, bn): swap the
+        # grid/sub-tile coordinates in the index map and transpose in VMEM
+        a_spec = pl.BlockSpec((1, 1, tk, tm),
+                              lambda i, j, k: (k // fk, i // fm, k % fk, i % fm))
+    else:
+        a_spec = pl.BlockSpec((1, 1, tm, tk),
+                              lambda i, j, k: (i // fm, k // fk, i % fm, k % fk))
     return pl.pallas_call(
-        functools.partial(_stacked_matmul_kernel, n_k=grid[2]),
+        functools.partial(_stacked_matmul_kernel, n_k=grid[2],
+                          transpose_a=transpose_a),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, tm, tk),
-                         lambda i, j, k: (i // fm, k // fk, i % fm, k % fk)),
+            a_spec,
             pl.BlockSpec((1, 1, tk, tn),
                          lambda i, j, k: (k // fk, j // fn, k % fk, j % fn)),
         ],

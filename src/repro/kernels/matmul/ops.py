@@ -62,15 +62,25 @@ def gemm_backend(bn: int, bk: int, bm: int, dtype,
 
 
 def local_matmul(a: jnp.ndarray, b: jnp.ndarray, *, out_dtype=None,
-                 backend: Optional[str] = None) -> jnp.ndarray:
+                 backend: Optional[str] = None,
+                 transpose_a: bool = False) -> jnp.ndarray:
     """Blocked local GEMM on stacked tiles: (gi,gk,bn,bk) x (gk,gj,bk,bm).
 
     The single entry point for every local contraction in the repo —
-    ``DsArray.__matmul__``, SUMMA and Cannon bodies — so the backend policy
-    lives in one place.
+    ``DsArray.__matmul__``, SUMMA and Cannon bodies, the lazy plan's folded
+    ``Aᵀ @ B`` — so the backend policy lives in one place.
+
+    ``transpose_a=True`` computes ``Aᵀ @ B`` with ``a`` still in its
+    untransposed stacked layout ``(gk, gi, bk, bn)``: both backends fold the
+    transpose into the contraction (block-index maps for Pallas, a relabeled
+    einsum otherwise) instead of materializing the transposed tensor.
     """
-    gi, gk, bn, bk = a.shape
-    gk2, gj, bk2, bm = b.shape
+    if transpose_a:
+        gk, gi, bk, bn = a.shape
+        gk2, gj, bk2, bm = b.shape
+    else:
+        gi, gk, bn, bk = a.shape
+        gk2, gj, bk2, bm = b.shape
     if gk != gk2 or bk != bk2:
         raise ValueError(f"local_matmul inner mismatch {a.shape} x {b.shape}")
     out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
@@ -79,11 +89,12 @@ def local_matmul(a: jnp.ndarray, b: jnp.ndarray, *, out_dtype=None,
         preferred = None
         if jnp.issubdtype(a.dtype, jnp.floating):
             preferred = jnp.promote_types(a.dtype, jnp.float32)
-        out = jnp.einsum("ikab,kjbc->ijac", a, b,
-                         preferred_element_type=preferred)
+        spec = "kiba,kjbc->ijac" if transpose_a else "ikab,kjbc->ijac"
+        out = jnp.einsum(spec, a, b, preferred_element_type=preferred)
         return out.astype(out_dtype)
     return stacked_matmul(a, b, out_dtype=jnp.dtype(out_dtype),
-                          interpret=(mode == "interpret"))
+                          interpret=(mode == "interpret"),
+                          transpose_a=transpose_a)
 
 
 def _pick_block(dim: int, target: int) -> int:

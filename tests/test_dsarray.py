@@ -48,6 +48,7 @@ def test_transpose(data):
     assert np.allclose(np.asarray(a.T.T.collect()), x)
 
 
+@pytest.mark.slow
 @given(case())
 def test_elementwise_and_reductions(data):
     x, bs = data

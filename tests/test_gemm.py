@@ -34,6 +34,7 @@ def _einsum_ref(a, b):
                      np.asarray(b, np.float64))
 
 
+@pytest.mark.slow
 @given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3),
        st.integers(1, 9), st.integers(1, 9), st.integers(1, 9),
        st.sampled_from([np.float32, np.float16]))
@@ -65,6 +66,35 @@ def test_local_matmul_backends_agree():
     e = local_matmul(jnp.asarray(a), jnp.asarray(b), backend="einsum")
     p = local_matmul(jnp.asarray(a), jnp.asarray(b), backend="interpret")
     np.testing.assert_allclose(np.asarray(e), np.asarray(p), atol=1e-4)
+
+
+def test_local_matmul_transpose_a_folded():
+    """Aᵀ@B with ``a`` in UNtransposed layout (gk, gi, bk, bn): both
+    backends must match the explicitly-transposed einsum reference."""
+    a = RNG.normal(size=(3, 2, 8, 8)).astype(np.float32)   # A: (24, 16)
+    b = RNG.normal(size=(3, 4, 8, 8)).astype(np.float32)   # B: (24, 32)
+    at = np.transpose(a, (1, 0, 3, 2))                     # stacked Aᵀ
+    want = _einsum_ref(at, b)
+    for backend in ("einsum", "interpret"):
+        out = local_matmul(jnp.asarray(a), jnp.asarray(b), backend=backend,
+                           transpose_a=True)
+        assert out.shape == (2, 4, 8, 8)
+        np.testing.assert_allclose(np.asarray(out, np.float64), want,
+                                   atol=1e-3, rtol=1e-3)
+
+
+def test_matmul_ta_matches_dense():
+    """The eager ``matmul_ta`` helper on ragged shapes + mixed blocks."""
+    from repro.core import matmul_ta
+    x = RNG.normal(size=(37, 21)).astype(np.float32)
+    y = RNG.normal(size=(37, 18)).astype(np.float32)
+    a = from_array(x, (8, 8))
+    b = from_array(y, (5, 6))          # mismatched row blocks -> rechunk
+    c = matmul_ta(a, b)
+    assert c.shape == (21, 18)
+    np.testing.assert_allclose(np.asarray(c.collect()), x.T @ y,
+                               atol=2e-3, rtol=1e-3)
+    assert c.pad_state.kind == "zero"
 
 
 def test_gemm_backend_policy(monkeypatch):

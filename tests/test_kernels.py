@@ -25,6 +25,7 @@ settings.load_profile("kern")
 RNG = np.random.default_rng(0)
 
 
+@pytest.mark.slow
 @given(st.integers(1, 300), st.integers(1, 300), st.integers(1, 300),
        st.sampled_from([np.float32, np.float16]))
 def test_matmul_sweep(m, k, n, dtype):
@@ -74,6 +75,7 @@ def test_flash_attention_bf16():
                                atol=3e-2)
 
 
+@pytest.mark.slow
 @given(st.integers(10, 600), st.integers(2, 130), st.integers(2, 17))
 def test_kmeans_assign_sweep(n, d, k):
     x = RNG.normal(size=(n, d)).astype(np.float32)

@@ -1,0 +1,451 @@
+"""Lazy expression plans: compute() ≡ eager, fusion/fold on the jaxpr+HLO,
+plan-cache behaviour.
+
+Four families of assertions:
+
+* oracle equality — recorded plans must produce exactly what the eager ops
+  produce, across dtypes, ragged grids, FILL pads, structural ops, matmul,
+  reductions and shuffles (property sweep + fixed cases);
+* the ISSUE-3 acceptance: a 6-op elementwise chain under ``repro.lazy()``
+  lowers to ONE fused per-block body — single jit launch, ENTRY HLO whose
+  only full-grid instructions are the parameter and the root fusion (zero
+  intermediate full-grid HBM writes), and ≤1 remask in the trace;
+* plan-structure: ``(A.T @ B)`` folds to ``transpose_a`` GEMM (no transpose
+  of the input stacked tensor in the jaxpr; pallas_call when forced),
+  sibling reductions share one operand evaluation;
+* cache: structurally-identical plans on fresh data hit the compiled-plan
+  cache; different structure misses.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro
+from repro.core import DsArray, concat_rows, from_array, plan
+from repro.core import expr as expr_mod
+from repro.core.expr import MatMul
+
+settings.register_profile("lazy", max_examples=10, deadline=None)
+settings.load_profile("lazy")
+
+RNG = np.random.default_rng(23)
+
+
+def mk(n=13, m=9, bn=4, bm=3, dtype=np.float32, shift=1.0):
+    x = (RNG.normal(size=(n, m)) * 2 + shift)
+    if np.issubdtype(np.dtype(dtype), np.integer):
+        x = np.round(x * 10)
+    x = x.astype(dtype)
+    return x, from_array(x, (bn, bm))
+
+
+def assert_claim_holds(a: DsArray, label=""):
+    gn, gm, bn, bm = a.blocks.shape
+    g = np.asarray(a.blocks, np.float64).transpose(0, 2, 1, 3)
+    g = g.reshape(gn * bn, gm * bm)
+    n, m = a.shape
+    pad = np.concatenate([g[n:].ravel(), g[:n, m:].ravel()])
+    if a.pad_state.kind == "zero":
+        assert (pad == 0).all(), (label, a.pad_state)
+    elif a.pad_state.kind == "fill":
+        assert (pad == float(a.pad_state.fill)).all(), (label, a.pad_state)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr / HLO helpers
+# ---------------------------------------------------------------------------
+
+
+def _walk_eqns(jaxpr):
+    def visit(jx):
+        for eqn in jx.eqns:
+            yield eqn
+            for v in eqn.params.values():
+                for c in (v if isinstance(v, (list, tuple)) else [v]):
+                    sub = getattr(c, "jaxpr", None)
+                    if sub is not None:
+                        yield from visit(sub)
+
+    yield from visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+
+
+def _primitives(jaxpr) -> set:
+    return {e.primitive.name for e in _walk_eqns(jaxpr)}
+
+
+def _count_selects(jaxpr) -> int:
+    return sum(1 for e in _walk_eqns(jaxpr)
+               if e.primitive.name in ("select_n", "select"))
+
+
+def _entry_full_grid_defs(compiled_text: str, shape4) -> list:
+    """Non-parameter, non-root ENTRY instructions defining a full-grid value.
+
+    The eager chain wrote every intermediate to HBM; the fused plan's ENTRY
+    must contain the full-grid shape only as the parameter and the ROOT
+    fusion — anything else is an intermediate full-grid HBM write.
+    """
+    marker = "[" + ",".join(str(d) for d in shape4) + "]"
+    entry = compiled_text[compiled_text.index("ENTRY"):]
+    # ENTRY body ends at the first closing brace at column 0
+    body = entry.split("\n}")[0]
+    bad = []
+    for line in body.splitlines():
+        line = line.strip()
+        if "=" not in line or marker not in line.split("=", 1)[1].split("(")[0]:
+            continue
+        if "parameter(" in line or line.startswith("ROOT"):
+            continue
+        bad.append(line)
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# Oracle equality
+# ---------------------------------------------------------------------------
+
+
+def test_chain_matches_eager_and_numpy():
+    x, a = mk()
+    y, b = mk()
+    with repro.lazy():
+        r = (((a + b) * 2.0 - b).abs() * 0.5 + 0.25)
+    eager = (((a + b) * 2.0 - b).abs() * 0.5 + 0.25)
+    out = r.compute()
+    np.testing.assert_allclose(np.asarray(out.collect()),
+                               np.asarray(eager.collect()), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out.collect()),
+                               np.abs((x + y) * 2.0 - y) * 0.5 + 0.25,
+                               rtol=1e-5)
+    # plan-level pad propagation matches the eager claim, and it holds
+    assert out.pad_state == eager.pad_state
+    assert_claim_holds(out, "chain")
+
+
+_FLOAT_OPS = {
+    "add_s": lambda t, o: t + 1.5,
+    "mul_s": lambda t, o: t * 2.0,
+    "sub_b": lambda t, o: t - o,
+    "add_b": lambda t, o: t + o,
+    "rsub": lambda t, o: 3.0 - t,
+    "neg": lambda t, o: -t,
+    "abs": lambda t, o: t.abs(),
+    "sqrt_abs": lambda t, o: t.abs().sqrt(),
+    "div_s": lambda t, o: t / 2.0,
+}
+
+_INT_OPS = {
+    "add_s": lambda t, o: t + 2,
+    "mul_s": lambda t, o: t * 3,
+    "sub_b": lambda t, o: t - o,
+    "add_b": lambda t, o: t + o,
+    "neg": lambda t, o: -t,
+    "abs": lambda t, o: t.abs(),
+}
+
+
+@pytest.mark.slow
+@given(st.integers(1, 40), st.integers(1, 17), st.integers(1, 8),
+       st.integers(1, 8), st.sampled_from([np.float32, np.int32]),
+       st.lists(st.sampled_from(sorted(_FLOAT_OPS)), min_size=1, max_size=6))
+def test_property_lazy_equals_eager(n, m, bn, bm, dtype, op_names):
+    ops = _FLOAT_OPS if dtype == np.float32 else _INT_OPS
+    op_names = [o for o in op_names if o in ops] or ["add_s"]
+    _, a = mk(n, m, bn, bm, dtype)
+    _, b = mk(n, m, bn, bm, dtype)
+
+    def chain(t, o):
+        for name in op_names:
+            t = ops[name](t, o)
+        return t
+
+    eager = chain(a, b)
+    with repro.lazy():
+        lazy_r = chain(a, b)
+    out = lazy_r.compute()
+    assert out.shape == eager.shape and out.block_shape == eager.block_shape
+    np.testing.assert_allclose(np.asarray(out.collect()),
+                               np.asarray(eager.collect()),
+                               rtol=1e-5, atol=1e-5, err_msg=str(op_names))
+    assert out.pad_state == eager.pad_state, op_names
+    assert_claim_holds(out, str(op_names))
+
+
+def test_structural_ops_lazy_equivalence():
+    x, a = mk(17, 13, 4, 3)
+    y, b = mk(17, 13, 4, 3)
+    builders = {
+        "transpose": lambda: (a + 1.0).T,
+        "slice": lambda: (a * 2.0)[2:9, 1:7],
+        "filter": lambda: a[[0, 5, 12, 3]],
+        "rechunk": lambda: (a + b).rechunk((5, 2)),
+        "concat": lambda: concat_rows([a, b]),
+        "astype": lambda: (a * 2.5).astype(jnp.int32),
+        "matmul": lambda: (a + 1.0) @ (b.T + 2.0),
+        "mean0": lambda: a.mean(axis=0),
+        "sum1": lambda: (a + 1.0).sum(axis=1),
+        "max": lambda: a.max(axis=0),
+        "norm1": lambda: a.norm(axis=1),
+    }
+    for label, build in builders.items():
+        with repro.lazy():
+            lazy_r = build()
+        out = lazy_r.compute()
+        want = build()                         # same expression, eager
+        np.testing.assert_allclose(np.asarray(out.collect()),
+                                   np.asarray(want.collect()),
+                                   rtol=1e-4, atol=1e-4, err_msg=label)
+        assert_claim_holds(out, label)
+
+
+def test_scalar_reductions_and_mean():
+    x, a = mk(11, 7, 3, 3)
+    with repro.lazy():
+        s = (a * a).sum()
+        nrm = a.norm()
+        mn = a.mean()
+    assert float(s.compute()) == pytest.approx(float((a * a).sum()), rel=1e-5)
+    assert float(nrm.compute()) == pytest.approx(float(a.norm()), rel=1e-5)
+    assert float(mn.compute()) == pytest.approx(float(a.mean()), rel=1e-5)
+    # integer mean promotes before summing, lazily too
+    xi, ai = mk(9, 5, 4, 2, np.int32)
+    with repro.lazy():
+        mi = ai.mean(axis=0)
+    np.testing.assert_allclose(np.asarray(mi.compute().collect()),
+                               np.asarray(ai.mean(axis=0).collect()),
+                               rtol=1e-6)
+
+
+def test_lazy_shuffles_match_eager():
+    from repro.core import exact_shuffle, pseudo_shuffle
+    x, a = mk(16, 6, 4, 3)
+    key = jax.random.PRNGKey(7)
+    for fn in (exact_shuffle, pseudo_shuffle):
+        with repro.lazy():
+            lz = fn(key, a)
+        np.testing.assert_allclose(np.asarray(lz.compute().collect()),
+                                   np.asarray(fn(key, a).collect()))
+
+
+def test_dsarray_interop_without_flag():
+    """DsArray ∘ LazyDsArray records via the reflected ops (no context)."""
+    x, a = mk()
+    y, b = mk()
+    r = a - b.lazy()           # DsArray.__sub__ -> NotImplemented -> __rsub__
+    assert isinstance(r, expr_mod.LazyDsArray)
+    np.testing.assert_allclose(np.asarray(r.compute().collect()), x - y,
+                               rtol=1e-6, atol=1e-6)
+    r2 = a @ b.lazy().T
+    np.testing.assert_allclose(np.asarray(r2.compute().collect()), x @ y.T,
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# The acceptance assertion: 6-op chain -> one fused body
+# ---------------------------------------------------------------------------
+
+
+def test_six_op_chain_single_fused_body():
+    _, a = mk(64, 48, 8, 8)
+    with repro.lazy():
+        r = (((a + a) * 2.0 - a).abs() * 0.5 + 0.25)  # add,mul,sub,abs,mul,add
+    p = plan.plan_for(r)
+    # whole chain fused: one Blockwise over one leaf
+    assert p.stats["nodes_after"] == 2, p.stats           # leaf + fused node
+    assert p.stats["fused_elementwise"] == 5, p.stats     # 6 ops -> 1 node
+    jx = p.jaxpr()
+    # one jit body: every elementwise primitive inline, no nested calls
+    prims = _primitives(jx)
+    assert "pjit" not in prims and "custom_jvp_call" not in prims, prims
+    # ≤1 remask in the trace (this chain ends FILL-padded: bookkeeping only)
+    assert _count_selects(jx) <= 1
+    # zero intermediate full-grid HBM writes in the optimized HLO: the grid
+    # shape appears only as the parameter and the ROOT fusion
+    txt = p.lowered().compile().as_text()
+    bad = _entry_full_grid_defs(txt, a.blocks.shape)
+    assert not bad, bad
+    # ...and executing it is exactly one plan launch
+    before = plan.cache_stats()["launches"]
+    r.compute()
+    assert plan.cache_stats()["launches"] == before + 1
+
+
+def test_zero_preserving_chain_into_reduce_no_remask():
+    _, a = mk(64, 48, 8, 8)
+    with repro.lazy():
+        r = (-((a + a) * 2.0).abs()).sum()
+    jx = plan.plan_for(r).jaxpr()
+    assert _count_selects(jx) == 0
+    # FILL chain into a 0-identity reduce pays exactly the one deferred pass
+    with repro.lazy():
+        r2 = ((a + 1.0) * 2.0 + 3.0).sum()
+    assert _count_selects(plan.plan_for(r2).jaxpr()) == 1
+
+
+# ---------------------------------------------------------------------------
+# Transpose folding + sibling reductions
+# ---------------------------------------------------------------------------
+
+
+def test_matmul_transpose_folded(monkeypatch):
+    x, a = mk(24, 16, 8, 8)
+    y, b = mk(24, 32, 8, 8)
+    with repro.lazy():
+        r = a.T @ b
+    p = plan.plan_for(r)
+    root = p.roots[0]
+    assert isinstance(root, MatMul) and root.transpose_a
+    # the input stacked tensor is never transposed in the folded plan
+    jx = p.jaxpr()
+    in_shape = a.blocks.shape
+    input_transposes = [e for e in _walk_eqns(jx)
+                        if e.primitive.name == "transpose"
+                        and tuple(e.invars[0].aval.shape) == in_shape]
+    assert not input_transposes
+    np.testing.assert_allclose(np.asarray(r.compute().collect()), x.T @ y,
+                               rtol=1e-4, atol=1e-4)
+    # ...and it still lowers through the Pallas kernel when forced
+    monkeypatch.setenv("REPRO_GEMM", "interpret")
+    with repro.lazy():
+        r2 = a.T @ b
+    assert "pallas_call" in _primitives(plan.plan_for(r2).jaxpr())
+    np.testing.assert_allclose(np.asarray(r2.compute().collect()), x.T @ y,
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_transpose_hoisted_through_elementwise():
+    """(a.T * 2 + b.T) fuses below a single hoisted transpose, so the
+    elementwise work still collapses to one node."""
+    x, a = mk(12, 8, 4, 4)
+    y, b = mk(12, 8, 4, 4)
+    with repro.lazy():
+        r = a.T * 2.0 + b.T
+    p = plan.plan_for(r)
+    kinds = [type(n).__name__ for n in p.roots]
+    assert kinds == ["Transpose"], (kinds, p.stats)
+    np.testing.assert_allclose(np.asarray(r.compute().collect()),
+                               (x * 2.0 + y).T, rtol=1e-5)
+
+
+def test_transpose_not_hoisted_over_position_dependent_map():
+    """A position-dependent map_blocks fn does NOT commute with transpose:
+    the hoist rule must not fire (user fns are not marked elementwise)."""
+    from repro.core.dsarray import PAD_DIRTY
+    x, a = mk(5, 4, 2, 2)
+    fn = lambda b: b * jnp.arange(b.shape[-1], dtype=b.dtype)  # noqa: E731
+    eager = a.T.map_blocks(fn, pad=PAD_DIRTY)
+    with repro.lazy():
+        lz = a.T.map_blocks(fn, pad=PAD_DIRTY)
+    np.testing.assert_allclose(np.asarray(lz.compute().collect()),
+                               np.asarray(eager.collect()), rtol=1e-6)
+
+
+def test_explicit_dirty_pad_survives_plan_rewrites():
+    """pad=PAD_DIRTY on a position-dependent map_blocks must not be replaced
+    by a (wrong) probe during rebuild/fusion — the consuming reduction still
+    has to refill the pad region."""
+    from repro.core.dsarray import PAD_DIRTY
+    x, a = mk(5, 4, 2, 2)
+    fn = lambda b: b + jax.lax.broadcasted_iota(b.dtype, b.shape, 2)  # noqa: E731
+    eager = float(a.map_blocks(fn, pad=PAD_DIRTY).sum())
+    with repro.lazy():
+        s = a.map_blocks(fn, pad=PAD_DIRTY).sum()
+    assert float(s.compute()) == pytest.approx(eager, rel=1e-6)
+
+
+def test_plan_cache_is_bounded(monkeypatch):
+    plan.clear_cache()
+    monkeypatch.setattr(plan, "_CACHE_MAX", 8)
+    _, a = mk(8, 8, 4, 4)
+    for i in range(12):
+        with repro.lazy():
+            r = (a.map_blocks(lambda b: b * 1.0) + float(i)).sum()
+        r.compute()     # fresh lambda per iteration: every plan is a miss
+    assert len(plan._CACHE) <= 8
+    assert plan.cache_stats()["misses"] == 12
+
+
+def test_sibling_reductions_share_operand():
+    _, a = mk(32, 24, 8, 8)
+    with repro.lazy():
+        c = (a * 2.0 + 1.0)
+        s0, m0 = c.sum(axis=0), c.max(axis=0)
+    p = plan.plan_for(s0, m0)
+    r1, r2 = p.roots
+    assert r1.children[0] is r2.children[0]      # CSE: one shared operand
+    got_s, got_m = plan.compute_multi(s0, m0)
+    eager_c = (a * 2.0 + 1.0)
+    np.testing.assert_allclose(np.asarray(got_s.collect()),
+                               np.asarray(eager_c.sum(axis=0).collect()),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_m.collect()),
+                               np.asarray(eager_c.max(axis=0).collect()),
+                               rtol=1e-5)
+    # identical duplicate reductions collapse to ONE root computation
+    with repro.lazy():
+        d1, d2 = c.sum(axis=0), c.sum(axis=0)
+    pd = plan.plan_for(d1, d2)
+    assert pd.roots[0] is pd.roots[1]
+
+
+# ---------------------------------------------------------------------------
+# Compiled-plan cache
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_hits_on_fresh_data():
+    plan.clear_cache()
+    for i in range(3):
+        _, a = mk(16, 12, 4, 4, shift=float(i))
+        with repro.lazy():
+            r = ((a + 1.0) * 2.0).sum(axis=0)
+        r.compute()
+    st_ = plan.cache_stats()
+    assert st_["misses"] == 1 and st_["hits"] == 2, st_
+    # different structure (extra op) is a new plan
+    _, a = mk(16, 12, 4, 4)
+    with repro.lazy():
+        r = ((a + 1.0) * 2.0 + 3.0).sum(axis=0)
+    r.compute()
+    st_ = plan.cache_stats()
+    assert st_["misses"] == 2, st_
+    # different scalar constant is a different plan (constants are baked)
+    with repro.lazy():
+        r = ((a + 1.0) * 5.0).sum(axis=0)
+    r.compute()
+    assert plan.cache_stats()["misses"] == 3
+    # different leaf geometry is a different plan
+    _, a2 = mk(16, 12, 8, 4)
+    with repro.lazy():
+        r = ((a2 + 1.0) * 2.0).sum(axis=0)
+    r.compute()
+    assert plan.cache_stats()["misses"] == 4
+
+
+def test_scalar_dtype_in_plan_key():
+    """`a + 1` and `a + 1.0` are DIFFERENT plans: tuple keys hash 1 == 1.0,
+    so the baked scalar's dtype must be part of the key or an int32 cached
+    plan would answer the float recording."""
+    plan.clear_cache()
+    xi, ai = mk(8, 6, 4, 3, np.int32)
+    with repro.lazy():
+        ri = ai + 1
+    with repro.lazy():
+        rf = ai + 1.0
+    out_i, out_f = ri.compute(), rf.compute()
+    assert out_i.dtype == jnp.int32
+    assert jnp.issubdtype(out_f.dtype, jnp.floating), out_f.dtype
+    assert plan.cache_stats()["misses"] == 2
+
+
+def test_lazy_mode_is_scoped_and_reentrant():
+    _, a = mk()
+    assert isinstance(a + 1.0, DsArray)
+    with repro.lazy():
+        with repro.lazy():
+            assert isinstance(a + 1.0, expr_mod.LazyDsArray)
+        assert isinstance(a + 1.0, expr_mod.LazyDsArray)
+    assert isinstance(a + 1.0, DsArray)

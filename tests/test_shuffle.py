@@ -1,0 +1,121 @@
+"""Row shuffles: multiset preservation, pseudo≡exact equivalence-of-content,
+and the block-native lowering of ``exact_shuffle``.
+
+The paper's contract (§5.4): a shuffle permutes rows — every row keeps
+exactly one copy (pseudo is non-uniform but content-preserving).  The PR-3
+satellite replaced ``exact_shuffle``'s ``collect()`` + global ``take`` (the
+O(n·m)-materialize anti-pattern) with the per-axis block gather used by
+``A[idx]``; asserted here on the jaxpr: no rank-2 global intermediate.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DsArray, exact_shuffle, from_array, pseudo_shuffle
+
+RNG = np.random.default_rng(31)
+
+
+def mk(n, m, bn, bm):
+    x = (RNG.normal(size=(n, m)) + 1.0).astype(np.float32)
+    return x, from_array(x, (bn, bm))
+
+
+def row_multiset(arr: np.ndarray):
+    return sorted(map(tuple, np.round(np.asarray(arr, np.float64), 5)))
+
+
+def assert_pad_zero(a: DsArray):
+    gn, gm, bn, bm = a.blocks.shape
+    g = np.asarray(a.blocks).transpose(0, 2, 1, 3).reshape(gn * bn, gm * bm)
+    n, m = a.shape
+    assert np.all(g[n:] == 0) and np.all(g[:, m:] == 0)
+
+
+@pytest.mark.parametrize("n,m,bn,bm", [(16, 6, 4, 3),    # rows tile evenly
+                                       (13, 9, 4, 3),    # ragged tail
+                                       (5, 5, 8, 8),     # single block
+                                       (24, 4, 6, 4)])
+def test_shuffles_preserve_row_multiset(n, m, bn, bm):
+    x, a = mk(n, m, bn, bm)
+    key = jax.random.PRNGKey(n * 31 + m)
+    ex = exact_shuffle(key, a)
+    ps = pseudo_shuffle(key, a)
+    for out in (ex, ps):
+        assert out.shape == a.shape and out.block_shape == a.block_shape
+        assert row_multiset(out.collect()) == row_multiset(x)
+        assert_pad_zero(out.ensure_zero_pad())
+    # pseudo and exact are equivalent as row multisets (the paper's claim:
+    # pseudo differs only in the DISTRIBUTION of permutations, not content)
+    assert row_multiset(ps.collect()) == row_multiset(ex.collect())
+
+
+def test_exact_shuffle_deterministic_and_actually_permutes():
+    x, a = mk(32, 5, 4, 5)
+    key = jax.random.PRNGKey(0)
+    s1 = np.asarray(exact_shuffle(key, a).collect())
+    s2 = np.asarray(exact_shuffle(key, a).collect())
+    np.testing.assert_array_equal(s1, s2)
+    assert not np.array_equal(s1, x)    # 32 rows: identity is (32!)⁻¹ likely
+
+
+def test_exact_shuffle_traces_through_jit():
+    x, a = mk(24, 6, 5, 5)
+
+    @jax.jit
+    def sh(a, key):
+        return exact_shuffle(key, a)
+
+    out = sh(a, jax.random.PRNGKey(3))
+    assert row_multiset(out.collect()) == row_multiset(x)
+
+
+# ---------------------------------------------------------------------------
+# Block-native lowering: no rank-2 global intermediate (the seed collect()'d)
+# ---------------------------------------------------------------------------
+
+
+def rank2_global_intermediates(jaxpr, n, m, pn, pm):
+    bad = []
+
+    def visit(jx):
+        for eqn in jx.eqns:
+            for v in eqn.outvars:
+                shape = tuple(getattr(v.aval, "shape", ()))
+                if len(shape) == 2 and shape[0] >= min(n, pn) and \
+                        shape[1] >= min(m, pm):
+                    bad.append((eqn.primitive.name, shape))
+            for sub in eqn.params.values():
+                if hasattr(sub, "jaxpr"):
+                    visit(sub.jaxpr)
+        return bad
+
+    return visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+
+
+def test_exact_shuffle_no_global_intermediate():
+    _, a = mk(64, 48, 8, 8)
+
+    def sh(blocks, key):
+        return exact_shuffle(key, DsArray(blocks, a.grid)).blocks
+
+    jaxpr = jax.make_jaxpr(sh)(a.blocks, jax.random.PRNGKey(0))
+    gn, gm, bn, bm = a.blocks.shape
+    bad = rank2_global_intermediates(jaxpr, 64, 48, gn * bn, gm * bm)
+    assert not bad, f"global-shape intermediates produced: {bad}"
+
+
+def test_pseudo_shuffle_ragged_falls_back_to_exact_blockwise():
+    """Ragged rows: pseudo falls back to exact — which must stay block-native
+    (no collect) and content-preserving."""
+    x, a = mk(13, 9, 4, 3)
+
+    def sh(blocks, key):
+        return pseudo_shuffle(key, DsArray(blocks, a.grid)).blocks
+
+    jaxpr = jax.make_jaxpr(sh)(a.blocks, jax.random.PRNGKey(0))
+    gn, gm, bn, bm = a.blocks.shape
+    bad = rank2_global_intermediates(jaxpr, 13, 9, gn * bn, gm * bm)
+    assert not bad, bad
