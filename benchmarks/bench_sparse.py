@@ -1,0 +1,141 @@
+"""Sparse-vs-dense ds-array benchmark: matvec + gram across densities.
+
+The paper's sparse story (CSVM on scipy.sparse-blocked ds-arrays) pays off
+only below a crossover density — above it the value+index stream of the
+BCOO format moves MORE bytes than the dense tensor.  This bench measures
+
+* ``sp @ v`` (matvec) and ``spᵀ @ sp_dense`` (gram) at 4096², densities
+  1% / 5% (the headline points) plus a sweep used to locate the measured
+  crossover density — the density where the sparse path stops beating the
+  jitted dense path on the same machine;
+* the analytic crossover from ``costmodel.sparse_storage_crossover_density``
+  (1/3 for f32+i32) next to the measured one.
+
+``run()`` fills ``JSON_RECORDS``; ``benchmarks/run.py`` dumps them to
+``BENCH_sparse.json`` (op, size, density, us_per_call, backend, nse) so the
+sparse perf trajectory is machine-trackable across PRs.  CPU numbers
+exercise the identical bcoo_dot_general lowering the TPU path takes; only
+the absolute times change on real hardware.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, time_call
+from repro.core import costmodel, from_array, random_sparse
+from repro.core import sparse as sparse_mod
+from repro.core.dsarray import matmul_ta
+
+JSON_RECORDS: List[Dict] = []
+
+SIZE = int(os.environ.get("REPRO_BENCH_MAX_SPARSE", "4096"))
+HEADLINE_DENSITIES = (0.01, 0.05)
+# crossover sweep runs at <=1024² (the dense gram at 4096² x 8 densities
+# would dominate the whole benchmark suite's budget)
+SWEEP_SIZE = min(SIZE, 1024)
+SWEEP_DENSITIES = (0.002, 0.005, 0.01, 0.05, 0.1, 0.2, 0.35, 0.5)
+
+
+def _record(op: str, size: int, density: float, us: float, backend: str,
+            nse: int) -> None:
+    JSON_RECORDS.append({"op": op, "size": size, "density": density,
+                         "us_per_call": us, "backend": backend, "nse": nse})
+
+
+def _mk(size: int, density: float, block: int):
+    key = jax.random.PRNGKey(int(density * 1000) + size)
+    s = random_sparse(key, (size, size), (block, block), density=density)
+    d = s.todense()
+    v = from_array(np.ones((size, 1), np.float32), (block, 1))
+    return s, d, v
+
+
+def _measure_pair(size: int, density: float, block: int, iters: int):
+    """(matvec_sparse_us, matvec_dense_us, gram_sparse_us, gram_dense_us)"""
+    s, d, v = _mk(size, density, block)
+    mv_s = jax.jit(lambda a, b: (a @ b).blocks)
+    mv_d = jax.jit(lambda a, b: (a @ b).blocks)
+    gr_s = jax.jit(lambda a, b: matmul_ta(a, b).blocks)
+    gr_d = jax.jit(lambda a, b: matmul_ta(a, b).blocks)
+    out_s = np.asarray(mv_s(s, v))
+    out_d = np.asarray(mv_d(d, v))
+    ok = np.allclose(out_s, out_d, atol=1e-2)
+    t_mv_s = time_call(lambda: mv_s(s, v), warmup=0, iters=iters)
+    t_mv_d = time_call(lambda: mv_d(d, v), warmup=0, iters=iters)
+    gr_s(s, d), gr_d(d, d)                          # jit warmup
+    t_gr_s = time_call(lambda: gr_s(s, d), warmup=0, iters=iters)
+    t_gr_d = time_call(lambda: gr_d(d, d), warmup=0, iters=iters)
+    return t_mv_s, t_mv_d, t_gr_s, t_gr_d, ok, int(s.blocks.nse)
+
+
+def _crossover(measured) -> float:
+    """Density where sparse stops winning (``ratio`` = dense/sparse time,
+    measured at ascending densities), linearly interpolated.  0.0 means the
+    sparse path never won on this backend even at the lowest density (the
+    CPU einsum case); the max measured density means it always won."""
+    if not measured:
+        return 0.0
+    if measured[0][1] < 1.0:
+        return 0.0
+    prev_d, prev_r = measured[0]
+    for dens, ratio in measured[1:]:
+        if ratio < 1.0 <= prev_r:
+            frac = (prev_r - 1.0) / max(prev_r - ratio, 1e-9)
+            return prev_d + frac * (dens - prev_d)
+        prev_d, prev_r = dens, ratio
+    return measured[-1][0]
+
+
+def run() -> List[Row]:
+    JSON_RECORDS.clear()
+    rows: List[Row] = []
+    backend = jax.default_backend()
+
+    # headline points: 1% / 5% density at the full size
+    block = 256 if SIZE >= 1024 else max(32, SIZE // 4)
+    for dens in HEADLINE_DENSITIES:
+        t_mv_s, t_mv_d, t_gr_s, t_gr_d, ok, nse = _measure_pair(
+            SIZE, dens, block, iters=2)
+        _record("matvec_sparse", SIZE, dens, t_mv_s, backend, nse)
+        _record("matvec_dense", SIZE, dens, t_mv_d, backend, 0)
+        _record("gram_sparse", SIZE, dens, t_gr_s, backend, nse)
+        _record("gram_dense", SIZE, dens, t_gr_d, backend, 0)
+        rows.append((f"sparse/matvec_{SIZE}_d{dens}", t_mv_s,
+                     f"vs_dense={t_mv_d / t_mv_s:.2f}x;allclose={ok}"))
+        rows.append((f"sparse/gram_{SIZE}_d{dens}", t_gr_s,
+                     f"vs_dense={t_gr_d / t_gr_s:.2f}x"))
+
+    # density sweep for the measured crossover (smaller size: see above)
+    sweep_block = 256 if SWEEP_SIZE >= 1024 else max(32, SWEEP_SIZE // 4)
+    matvec_ratios, gram_ratios = [], []
+    for dens in SWEEP_DENSITIES:
+        t_mv_s, t_mv_d, t_gr_s, t_gr_d, ok, nse = _measure_pair(
+            SWEEP_SIZE, dens, sweep_block, iters=3)
+        matvec_ratios.append((dens, t_mv_d / t_mv_s))
+        gram_ratios.append((dens, t_gr_d / t_gr_s))
+        _record("matvec_sparse", SWEEP_SIZE, dens, t_mv_s, backend, nse)
+        _record("matvec_dense", SWEEP_SIZE, dens, t_mv_d, backend, 0)
+        _record("gram_sparse", SWEEP_SIZE, dens, t_gr_s, backend, nse)
+        _record("gram_dense", SWEEP_SIZE, dens, t_gr_d, backend, 0)
+
+    mv_x = _crossover(matvec_ratios)
+    gr_x = _crossover(gram_ratios)
+    analytic = costmodel.sparse_storage_crossover_density(4)
+    _record("crossover_matvec", SWEEP_SIZE, mv_x, 0.0, backend, 0)
+    _record("crossover_gram", SWEEP_SIZE, gr_x, 0.0, backend, 0)
+    _record("crossover_analytic", SWEEP_SIZE, analytic, 0.0, "costmodel", 0)
+    rows.append((f"sparse/crossover_matvec_{SWEEP_SIZE}", 0.0,
+                 f"density={mv_x:.3f};analytic={analytic:.3f}"))
+    rows.append((f"sparse/crossover_gram_{SWEEP_SIZE}", 0.0,
+                 f"density={gr_x:.3f};analytic={analytic:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -19,12 +19,12 @@ import os
 def main() -> None:
     from benchmarks import (bench_als, bench_kmeans, bench_lazy,
                             bench_matmul, bench_shuffle, bench_slicing,
-                            bench_transpose)
+                            bench_sparse, bench_transpose)
     from benchmarks.common import emit
 
     print("name,us_per_call,derived")
     for mod in (bench_transpose, bench_als, bench_shuffle, bench_slicing,
-                bench_kmeans, bench_matmul, bench_lazy):
+                bench_kmeans, bench_matmul, bench_lazy, bench_sparse):
         emit(mod.run())
 
     out = os.environ.get("REPRO_BENCH_JSON", "BENCH_matmul.json")
@@ -36,6 +36,11 @@ def main() -> None:
     with open(lazy_out, "w") as f:
         json.dump(bench_lazy.JSON_RECORDS, f, indent=2)
     print(f"# wrote {lazy_out} ({len(bench_lazy.JSON_RECORDS)} records)")
+
+    sparse_out = os.environ.get("REPRO_BENCH_SPARSE_JSON", "BENCH_sparse.json")
+    with open(sparse_out, "w") as f:
+        json.dump(bench_sparse.JSON_RECORDS, f, indent=2)
+    print(f"# wrote {sparse_out} ({len(bench_sparse.JSON_RECORDS)} records)")
 
 
 if __name__ == "__main__":

@@ -20,6 +20,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import sparse as jsparse
+from jax.experimental.sparse import BCOO
 
 from repro.core.dsarray import DsArray, from_array
 from repro.core.dataset_baseline import Dataset
@@ -40,12 +42,29 @@ def _row_sq_norms(x: DsArray) -> jnp.ndarray:
     return s.blocks.reshape(gn, bn).astype(jnp.float32)
 
 
-def _center_stats(blocks: jnp.ndarray, row_valid: jnp.ndarray,
+def _dots(blocks, c_blocks: jnp.ndarray) -> jnp.ndarray:
+    """``x · cᵀ`` summed over feature blocks: (gn, bn, k).
+
+    A BCOO-blocked x contracts its stored entries directly against the
+    center blocks (one ``bcoo_dot_general`` over the (gm, bm) feature dims
+    — nnz-proportional work, the CSVM/k-means payoff of sparse blocks); the
+    dense stacked tensor keeps the einsum.
+    """
+    if isinstance(blocks, BCOO):
+        return jsparse.bcoo_dot_general(
+            blocks, c_blocks, dimension_numbers=(((1, 3), (1, 2)), ((), ())))
+    return jnp.einsum("ijab,kjb->iak", blocks, c_blocks,
+                      preferred_element_type=jnp.float32)
+
+
+def _center_stats(blocks, row_valid: jnp.ndarray,
                   centers: jnp.ndarray, x_sq: jnp.ndarray,
                   n_cols: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Distance + assign + partial sums over the stacked block tensor.
 
-    blocks:    (gn, gm, bn, bm) feature-blocked samples (pad = 0)
+    blocks:    (gn, gm, bn, bm) feature-blocked samples (pad = 0), dense
+               stacked tensor OR stacked BCOO (sparse rows never densify:
+               both contractions run through bcoo_dot_general)
     row_valid: (gn, bn) bool
     centers:   (k, m_padded)    pad columns zero
     x_sq:      (gn, bn) per-row squared norms (see ``_row_sq_norms``)
@@ -54,18 +73,24 @@ def _center_stats(blocks: jnp.ndarray, row_valid: jnp.ndarray,
     gn, gm, bn, bm = blocks.shape
     k = centers.shape[0]
     c_blocks = centers.reshape(k, gm, bm)
-    # x . c^T summed over feature blocks: (gn, bn, k)
-    dots = jnp.einsum("ijab,kjb->iak", blocks, c_blocks,
-                      preferred_element_type=jnp.float32)
+    dots = _dots(blocks, c_blocks)                          # (gn, bn, k)
     c_sq = jnp.einsum("km,km->k", centers, centers,
                       preferred_element_type=jnp.float32)
     dist = x_sq[..., None] - 2.0 * dots + c_sq[None, None, :]
     labels = jnp.argmin(dist, axis=-1)                      # (gn, bn)
     onehot = jax.nn.one_hot(labels, k, dtype=blocks.dtype)  # (gn, bn, k)
     onehot = onehot * row_valid[..., None].astype(blocks.dtype)
-    sums = jnp.einsum("iak,ijab->kjb", onehot, blocks,
-                      preferred_element_type=jnp.float32)
-    sums = sums.reshape(k, gm * bm)
+    if isinstance(blocks, BCOO):
+        # onehotᵀ · x with the SPARSE side on the left (the dense-lhs form
+        # hits a jax-0.4.37 bcoo batching bug): contract the (gn, bn)
+        # sample dims -> (gm, bm, k), then relabel to (k, gm*bm)
+        sums = jsparse.bcoo_dot_general(
+            blocks, onehot, dimension_numbers=(((0, 2), (0, 1)), ((), ())))
+        sums = sums.transpose(2, 0, 1).reshape(k, gm * bm)
+    else:
+        sums = jnp.einsum("iak,ijab->kjb", onehot, blocks,
+                          preferred_element_type=jnp.float32)
+        sums = sums.reshape(k, gm * bm)
     counts = onehot.sum(axis=(0, 1))
     return labels, sums, counts
 
@@ -107,48 +132,62 @@ def _kmeanspp_init(x: np.ndarray, k: int, rng: np.random.Generator) -> np.ndarra
 
 
 @functools.partial(jax.jit)
-def _d2_to_center(blocks: jnp.ndarray, row_valid: jnp.ndarray,
-                  center: jnp.ndarray) -> jnp.ndarray:
+def _d2_to_center(blocks, row_valid: jnp.ndarray,
+                  center: jnp.ndarray, x_sq: jnp.ndarray) -> jnp.ndarray:
     """Per-row squared distance to one center, over the stacked tensor.
 
     ``center`` is the (gm*bm,)-padded row; both the block pad and the center
-    pad are zero, so the squared difference vanishes on pad columns.
-    Returns (gn, bn) with invalid rows zeroed.
+    pad are zero, so the squared difference vanishes on pad columns.  Dense
+    blocks use the numerically-nicer squared-difference einsum; BCOO blocks
+    use the ``‖x‖² − 2·x·c + ‖c‖²`` expansion so only stored entries are
+    touched.  Returns (gn, bn) with invalid rows zeroed.
     """
     gn, gm, bn, bm = blocks.shape
     c_blocks = center.reshape(gm, bm)
-    diff = blocks - c_blocks[None, :, None, :]
-    d2 = jnp.einsum("ijab,ijab->ia", diff, diff,
-                    preferred_element_type=jnp.float32)
+    if isinstance(blocks, BCOO):
+        dots = jsparse.bcoo_dot_general(
+            blocks, c_blocks, dimension_numbers=(((1, 3), (0, 1)), ((), ())))
+        c_sq = jnp.sum(center * center)
+        d2 = jnp.maximum(x_sq - 2.0 * dots + c_sq, 0.0)
+    else:
+        diff = blocks - c_blocks[None, :, None, :]
+        d2 = jnp.einsum("ijab,ijab->ia", diff, diff,
+                        preferred_element_type=jnp.float32)
     return d2 * row_valid.astype(d2.dtype)
 
 
 def _kmeanspp_init_ds(x: DsArray, k: int, rng: np.random.Generator,
-                      row_valid: jnp.ndarray) -> jnp.ndarray:
+                      row_valid: jnp.ndarray, x_sq: jnp.ndarray) -> jnp.ndarray:
     """Block-native k-means++: never materializes the global array.
 
     The seed version did ``x.collect()`` — O(n·m) single-host memory, the
     exact materialization tax the ds-array is meant to avoid.  Here each D²
-    pass is one fused op over the stacked tensor; only the O(n) distance
-    vector and the O(m) chosen rows ever reach the host.
+    pass is one fused op over the stacked tensor (nnz-proportional for BCOO
+    blocks); only the O(n) distance vector and the O(m) chosen rows ever
+    reach the host.
     """
     n, m = x.shape
     gn, gm, bn, bm = x.blocks.shape
 
     def fetch_row(i: int) -> jnp.ndarray:
+        if x.is_sparse:
+            # one block row's stored entries scatter into the padded row
+            from repro.core import sparse as sparse_mod
+            return sparse_mod.fetch_row_dense(x, int(i))
         # block-native single-row gather -> (1, m) -> padded (gm*bm,)
         row = x[int(i)].collect().ravel()
         return jnp.pad(row, (0, gm * bm - m))
 
     centers = [fetch_row(int(rng.integers(n)))]
-    d2 = _d2_to_center(x.blocks, row_valid, centers[0])
+    d2 = _d2_to_center(x.blocks, row_valid, centers[0], x_sq)
     for _ in range(1, k):
         d = np.maximum(np.asarray(d2, dtype=np.float64).reshape(-1)[:n], 0.0)
         tot = d.sum()
         # degenerate data (all rows coincide with a center): uniform fallback
         p = d / tot if tot > 0 else np.full(n, 1.0 / n)
         centers.append(fetch_row(int(rng.choice(n, p=p))))
-        d2 = jnp.minimum(d2, _d2_to_center(x.blocks, row_valid, centers[-1]))
+        d2 = jnp.minimum(d2, _d2_to_center(x.blocks, row_valid, centers[-1],
+                                           x_sq))
     return jnp.stack(centers)[:, : gm * bm]
 
 
@@ -171,16 +210,19 @@ class KMeans:
         return (gi * bn + bi) < x.shape[0]
 
     def fit(self, x: DsArray) -> "KMeans":
-        x = x.ensure_zero_pad()   # the einsums below read raw blocks
+        x = x.ensure_zero_pad()   # the contractions below read raw blocks
         n, m = x.shape
         row_valid = self._row_valid(x)
+        # assignment-step invariant ‖x‖², hoisted out of the Lloyd loop and
+        # computed by one fused lazy plan (was re-derived every iteration);
+        # for BCOO blocks the lazy plan is the sparse x*x -> row-sum pair,
+        # and the init + Lloyd contractions below never densify x
+        x_sq = _row_sq_norms(x)
         # block-native k-means++ init (k D² passes, each one fused op over the
         # stacked tensor; no x.collect() — the array never leaves the devices)
         init = _kmeanspp_init_ds(x, self.n_clusters,
-                                 np.random.default_rng(self.seed), row_valid)
-        # assignment-step invariant ‖x‖², hoisted out of the Lloyd loop and
-        # computed by one fused lazy plan (was re-derived every iteration)
-        x_sq = _row_sq_norms(x)
+                                 np.random.default_rng(self.seed), row_valid,
+                                 x_sq)
         centers, _, iters = _kmeans_run(x.blocks, init, row_valid, x_sq, m,
                                         self.tol, self.max_iter)
         self.centers_ = centers[:, :m]
@@ -208,7 +250,7 @@ class KMeans:
         m_pad = gm * bm
         centers = jnp.pad(self.centers_, ((0, 0), (0, m_pad - self.centers_.shape[1])))
         c_blocks = centers.reshape(-1, gm, bm)
-        dots = jnp.einsum("ijab,kjb->iak", x.blocks, c_blocks)
+        dots = _dots(x.blocks, c_blocks)
         x_sq = _row_sq_norms(x)
         c_sq = jnp.einsum("km,km->k", centers, centers)
         dist = x_sq[..., None] - 2 * dots + c_sq[None, None, :]

@@ -56,8 +56,8 @@ def _broadcast_rows(row: DsArray, n: int, bn: Optional[int] = None) -> DsArray:
     return DsArray(blocks, BlockGrid((n, m), (bn, bm)), PAD_ZERO)
 
 
-def pca(x: DsArray, n_components: int, n_iter: int = 30, seed: int = 0
-        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def pca(x: DsArray, n_components: int, n_iter: int = 30, seed: int = 0,
+        center: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Top-k PCA of (n_samples × n_features) ds-array.
 
     Returns (components (k, m), explained_variance (k,)).  Centers the data
@@ -69,10 +69,19 @@ def pca(x: DsArray, n_components: int, n_iter: int = 30, seed: int = 0
     tensor is never materialized in HBM) and the structurally-hashed plan
     compiles ONCE and replays every iteration; only the small (m, k) QR
     runs outside the plan.
+
+    BCOO-blocked inputs: centering destroys sparsity (sparse − dense
+    densifies by policy), so pass ``center=False`` for sparse data — the
+    power iteration then runs entirely through ``spᵀ @ (sp @ q)``
+    bcoo_dot_generals and the stored entries are never densified (the
+    TruncatedSVD convention for exactly this reason).
     """
     n, m = x.shape
-    mean = x.mean(axis=0)                         # (1, m) ds-array
-    xc = x - _broadcast_rows(mean, n, x.block_shape[0])
+    if center:
+        mean = x.mean(axis=0)                     # (1, m) ds-array
+        xc = x - _broadcast_rows(mean, n, x.block_shape[0])
+    else:
+        xc = x
     bq = (x.block_shape[1], n_components)
 
     xl = xc.lazy()
@@ -97,6 +106,8 @@ def tsqr(x: DsArray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     a (numerically) full-rank input; returns (q (n, m) dense, r (m, m)).
     """
     n, m = x.shape
+    if x.is_sparse:
+        x = x.todense()    # per-block QR factors are dense whatever the input
     if x.block_shape[1] != m:
         x = x.rechunk((x.block_shape[0], m))
     x = x.ensure_zero_pad()

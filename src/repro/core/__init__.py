@@ -24,6 +24,8 @@ from repro.core.dsarray import (
 )
 from repro.core.shuffle import exact_shuffle, pseudo_shuffle
 from repro.core import compat, costmodel, structural
+from repro.core import sparse
+from repro.core.sparse import from_scipy, random_sparse
 from repro.core import expr, plan
 from repro.core.expr import LazyDsArray, lazy
 from repro.core.plan import compute, compute_multi
@@ -37,6 +39,7 @@ __all__ = [
     "concat_rows", "pseudo_shuffle", "exact_shuffle", "costmodel",
     "compat", "structural", "gram", "take_rows", "take_cols",
     "apply_along_axis", "matmul_ta",
+    "sparse", "from_scipy", "random_sparse",
     "expr", "plan", "LazyDsArray", "lazy", "compute", "compute_multi",
     "ceil_div", "round_up",
 ]

@@ -246,6 +246,75 @@ def chain_remask_passes(n_ops: int, pad_tracked: bool = True,
 
 
 # ---------------------------------------------------------------------------
+# Sparse-block (BCOO) laws: when does the bcoo format pay?
+#
+# A stacked BCOO stores, per entry, the value plus a 2-D block-local index
+# (element size e + 2*idx_e bytes vs e for dense), so storage — and the HBM
+# traffic of every streaming op, which is what bounds elementwise/matvec on
+# TPU — shrinks only below a crossover density.  FLOP-wise spmm scales with
+# nnz directly.  ``core.io.from_array_auto`` consults these laws to pick a
+# ``block_format``, and ``benchmarks/bench_sparse.py`` measures the real
+# crossover against them.
+# ---------------------------------------------------------------------------
+
+
+def bcoo_bytes(nnz: int, e: int, idx_e: int = 4) -> float:
+    """Stored bytes of a stacked BCOO with ``nnz`` entries (data + the
+    per-entry (row, col) block-local index pair)."""
+    return nnz * (e + 2.0 * idx_e)
+
+
+def dense_stacked_bytes(gn: int, gm: int, bn: int, bm: int, e: int) -> float:
+    return float(gn) * gm * bn * bm * e
+
+
+def sparse_storage_crossover_density(e: int, idx_e: int = 4) -> float:
+    """Density below which bcoo storage (and thus the bytes every streaming
+    op moves) beats dense: d* = e / (e + 2*idx_e) — 1/3 for f32 data with
+    i32 indices.  This is the io auto-pick default threshold."""
+    return e / (e + 2.0 * idx_e)
+
+
+def spmm_flops(nnz: int, out_cols: int) -> float:
+    """MACs x2 of ``sp @ dense``: each stored entry multiplies one dense
+    row-slice of the rhs (``out_cols`` wide) — nnz-proportional, vs the
+    dense ``2*n*k*out_cols``."""
+    return 2.0 * nnz * out_cols
+
+
+def spmm_hbm_bytes(nnz: int, k: int, m: int, out_rows: int, e: int,
+                   idx_e: int = 4) -> float:
+    """HBM traffic of ``sp[out_rows, k] @ dense[k, m]``: stream the stored
+    entries once (value + index), the dense rhs once, write the dense
+    result once."""
+    return bcoo_bytes(nnz, e, idx_e) + float(k) * m * e + float(out_rows) * m * e
+
+
+def sparse_matmul_crossover_density(k: int, m: int, out_rows: int, e: int,
+                                    idx_e: int = 4) -> float:
+    """Density where spmm HBM bytes equal the dense GEMM's A-read bytes
+    (rhs/result traffic is common to both): nnz*(e+2*idx_e) = out_rows*k*e
+    → d* = e/(e+2*idx_e), the storage crossover again — spmm is
+    memory-bound at ds-array block sizes, so bytes ARE the model."""
+    del k, m, out_rows
+    return sparse_storage_crossover_density(e, idx_e)
+
+
+def tosparse_pays(density: float, e: int = 4, idx_e: int = 4,
+                  streaming_ops: int = 1) -> bool:
+    """Should an array be converted to bcoo?  The conversion itself costs
+    one dense read; it pays when the per-op byte saving, times the number
+    of streaming ops that will consume the sparse form, beats that.  With
+    ``streaming_ops >= 1`` the break-even is the storage crossover shifted
+    by the one-off read: d* * s/(s+1) is conservative; for the io auto-pick
+    (arrays loaded once, consumed many times) the plain crossover is used.
+    """
+    d_star = sparse_storage_crossover_density(e, idx_e)
+    return density < d_star * streaming_ops / (streaming_ops + 1.0) \
+        if streaming_ops < 4 else density < d_star
+
+
+# ---------------------------------------------------------------------------
 # Lazy-plan laws: what record→optimize→fuse buys over eager dispatch.
 #
 # An eager elementwise chain of L ops issues L dispatches, each reading and

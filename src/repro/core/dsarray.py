@@ -47,6 +47,49 @@ elementwise chain (L)   L remask passes           0 remask passes (ZERO-
 ``exact_shuffle``       O(N) collect + take       1 per-block row gather
 ======================  ========================  ==========================
 
+Block formats (paper §4.2: blocks are NumPy arrays OR scipy.sparse CSR):
+``block_format`` names the storage — ``"dense"`` is the rank-4 stacked
+tensor above; ``"bcoo"`` stores the same grid as one
+``jax.experimental.sparse.BCOO`` with batch dims (gn, gm) and element-
+sparse (bn, bm) blocks (see ``core.sparse``).  Sparse arrays are
+ZERO-padded **by construction** (pad positions own no entry), so
+``ensure_zero_pad`` is free.  Per-op storage behaviour:
+
+======================  ======================================================
+op on a bcoo array      behaviour
+======================  ======================================================
+``* / scalar``, ``-x``  sparse-native data map (index-preserving) when
+``abs``, ``sqrt``         ``op(0) == 0``; result stays bcoo
+``+ scalar``, ``exp``   densify (implicit zeros would change value)
+``sp ± sp``, ``sp*sp``  sparse-native index merge (nse grows on ±;
+                          ``sparse.canonicalize`` re-packs)
+``sp * dense``          sparse-native index-gather of the dense operand
+``sp / dense``          sparse-native (sparse side is the numerator)
+``dense / sp``          densify (division by implicit zero)
+``astype``              sparse-native data cast
+``transpose``           sparse-native batch+index swap — O(nnz), no relayout
+``sp @ dense``          ONE ``bcoo_dot_general`` over (grid-k, block-k); the
+``spᵀ @ dense``           sparse operand is never densified (jaxpr-asserted);
+                          dense result
+``x @ sp``, ``sp @ sp`` right operand densifies
+``sum``                 sparse-native ``bcoo_reduce_sum`` (identity == the
+                          implicit zeros); small result is dense
+``max``/``min``/mean    max/min densify (implicit zeros compete); mean is
+                          sum-based and stays sparse-native
+slice/rechunk/concat/   densify, then the dense block-native path
+shuffle/apply_along
+======================  ======================================================
+
+Lazy plans record the same classification (``core.expr``): sparse Blockwise
+nodes carry BCOO-consuming fns and are **fusion boundaries** — the
+optimizer never composes them with dense elementwise chains (``core.plan``)
+— but they still CSE and their compiled plans cache by structure + nse.
+
+``check_invariants()`` validates the claims above on concrete arrays (pad
+region matches ``pad_state``, grid/shape consistency, BCOO indices
+in-bounds-or-zero); exported for tests and run at every construction under
+``REPRO_DEBUG=1``.
+
 Remask-elision rules: a binary/unary op on known pad states yields the op of
 the pad constants (probed on 0-d values at trace time) — nan or a traced
 operand demotes to DIRTY; ``_reduce`` refills only when the pad state
@@ -89,11 +132,18 @@ from typing import Any, Callable, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.sparse import BCOO
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.blocking import BlockGrid, ceil_div, round_up
 
 Number = Union[int, float]
+
+
+def _debug_validate() -> bool:
+    """True when REPRO_DEBUG=1: every DsArray construction self-checks."""
+    import os
+    return os.environ.get("REPRO_DEBUG") == "1"
 
 
 def _lazy_mode() -> bool:
@@ -253,9 +303,17 @@ class DsArray:
             raise ValueError(
                 f"stacked grid {blocks.shape[:2]} smaller than logical grid {grid.grid}"
             )
+        if isinstance(blocks, BCOO) and pad_state.kind != "zero":
+            # sparse blocks have NO entries in the pad region — the pad is
+            # exactly zero by construction, any other claim is a bug
+            raise ValueError(
+                f"bcoo-blocked ds-arrays are zero-padded by construction, "
+                f"got pad_state={pad_state}")
         self.blocks = blocks
         self.grid = grid
         self.pad_state = pad_state
+        if _debug_validate():
+            self.check_invariants()
 
     # -- pytree protocol ------------------------------------------------------
     def tree_flatten(self):
@@ -285,6 +343,20 @@ class DsArray:
         return self.blocks.dtype
 
     @property
+    def block_format(self) -> str:
+        """Storage of the stacked blocks: ``"dense"`` | ``"bcoo"``.
+
+        Derived from the blocks' pytree type, so it is static under tracing
+        (a BCOO stays a BCOO-of-tracers) and can never disagree with the
+        data it describes.
+        """
+        return "bcoo" if isinstance(self.blocks, BCOO) else "dense"
+
+    @property
+    def is_sparse(self) -> bool:
+        return self.block_format == "bcoo"
+
+    @property
     def ndim(self) -> int:
         return 2
 
@@ -304,6 +376,9 @@ class DsArray:
 
     def _remask(self, fill: Number = 0) -> jnp.ndarray:
         """Blocks with the pad region forced to ``fill``."""
+        if self.is_sparse:
+            raise RuntimeError("sparse blocks are zero-padded by construction"
+                               " — there is nothing to remask")
         fill_v = jnp.asarray(fill, dtype=self.blocks.dtype)
         return jnp.where(self._mask(), self.blocks, fill_v)
 
@@ -325,6 +400,8 @@ class DsArray:
     # -- materialization ------------------------------------------------------
     def collect(self) -> jnp.ndarray:
         """Paper §4.2.3 ``collect``: merge the blocks into one local array."""
+        if self.is_sparse:
+            return self.todense().collect()
         gn, gm, bn, bm = self.blocks.shape
         n, m = self.shape
         global_form = self.blocks.transpose(0, 2, 1, 3).reshape(gn * bn, gm * bm)
@@ -333,8 +410,58 @@ class DsArray:
     def _global_padded(self) -> jnp.ndarray:
         """Global layout including pad (pad forced zero)."""
         me = self.ensure_zero_pad()
+        if me.is_sparse:
+            me = me.todense()
         gn, gm, bn, bm = me.blocks.shape
         return me.blocks.transpose(0, 2, 1, 3).reshape(gn * bn, gm * bm)
+
+    # -- block-format conversions (paper: NumPy OR scipy.sparse blocks) ------
+    def todense(self) -> "DsArray":
+        """This array with dense stacked blocks (identity when dense)."""
+        from repro.core import sparse as sparse_mod
+        return sparse_mod.todense(self)
+
+    def tosparse(self, nse: Optional[int] = None) -> "DsArray":
+        """This array with BCOO blocks (identity when sparse).  See
+        ``core.sparse`` for the representation and op policy."""
+        from repro.core import sparse as sparse_mod
+        return sparse_mod.tosparse(self, nse=nse)
+
+    # -- debug validation ------------------------------------------------------
+    def check_invariants(self) -> "DsArray":
+        """Validate the static claims against the concrete data; raises on
+        violation, returns self for chaining.  Checked: grid/shape/block
+        geometry, the pad region actually matching ``pad_state``, and (for
+        bcoo) indices in-bounds-or-zero-data plus the zero-pad construction
+        invariant.  A no-op on traced/abstract blocks.  Runs at every
+        construction under ``REPRO_DEBUG=1``; the differential harness calls
+        it after every op.
+        """
+        gn, gm = self.grid.grid
+        bn, bm = self.grid.block_shape
+        n, m = self.shape
+        if n > gn * bn or m > gm * bm:
+            raise AssertionError(f"grid {self.grid} does not cover shape")
+        leaf = self.blocks.data if self.is_sparse else self.blocks
+        if isinstance(leaf, jax.core.Tracer) or not isinstance(leaf, jax.Array):
+            return self          # abstract/traced: nothing concrete to check
+        if self.is_sparse:
+            from repro.core import sparse as sparse_mod
+            sparse_mod.check_bcoo_invariants(self)
+            return self
+        sgn, sgm = self.stacked_grid
+        g = np.asarray(self.blocks).transpose(0, 2, 1, 3)
+        g = g.reshape(sgn * bn, sgm * bm)
+        pad = np.concatenate([g[n:].ravel(), g[:n, m:].ravel()])
+        if self.pad_state.kind == "zero":
+            if pad.size and not (pad == 0).all():
+                raise AssertionError("pad_state=ZERO but pad region nonzero")
+        elif self.pad_state.kind == "fill":
+            want = np.asarray(self.pad_state.fill, self.blocks.dtype)
+            if pad.size and not (pad == want).all():
+                raise AssertionError(
+                    f"pad_state=FILL({self.pad_state.fill}) but pad differs")
+        return self
 
     # -- laziness -------------------------------------------------------------
     def lazy(self) -> "LazyDsArray":
@@ -350,6 +477,9 @@ class DsArray:
         if _lazy_mode():
             from repro.core import expr
             return expr.lift_lazy(self)._binary(other, op, reverse)
+        if self.is_sparse or (isinstance(other, DsArray) and other.is_sparse):
+            from repro.core import sparse as sparse_mod
+            return sparse_mod.binary(self, other, op, reverse)
         me = self
         if isinstance(other, DsArray):
             if other.shape != self.shape or other.block_shape != self.block_shape:
@@ -420,6 +550,9 @@ class DsArray:
         if _lazy_mode():
             from repro.core import expr
             return expr.lift_lazy(self).map_blocks(fn, pad=pad)
+        if self.is_sparse:
+            from repro.core import sparse as sparse_mod
+            return sparse_mod.map_blocks_sparse(self, fn, pad)
         out = fn(self.blocks)
         if out.shape != self.blocks.shape:
             raise ValueError("map_blocks must preserve block shapes")
@@ -440,11 +573,19 @@ class DsArray:
         if _lazy_mode():
             from repro.core import expr
             return expr.lift_lazy(self).astype(dtype)
+        if self.is_sparse:
+            from repro.core import sparse as sparse_mod
+            return sparse_mod.astype_sparse(self, dtype)
         pad = self.pad_state
         if pad.kind == "fill":
-            # the physical pad is cast too; re-derive the constant the same way
+            # the physical pad is cast too; re-derive the constant the same
+            # way — in NumPy, NOT jnp: under the lazy layer this method runs
+            # inside eval_shape, where a jnp op on the constant would be
+            # staged into a tracer and wrongly demote the claim to DIRTY
             try:
-                pad = pad_state_of(jnp.asarray(pad.fill, self.dtype).astype(dtype))
+                pad = pad_state_of(
+                    np.asarray(pad.fill, dtype=np.dtype(self.dtype))
+                    .astype(np.dtype(dtype)))
             except Exception:
                 pad = PAD_DIRTY
         return DsArray(self.blocks.astype(dtype), self.grid, pad)
@@ -460,10 +601,16 @@ class DsArray:
         if _lazy_mode():
             from repro.core import expr
             return expr.lift_lazy(self).transpose()
+        if self.is_sparse:
+            from repro.core import sparse as sparse_mod
+            return sparse_mod.transpose_sparse(self)
         out = jnp.swapaxes(jnp.swapaxes(self.blocks, 0, 1), 2, 3)
         return DsArray(out, self.grid.transpose(), self.pad_state)
 
     def _pad_grid_to(self, stacked_grid: Tuple[int, int]) -> "DsArray":
+        if self.is_sparse:
+            from repro.core import sparse as sparse_mod
+            return sparse_mod.pad_grid_sparse(self, stacked_grid)
         gn, gm = self.stacked_grid
         tn, tm = stacked_grid
         if (tn, tm) == (gn, gm):
@@ -511,6 +658,10 @@ class DsArray:
                 return expr.lift_lazy(self) @ other
         if not isinstance(other, DsArray):
             return NotImplemented
+        if other.is_sparse:
+            # sparse is supported on the LEFT (sp @ dense through
+            # bcoo_dot_general); a sparse right operand densifies
+            other = other.todense()
         if self.shape[1] != other.shape[0]:
             raise ValueError(f"matmul shape mismatch {self.shape} @ {other.shape}")
         if self.block_shape[1] != other.block_shape[0]:
@@ -533,6 +684,9 @@ class DsArray:
         if _lazy_mode():
             from repro.core import expr
             return expr.lift_lazy(self)._reduce(op, axis)
+        if self.is_sparse:
+            from repro.core import sparse as sparse_mod
+            return sparse_mod.reduce_sparse(self, op, axis)
         fill = {"sum": 0, "max": -jnp.inf, "min": jnp.inf}[op]
         if jnp.issubdtype(self.dtype, jnp.integer):
             fill = {"sum": 0,
@@ -630,6 +784,9 @@ class DsArray:
         Pads the grid to mesh-axis multiples first (all-pad blocks mask out),
         the SPMD analogue of PyCOMPSs assigning whole blocks to workers.
         """
+        if self.is_sparse:
+            from repro.core import sparse as sparse_mod
+            return sparse_mod.distribute_sparse(self, mesh, axes)
         dn = mesh.shape[axes[0]] if axes[0] else 1
         dm = mesh.shape[axes[1]] if axes[1] else 1
         gn, gm = self.stacked_grid
@@ -661,6 +818,8 @@ def matmul_ta(a: DsArray, b: DsArray) -> DsArray:
     from repro.kernels.matmul.ops import local_matmul
     if not isinstance(b, DsArray):
         raise TypeError("matmul_ta wants DsArray operands")
+    if b.is_sparse:
+        b = b.todense()    # sparse is supported on the (transposed) left
     if a.shape[0] != b.shape[0]:
         raise ValueError(f"matmul_ta shape mismatch {a.shape}ᵀ @ {b.shape}")
     if a.block_shape[0] != b.block_shape[0]:
@@ -693,6 +852,8 @@ def apply_along_axis(fn: Callable[[jnp.ndarray], jnp.ndarray], axis: int,
     if axis not in (0, 1):
         raise ValueError(f"axis must be 0 or 1, got {axis}")
     a2 = a.ensure_zero_pad()
+    if a2.is_sparse:
+        a2 = a2.todense()      # per-slice fns need the dense block layout
     gn, gm, bn, bm = a2.blocks.shape
     n, m = a2.shape
     if axis == 1:
@@ -797,8 +958,12 @@ def concat_rows(arrays: Sequence[DsArray]) -> DsArray:
     stacked directly (O(1) data movement); otherwise parts are re-tiled with
     per-block gathers.  See ``core.structural.concat_rows``.
     """
-    if _lazy_mode():
+    arrays = list(arrays)
+    expr_m = sys.modules.get("repro.core.expr")
+    if _lazy_mode() or (expr_m is not None and
+                        any(isinstance(a, expr_m.LazyDsArray)
+                            for a in arrays)):
         from repro.core import expr
-        return expr.record_concat(list(arrays))
+        return expr.record_concat(arrays)
     from repro.core import structural
     return structural.concat_rows(arrays)

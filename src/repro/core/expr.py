@@ -55,10 +55,11 @@ from typing import Any, Callable, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.sparse import BCOO
 
 from repro.core.blocking import BlockGrid
-from repro.core.dsarray import (DsArray, PAD_DIRTY, PadState, matmul_ta,
-                                pad_state_of)
+from repro.core.dsarray import (DsArray, PAD_DIRTY, PAD_ZERO, PadState,
+                                matmul_ta, pad_state_of)
 
 Number = Union[int, float]
 
@@ -113,11 +114,20 @@ def _is_ds(meta) -> bool:
     return isinstance(meta, DsArray)
 
 
+def _is_sparse(meta) -> bool:
+    """True for a ds-shaped meta whose blocks are (abstract) BCOO — the
+    ``block_format`` the lazy layer carries along every node."""
+    return _is_ds(meta) and isinstance(meta.blocks, BCOO)
+
+
 def _meta_sig(meta) -> tuple:
-    """Hashable signature of a node's output metadata."""
+    """Hashable signature of a node's output metadata.  Sparse metas add
+    the block format and nse: two plans whose arrays differ only in stored
+    entry count must neither share memoized metadata nor a compiled plan."""
     if _is_ds(meta):
+        fmt = ("bcoo", meta.blocks.nse) if _is_sparse(meta) else ("dense",)
         return ("ds", tuple(meta.blocks.shape), str(meta.blocks.dtype),
-                meta.grid, meta.pad_state)
+                meta.grid, meta.pad_state) + fmt
     return ("arr", tuple(meta.shape), str(meta.dtype))
 
 
@@ -190,14 +200,22 @@ class Leaf(Expr):
     def __init__(self, value: DsArray):
         self.value = value
         self.children = ()
-        self.meta = DsArray(
-            jax.ShapeDtypeStruct(value.blocks.shape, value.blocks.dtype),
-            value.grid, value.pad_state)
+        if isinstance(value.blocks, BCOO):
+            # BCOO coerces constructor args, so build the abstract form via
+            # an identity eval_shape (returns a BCOO of ShapeDtypeStructs)
+            with suspend_lazy():
+                abstract = jax.eval_shape(lambda blk: blk, value.blocks)
+        else:
+            abstract = jax.ShapeDtypeStruct(value.blocks.shape,
+                                            value.blocks.dtype)
+        self.meta = DsArray(abstract, value.grid, value.pad_state)
 
     def signature(self):
         g = self.value.grid
+        fmt = ("bcoo", self.value.blocks.nse) if self.value.is_sparse \
+            else ("dense",)
         return ("leaf", g.shape, g.block_shape, self.value.stacked_grid,
-                str(self.value.dtype), self.value.pad_state)
+                str(self.value.dtype), self.value.pad_state) + fmt
 
     def local_key(self):
         return self.signature()
@@ -262,6 +280,11 @@ class Blockwise(Expr):
         metas = [c.meta for c in self.children]
         if not any(_is_ds(m) for m in metas):
             return PAD_DIRTY     # scalar node: pad meaningless
+        if any(_is_sparse(m) for m in metas):
+            # sparse-consuming fns are recorded only by the facade's
+            # zero-preserving classification, and sparse results are
+            # zero-padded by construction — the only legal claim
+            return PAD_ZERO
         probes = []
         for m in metas:
             if not _is_ds(m):
@@ -289,7 +312,10 @@ class Blockwise(Expr):
         ref = next((v for v in vals if isinstance(v, DsArray)), None)
         if ref is None:
             return out
-        return DsArray(out, ref.grid, self.pad)
+        # a BCOO result is zero-padded by construction whatever the
+        # resolved pad claim says (the claim is for the dense fns)
+        pad = PAD_ZERO if isinstance(out, BCOO) else self.pad
+        return DsArray(out, ref.grid, pad)
 
     def local_key(self):
         return ("bw", self.key)
@@ -358,6 +384,52 @@ class AsType(Expr):
 
     def rebuild(self, children):
         return AsType(children[0], self.dtype)
+
+
+class Densify(Expr):
+    """Block-format conversion bcoo -> dense.  Inserted by the facade in
+    front of ops with no zero-preserving sparse form (``+ scalar``, ``exp``,
+    dense/sp division, ...) — an explicit plan node, so the conversion is
+    visible to the optimizer and a sparse Blockwise chain never silently
+    densifies inside a fused body."""
+
+    __slots__ = ()
+
+    def __init__(self, child: Expr):
+        self.children = (child,)
+        self._infer_meta()
+
+    def lower(self, v):
+        return v.todense()
+
+    def local_key(self):
+        return ("densify",)
+
+    def rebuild(self, children):
+        return Densify(children[0])
+
+
+class ToSparse(Expr):
+    """Block-format conversion dense -> bcoo with a STATIC ``nse`` (entry
+    capacity per block): the lazy layer cannot measure nnz at record time,
+    so callers choose the capacity — ``costmodel.tosparse_pays`` says when
+    the conversion is worth it at all."""
+
+    __slots__ = ("nse",)
+
+    def __init__(self, child: Expr, nse: int):
+        self.nse = int(nse)
+        self.children = (child,)
+        self._infer_meta()
+
+    def lower(self, v):
+        return v.tosparse(nse=self.nse)
+
+    def local_key(self):
+        return ("tosparse", self.nse)
+
+    def rebuild(self, children):
+        return ToSparse(children[0], self.nse)
 
 
 class MatMul(Expr):
@@ -685,6 +757,14 @@ class LazyDsArray:
         return self.expr.meta.pad_state
 
     @property
+    def block_format(self) -> str:
+        return "bcoo" if _is_sparse(self.expr.meta) else "dense"
+
+    @property
+    def is_sparse(self) -> bool:
+        return self.block_format == "bcoo"
+
+    @property
     def ndim(self) -> int:
         return 2
 
@@ -707,24 +787,76 @@ class LazyDsArray:
     def lazy(self) -> "LazyDsArray":
         return self
 
+    # -- block-format conversions --------------------------------------------
+    def todense(self) -> "LazyDsArray":
+        if not self.is_sparse:
+            return self
+        return LazyDsArray(Densify(self.expr))
+
+    def tosparse(self, nse: Optional[int] = None) -> "LazyDsArray":
+        if self.is_sparse:
+            return self
+        if nse is None:
+            raise ValueError(
+                "lazy tosparse needs an explicit nse= (stored entries per "
+                "block): nnz is runtime data the recorder cannot see — "
+                "convert eagerly or pass a capacity")
+        return LazyDsArray(ToSparse(self.expr, nse))
+
     # -- elementwise ---------------------------------------------------------
     def _binary(self, other, op: Callable, reverse: bool = False,
                 name: Optional[str] = None):
         name = name or getattr(op, "__name__", "op")
         if isinstance(other, (LazyDsArray, DsArray)):
             a, b = _align(self.expr, lift(other))
+            fa, fb = _is_sparse(a.meta), _is_sparse(b.meta)
+            if fa or fb:
+                # record the SAME classification the eager dispatch uses;
+                # sparse Blockwise nodes carry BCOO-consuming fns and are
+                # fusion boundaries in core.plan
+                from repro.core import sparse as sparse_mod
+                mode = sparse_mod.classify_binary(
+                    op, fa, ("ds", fb, b.meta.dtype), reverse, a.meta.dtype)
+                if mode == "pair":
+                    return LazyDsArray(Blockwise(
+                        sparse_mod.pair_fn(op, reverse), (a, b),
+                        ("sp-pair", name, reverse), pad=PAD_ZERO,
+                        elementwise=True))
+                if mode == "gather":
+                    op2 = (lambda u, v: op(v, u)) if reverse else op
+                    return LazyDsArray(Blockwise(
+                        sparse_mod.gather_fn(op2, fa), (a, b),
+                        ("sp-gather", name, reverse), pad=PAD_ZERO,
+                        elementwise=True))
+                if fa:
+                    a = Densify(a)
+                if fb:
+                    b = Densify(b)
             fn = (lambda x, y: op(y, x)) if reverse else (lambda x, y: op(x, y))
             return LazyDsArray(Blockwise(fn, (a, b), (name, reverse),
                                          elementwise=True))
         if isinstance(other, LazyScalar):
+            # the scalar's VALUE is unknown at record time, so there is no
+            # zero-preservation proof: a sparse operand densifies
+            me = self.todense().expr
             fn = (lambda x, s: op(s, x)) if reverse else (lambda x, s: op(x, s))
-            return LazyDsArray(Blockwise(fn, (self.expr, other.expr),
+            return LazyDsArray(Blockwise(fn, (me, other.expr),
                                          (name, reverse), elementwise=True))
         if isinstance(other, (int, float, jnp.ndarray, np.ndarray)) \
                 and jnp.ndim(other) == 0:
             sk = _scalar_key(other)
             if sk is None:
                 return NotImplemented
+            if self.is_sparse:
+                from repro.core import sparse as sparse_mod
+                mode = sparse_mod.classify_binary(op, True, other, reverse,
+                                                  self.dtype)
+                if mode == "data":
+                    return LazyDsArray(Blockwise(
+                        sparse_mod.data_map_fn(op, other, reverse),
+                        (self.expr,), ("sp-data", name, reverse, sk),
+                        pad=PAD_ZERO, elementwise=True))
+                return self.todense()._binary(other, op, reverse, name)
             if reverse:
                 fn = lambda x: op(other, x)          # noqa: E731
             else:
@@ -772,6 +904,15 @@ class LazyDsArray:
         # are NOT marked elementwise — they may be position-dependent, which
         # must block the optimizer's transpose-hoist rule
         key = _key if _key is not None else ("map", fn, pad)
+        if self.is_sparse:
+            from repro.core import sparse as sparse_mod
+            if pad is None and sparse_mod.zero_preserving_map(fn, self.dtype):
+                return LazyDsArray(Blockwise(
+                    sparse_mod.sparse_map_fn(fn), (self.expr,),
+                    ("sp",) + (key if isinstance(key, tuple) else (key,)),
+                    pad=PAD_ZERO, elementwise=_elementwise))
+            return self.todense().map_blocks(fn, pad=pad, _key=_key,
+                                             _elementwise=_elementwise)
         return LazyDsArray(Blockwise(fn, (self.expr,), key, pad=pad,
                                      elementwise=_elementwise))
 

@@ -14,23 +14,60 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro.core import costmodel
 from repro.core.dsarray import DsArray, from_array
 
 
+def from_array_auto(arr, block_shape: Tuple[int, int],
+                    block_format: str = "auto",
+                    density_threshold: Optional[float] = None) -> DsArray:
+    """Block a local array, picking dense vs bcoo storage by density.
+
+    ``block_format``: ``"dense"`` | ``"bcoo"`` | ``"auto"``.  Auto measures
+    nnz/size and converts when it is below ``density_threshold`` — default
+    the costmodel storage-crossover density (entries below it make the BCOO
+    value+index stream smaller than the dense tensor, so every streaming
+    op moves fewer bytes).  This is the paper's "sparse datasets load into
+    CSR-blocked ds-arrays" decision, made by a cost law instead of a flag.
+    """
+    if block_format not in ("auto", "dense", "bcoo"):
+        raise ValueError(f"unknown block_format {block_format!r}")
+    a = from_array(np.asarray(arr), block_shape)
+    if block_format == "dense":
+        return a
+    if block_format == "bcoo":
+        return a.tosparse()
+    arr = np.asarray(arr)
+    thr = density_threshold if density_threshold is not None else \
+        costmodel.sparse_storage_crossover_density(arr.dtype.itemsize)
+    nnz = int(np.count_nonzero(arr))
+    density = nnz / max(1, arr.size)
+    return a.tosparse() if density < thr else a
+
+
 def load_txt(path: str, block_shape: Tuple[int, int], delimiter: str = ",",
-             dtype=np.float32) -> DsArray:
+             dtype=np.float32, block_format: str = "dense") -> DsArray:
     """Load a delimited text file into a ds-array (one parse per block-row)."""
     data = np.loadtxt(path, delimiter=delimiter, dtype=dtype, ndmin=2)
-    return from_array(data, block_shape)
+    return from_array_auto(data, block_shape, block_format)
 
 
 def load_npy_rows(path: str, block_shape: Tuple[int, int],
-                  row_range: Optional[Tuple[int, int]] = None) -> DsArray:
+                  row_range: Optional[Tuple[int, int]] = None,
+                  block_format: str = "dense") -> DsArray:
     """Memory-mapped .npy load; reads only the requested row range."""
     mm = np.load(path, mmap_mode="r")
     if row_range is not None:
         mm = mm[row_range[0]: row_range[1]]
-    return from_array(np.asarray(mm), block_shape)
+    return from_array_auto(np.asarray(mm), block_shape, block_format)
+
+
+def load_npz_sparse(path: str, block_shape: Tuple[int, int]) -> DsArray:
+    """scipy.sparse ``.npz`` file -> BCOO-blocked ds-array, never densifying
+    (the paper's CSVM datasets ship in exactly this form)."""
+    import scipy.sparse as ssp
+    from repro.core import sparse as sparse_mod
+    return sparse_mod.from_scipy(ssp.load_npz(path), block_shape)
 
 
 def save_npy(path: str, a: DsArray) -> None:

@@ -27,7 +27,18 @@ stages:
 
 3. **cache** — compiled plans are keyed by a structural hash (node kinds +
    static params + leaf signatures, NOT leaf data), so hot-loop bodies like
-   the PCA power iteration compile once and replay.
+   the PCA power iteration compile once and replay.  The OPTIMIZER is
+   cached the same way: a pre-optimization structural key (which also
+   encodes leaf aliasing — two uses of the same array must keep CSE-ing)
+   maps straight to the optimized plan key + input order, so re-recording a
+   structurally-unchanged DAG (every ``compute()`` in a hot loop) skips
+   canonicalize/fuse entirely — the remaining per-iteration recording cost
+   the ROADMAP flagged after metadata memoization landed.
+
+Block formats: a sparse (bcoo) ``Blockwise`` is a **fusion boundary** — its
+fn consumes/produces BCOO block structures, which cannot compose with dense
+per-block fns — but sparse nodes still CSE, and sparse plans cache by
+structure + nse like any other.
 """
 
 from __future__ import annotations
@@ -40,7 +51,7 @@ import jax
 from repro.core import expr as _expr
 from repro.core.dsarray import DsArray
 from repro.core.expr import (ArrayLeaf, Blockwise, Expr, Leaf, MatMul,
-                             Transpose, _is_ds)
+                             Transpose, _is_ds, _is_sparse)
 
 # ---------------------------------------------------------------------------
 # Optimizer
@@ -170,8 +181,16 @@ def _fuse(roots: Sequence[Expr]) -> Tuple[List[Expr], int]:
                 return slot_of[id(child)]
 
             for orig_c, new_c in zip(node.children, kids):
+                # sparse nodes are fusion boundaries: a BCOO-consuming fn
+                # cannot be inlined into a dense per-block body (or vice
+                # versa) — data/indices structure is not elementwise state
                 fusible = (isinstance(new_c, Blockwise)
                            and _is_ds(new_c.meta)
+                           and not _is_sparse(new_c.meta)
+                           and not _is_sparse(out.meta)
+                           and not any(_is_sparse(gc.meta)
+                                       for gc in new_c.children
+                                       if _is_ds(gc.meta))
                            and counts.get(id(orig_c), 2) == 1
                            and new_c.meta.blocks.shape == out.meta.blocks.shape
                            and new_c.meta.grid == out.meta.grid)
@@ -295,12 +314,49 @@ def _plan_key(roots: Sequence[Expr]) -> Tuple[tuple, List[Expr]]:
     return (tuple(entries), rids), leaves
 
 
+def _preopt_key(roots: Sequence[Expr]) -> Tuple[tuple, List[Expr]]:
+    """Structural key of the RAW (pre-optimization) DAG + its leaf list.
+
+    Same encoding as :func:`_plan_key`, plus an alias-group index per input:
+    the optimizer CSEs leaves by value identity, so two recordings that
+    differ only in whether two uses share one array must not collide (one
+    optimizes to a shared node, the other does not).  The optimized plan is
+    a pure function of this key, which is what makes skipping
+    re-canonicalization sound.
+    """
+    entries: List[tuple] = []
+    index: Dict[int, int] = {}
+    leaves: List[Expr] = []
+    alias: Dict[int, int] = {}
+
+    def key(node: Expr) -> int:
+        if id(node) in index:
+            return index[id(node)]
+        cids = tuple(key(c) for c in node.children)
+        if isinstance(node, (Leaf, ArrayLeaf)):
+            leaves.append(node)
+            grp = alias.setdefault(id(node.value), len(alias))
+            entry = ("input", node.signature(), grp)
+        else:
+            entry = (type(node).__name__, node.local_key(), cids)
+        entries.append(entry)
+        index[id(node)] = len(entries) - 1
+        return index[id(node)]
+
+    rids = tuple(key(r) for r in roots)
+    return (tuple(entries), rids), leaves
+
+
 # LRU-bounded: structural keys can embed user fn objects (map_blocks), so a
 # loop that records a FRESH lambda per iteration would otherwise grow the
 # cache — and pin each jitted executable + closure — without bound.
 _CACHE: "OrderedDict[tuple, callable]" = OrderedDict()
+# preopt structural key -> (optimized plan key, leaf positions, stats):
+# repeat recordings of an unchanged DAG skip canonicalize/CSE/fuse entirely
+_OPT_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
 _CACHE_MAX = 256
-_STATS = {"hits": 0, "misses": 0, "launches": 0}
+_STATS = {"hits": 0, "misses": 0, "launches": 0,
+          "opt_runs": 0, "opt_skips": 0}
 
 
 def cache_stats() -> Dict[str, int]:
@@ -309,18 +365,64 @@ def cache_stats() -> Dict[str, int]:
 
 def clear_cache() -> None:
     _CACHE.clear()
-    _STATS.update(hits=0, misses=0, launches=0)
+    _OPT_CACHE.clear()
+    _STATS.update(hits=0, misses=0, launches=0, opt_runs=0, opt_skips=0)
 
 
 class Plan:
-    """An optimized, compilable plan over one or more roots."""
+    """An optimized, compilable plan over one or more roots.
+
+    Optimization is skipped when a structurally-identical DAG was planned
+    before (``_OPT_CACHE``): the cached optimized-plan key + input order are
+    reused and the optimized roots are only materialized on demand (for
+    ``jaxpr()``/``lowered()`` inspection, or a compiled-cache miss).
+    """
 
     def __init__(self, roots: Sequence[Expr]):
         self.stats: Dict[str, int]
-        opt_roots, self.stats = optimize(list(roots))
+        self._raw_roots = list(roots)
+        self._roots: Optional[List[Expr]] = None
+        pre_key = None
+        raw_leaves: List[Expr] = []
+        try:
+            pre_key, raw_leaves = _preopt_key(self._raw_roots)
+            cached = _OPT_CACHE.get(pre_key)
+        except TypeError:            # unhashable static param: no caching
+            cached = None
+        if cached is not None:
+            _OPT_CACHE.move_to_end(pre_key)
+            _STATS["opt_skips"] += 1
+            self.key, positions, stats = cached
+            self.stats = dict(stats)
+            self.leaves = [raw_leaves[p] for p in positions]
+            return
+        self._optimize_now(pre_key, raw_leaves)
+
+    def _optimize_now(self, pre_key=None, raw_leaves=None) -> None:
+        _STATS["opt_runs"] += 1
+        opt_roots, self.stats = optimize(self._raw_roots)
         self.key, self.leaves = _plan_key(opt_roots)
-        self.roots = opt_roots
+        self._roots = opt_roots
         self.stats["n_inputs"] = len(self.leaves)
+        if pre_key is None:
+            return
+        # optimized leaves are a subset of the raw ones (CSE only merges);
+        # record their positions so a later hit can bind fresh leaf values
+        pos = {id(l): i for i, l in enumerate(raw_leaves)}
+        if all(id(l) in pos for l in self.leaves):
+            _OPT_CACHE[pre_key] = (self.key,
+                                   tuple(pos[id(l)] for l in self.leaves),
+                                   dict(self.stats))
+            while len(_OPT_CACHE) > _CACHE_MAX:
+                _OPT_CACHE.popitem(last=False)
+
+    @property
+    def roots(self) -> List[Expr]:
+        if self._roots is None:
+            # inspection (or recompilation) after an optimizer-cache hit:
+            # re-derive the optimized DAG; same structure => same key/order
+            self._optimize_now()
+        return self._roots
 
     def _make_run(self):
         detached = _detach(self.roots, self.leaves)

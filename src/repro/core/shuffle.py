@@ -38,6 +38,8 @@ def pseudo_shuffle(key, a: DsArray) -> DsArray:
     rec = _maybe_record(key, a, "pseudo")
     if rec is not None:
         return rec
+    if getattr(a, "is_sparse", False):
+        a = a.todense()     # shuffles are per-position movement: densify
     if a.shape[0] != a.grid.padded_shape[0]:
         # rows must tile evenly for the in-block stage to be a permutation
         return exact_shuffle(key, a)

@@ -49,6 +49,17 @@ from repro.core.blocking import (BlockGrid, ceil_div, grid_span,
                                  is_aligned_slice, can_regroup)
 
 
+def _as_dense(a: "DsArray") -> "DsArray":
+    """Dense view of the operand: structural ops (slice/rechunk/concat) are
+    per-position data movement, which the element-sparse BCOO layout cannot
+    express without re-bucketing every entry — they densify by policy (see
+    the ``core.dsarray`` op table) and the dense block-native path runs."""
+    if getattr(a, "is_sparse", False):
+        from repro.core import sparse as sparse_mod
+        return sparse_mod.todense(a)
+    return a
+
+
 def _mask_axes(blocks: jnp.ndarray, n: Optional[int] = None,
                m: Optional[int] = None) -> jnp.ndarray:
     """Zero the pad region along the given logical extents, cheaply.
@@ -128,7 +139,7 @@ def take_rows(a: "DsArray", idx, out_bn: Optional[int] = None) -> "DsArray":
     ``idx`` may be a traced jnp array — the selection shape is static
     (``len(idx)``) while the selected rows stay dynamic, so this jits.
     """
-    a = a.ensure_zero_pad()   # gathers re-use the source col pad as-is
+    a = _as_dense(a).ensure_zero_pad()  # gathers re-use the source col pad
     idx = jnp.asarray(idx)
     if idx.ndim != 1:
         raise IndexError(f"row index must be 1-D, got shape {idx.shape}")
@@ -152,7 +163,7 @@ def take_rows(a: "DsArray", idx, out_bn: Optional[int] = None) -> "DsArray":
 
 def take_cols(a: "DsArray", idx, out_bm: Optional[int] = None) -> "DsArray":
     """Column analogue of :func:`take_rows` (gather on the transposed grid)."""
-    a = a.ensure_zero_pad()
+    a = _as_dense(a).ensure_zero_pad()
     idx = jnp.asarray(idx)
     if idx.ndim != 1:
         raise IndexError(f"col index must be 1-D, got shape {idx.shape}")
@@ -185,8 +196,8 @@ def aligned_slice(a: "DsArray", rows: slice, cols: slice) -> "DsArray":
     movement beyond the selected blocks, then an edge remask for the (possibly
     partial) last block row/col.
     """
-    a = a.ensure_zero_pad()   # edge blocks re-use the source pad when the
-    n, m = a.shape            # slice stops at n/m
+    a = _as_dense(a).ensure_zero_pad()  # edge blocks re-use the source pad
+    n, m = a.shape                      # when the slice stops at n/m
     bn, bm = a.block_shape
     r0, r1, rs = rows.indices(n)
     c0, c1, cs = cols.indices(m)
@@ -357,7 +368,7 @@ def rechunk(a: "DsArray", block_shape: Tuple[int, int]) -> "DsArray":
     block_shape = (int(block_shape[0]), int(block_shape[1]))
     if block_shape == a.block_shape:
         return a
-    a = a.ensure_zero_pad()   # regroup/gather paths carry the pad along
+    a = _as_dense(a).ensure_zero_pad()  # regroup/gather carry the pad along
     grid = BlockGrid(a.shape, block_shape)   # validates block_shape > 0
     blocks = _rechunk_blocks(a.blocks, a.shape, block_shape)
     return preserve_sharding(type(a)(blocks, grid), a.blocks)
@@ -385,7 +396,8 @@ def concat_rows(arrays: Sequence["DsArray"]) -> "DsArray":
             raise ValueError(
                 f"concat_rows column mismatch: {a.shape[1]} != {m}")
     bs = arrays[0].block_shape
-    parts = [rechunk(a, bs) if a.block_shape != bs else a for a in arrays]
+    parts = [rechunk(a, bs) if a.block_shape != bs else _as_dense(a)
+             for a in arrays]
     parts = [p.ensure_zero_pad() for p in parts]   # grid stack keeps tail pads
     nonempty = [p for p in parts if p.shape[0] > 0]
     parts = nonempty or parts[:1]
@@ -431,6 +443,13 @@ def gram(a: "DsArray") -> jnp.ndarray:
     ``(n, m)`` global layout; intended for skinny operands (m = latent
     factors) where the Gram is small and replicated.
     """
+    if getattr(a, "is_sparse", False):
+        # AᵀA with the sparse operand on the (transposed) left: one
+        # bcoo_dot_general, the BCOO side is never densified — only the
+        # skinny rhs takes its dense form
+        from repro.core.dsarray import matmul_ta
+        g = matmul_ta(a, _as_dense(a))
+        return jnp.asarray(g.collect()).astype(a.dtype)
     b = a.ensure_zero_pad().blocks  # zero pad contributes nothing to the Gram
     g = jnp.einsum("ijab,ikac->jbkc", b, b,
                    preferred_element_type=jnp.float32)

@@ -12,6 +12,9 @@ for shapes/dtypes the MXU path does not cover.  The backend can be forced
 with the ``REPRO_GEMM`` env var (``pallas`` / ``interpret`` / ``einsum``) or
 the ``backend=`` argument — tests use ``interpret`` to assert the Pallas
 lowering without TPU hardware.
+
+A BCOO-blocked A (``core.sparse``) takes the sparse dispatch table instead:
+one ``bcoo_dot_general`` over (grid-k, block-k), never densifying A.
 """
 
 from __future__ import annotations
@@ -22,12 +25,43 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import sparse as jsparse
+from jax.experimental.sparse import BCOO
 
 from repro.core.blocking import round_up
 from repro.kernels.matmul.kernel import matmul_padded, stacked_matmul
 
 
 _PALLAS_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
+
+# ---------------------------------------------------------------------------
+# Sparse local GEMM: einsum-style dispatch table for BCOO-blocked operands.
+#
+# The sparse analogue of the backend policy below: a BCOO lhs contracts over
+# BOTH the grid-k batch dim and the block-k sparse dim in ONE
+# bcoo_dot_general (spec strings shown for reference — they are the einsum
+# the dense fallback would run), so the stored entries are streamed exactly
+# once and the sparse operand is never densified (no (bn, bk) dense
+# intermediate appears in the jaxpr; asserted by tests/test_sparse.py).
+# dot_general emits contracted-lhs-free dims first, hence the out_perm back
+# to the stacked (gi, gj, bn, bm) layout.
+# ---------------------------------------------------------------------------
+
+_SPARSE_GEMM_SPECS = {
+    # transpose_a: (einsum spec, ((contract), (batch)), out permutation)
+    False: ("ikab,kjbc->ijac", (((1, 3), (0, 2)), ((), ())), (0, 2, 1, 3)),
+    True:  ("kiba,kjbc->ijac", (((0, 2), (0, 2)), ((), ())), (0, 2, 1, 3)),
+}
+
+
+def _sparse_local_matmul(a: BCOO, b: jnp.ndarray, *, out_dtype,
+                         transpose_a: bool) -> jnp.ndarray:
+    """Blocked local GEMM with a BCOO-blocked A (see ``core.sparse``)."""
+    if isinstance(b, BCOO):
+        b = b.todense()         # sp @ sp densifies the right operand
+    _, dimension_numbers, out_perm = _SPARSE_GEMM_SPECS[bool(transpose_a)]
+    out = jsparse.bcoo_dot_general(a, b, dimension_numbers=dimension_numbers)
+    return out.transpose(out_perm).astype(out_dtype)
 
 
 def _mxu_aligned(bn: int, bk: int, bm: int) -> bool:
@@ -84,6 +118,11 @@ def local_matmul(a: jnp.ndarray, b: jnp.ndarray, *, out_dtype=None,
     if gk != gk2 or bk != bk2:
         raise ValueError(f"local_matmul inner mismatch {a.shape} x {b.shape}")
     out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
+    if isinstance(a, BCOO):
+        return _sparse_local_matmul(a, b, out_dtype=out_dtype,
+                                    transpose_a=transpose_a)
+    if isinstance(b, BCOO):
+        b = b.todense()         # dense @ sp: right operand densifies
     mode = gemm_backend(bn, bk, bm, jnp.dtype(a.dtype), backend)
     if mode == "einsum":
         preferred = None

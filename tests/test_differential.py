@@ -1,0 +1,293 @@
+"""Differential fuzz harness: one op-chain corpus, four execution paths.
+
+With three execution paths live (eager dense, lazy-fused dense, sparse
+BCOO) correctness coverage has to scale combinatorially — instead of
+hand-writing per-path cases, a deterministic fixed-seed corpus of random op
+chains (elementwise / transpose / reduce / matmul / slice / filter /
+rechunk / concat / astype, mixed dtypes, ragged grids) is executed
+
+* **eager dense**  — the reference ds-array implementation,
+* **lazy dense**   — the same chain recorded as an Expr plan, computed once
+  at the end (metadata is checked WITHOUT computing at every step: the
+  symbolically-inferred shape/dtype/pad_state/block_format must track the
+  eager result exactly),
+* **sparse**       — the same chain from a BCOO-blocked start (ops follow
+  the documented policy: sparse-native where zero-preserving, densify
+  elsewhere — values must agree regardless),
+* **NumPy oracle** — plain ndarray ops (reductions keepdims-style to match
+  the ds-array's always-2-D contract),
+
+asserting allclose + metadata agreement + ``DsArray.check_invariants()``
+(the pad region really is what ``pad_state`` claims, BCOO indices
+in-bounds) at every step.  ~250 cases across the parametrized groups; every
+case derives from ``SEED`` only, so failures replay exactly.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import DsArray, concat_rows, from_array
+from repro.core.expr import LazyDsArray, LazyScalar
+
+pytestmark = pytest.mark.sparse
+
+SEED = 20260726
+N_GROUPS = 10
+CASES_PER_GROUP = 25
+MAX_OPS = 5
+
+
+def _mk_values(rng, n, m, dtype, sparsity=0.6):
+    x = rng.normal(size=(n, m)) * 2.0
+    x = np.where(rng.random((n, m)) < sparsity, 0.0, x)   # real zeros: the
+    if np.issubdtype(np.dtype(dtype), np.integer):        # sparse path bites
+        x = np.round(x * 3)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=1e-4, atol=1e-4) if np.issubdtype(np.dtype(dtype),
+                                                       np.floating) \
+        else dict(rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Op vocabulary.  Each op: (name, applicable(x), apply(rng, paths, x)) where
+# ``paths`` maps path name -> array-like; ``apply`` draws its parameters
+# ONCE and returns (new_paths, new_oracle).  ``e``/``sp`` are DsArrays,
+# ``l`` is a LazyDsArray — all share the NumPy-like API, so most ops are a
+# single lambda applied uniformly.
+# ---------------------------------------------------------------------------
+
+
+def _uniform(fn, np_fn=None):
+    def apply(rng, paths, x):
+        return {k: fn(v) for k, v in paths.items()}, (np_fn or fn)(x)
+    return apply
+
+
+def _is_float(x):
+    return np.issubdtype(x.dtype, np.floating)
+
+
+def _with_operand(rng, paths, x, op, np_op):
+    """Binary op against a fresh operand.  The operand's block shape
+    sometimes DIFFERS from the current one (exercising the alignment
+    rechunk, which densifies a sparse operand mid-dispatch) and is
+    sometimes sparse itself — the mixed-format x mismatched-blocks region
+    of the matrix."""
+    e = paths["e"]
+    y = _mk_values(rng, x.shape[0], x.shape[1], x.dtype, sparsity=0.4)
+    if op in ("div",):
+        y = np.abs(y) + 1.5     # keep divisors away from zero
+        y = y.astype(x.dtype)
+    if rng.integers(3) == 0:    # mismatched blocks: alignment must rechunk
+        bs = (int(rng.integers(1, 9)), int(rng.integers(1, 8)))
+    else:
+        bs = e.block_shape
+    w = from_array(y, bs)
+    w_sp = w.tosparse() if bool(rng.integers(2)) else w
+    fns = {"add": lambda t, o: t + o, "sub": lambda t, o: t - o,
+           "mul": lambda t, o: t * o, "div": lambda t, o: t / o}
+    fn = fns[op]
+    out = {"e": fn(paths["e"], w), "l": fn(paths["l"], w),
+           "sp": fn(paths["sp"], w_sp)}
+    return out, np_op(x, y)
+
+
+OPS = []
+
+
+def _op(name, applicable):
+    def deco(apply):
+        OPS.append((name, applicable, apply))
+        return apply
+    return deco
+
+
+_always = lambda x: True                                    # noqa: E731
+_float_only = _is_float
+_not_tiny = lambda x: x.size >= 4                           # noqa: E731
+
+_op("add_s", _always)(
+    lambda rng, p, x: _uniform(lambda t: t + 2, lambda t: t + 2)(rng, p, x)
+    if not _is_float(x)
+    else _uniform(lambda t: t + 1.5, lambda t: t + 1.5)(rng, p, x))
+_op("mul_s", _always)(
+    lambda rng, p, x: _uniform(lambda t: t * 3, lambda t: t * 3)(rng, p, x)
+    if not _is_float(x)
+    else _uniform(lambda t: t * 0.5, lambda t: t * 0.5)(rng, p, x))
+_op("rsub_s", _always)(_uniform(lambda t: 3 - t))
+_op("neg", _always)(_uniform(lambda t: -t))
+_op("abs", _always)(
+    _uniform(lambda t: t.abs() if isinstance(t, (DsArray, LazyDsArray))
+             else np.abs(t)))
+_op("div_s", _float_only)(_uniform(lambda t: t / 2.0))
+_op("sqrt_abs", _float_only)(
+    _uniform(lambda t: (t.abs().sqrt()
+                        if isinstance(t, (DsArray, LazyDsArray))
+                        else np.sqrt(np.abs(t)))))
+_op("add_b", _always)(
+    lambda rng, p, x: _with_operand(rng, p, x, "add", np.add))
+_op("sub_b", _always)(
+    lambda rng, p, x: _with_operand(rng, p, x, "sub", np.subtract))
+_op("mul_b", _always)(
+    lambda rng, p, x: _with_operand(rng, p, x, "mul", np.multiply))
+_op("div_b", _float_only)(
+    lambda rng, p, x: _with_operand(rng, p, x, "div", np.divide))
+_op("transpose", _always)(_uniform(lambda t: t.T))
+_op("astype", _always)(
+    lambda rng, p, x: _uniform(
+        lambda t: t.astype(jnp.int32) if isinstance(
+            t, (DsArray, LazyDsArray)) else t.astype(np.int32))(rng, p, x)
+    if _is_float(x)
+    else _uniform(
+        lambda t: t.astype(jnp.float32) if isinstance(
+            t, (DsArray, LazyDsArray)) else t.astype(np.float32))(rng, p, x))
+
+
+@_op("slice", _not_tiny)
+def _slice(rng, paths, x):
+    n, m = x.shape
+    r0 = int(rng.integers(0, n))
+    r1 = int(rng.integers(r0 + 1, n + 1))
+    c0 = int(rng.integers(0, m))
+    c1 = int(rng.integers(c0 + 1, m + 1))
+    key = (slice(r0, r1), slice(c0, c1))
+    return {k: v[key] for k, v in paths.items()}, x[key]
+
+
+@_op("filter_rows", _not_tiny)
+def _filter(rng, paths, x):
+    n = x.shape[0]
+    idx = rng.integers(0, n, size=int(rng.integers(1, n + 1)))
+    return ({k: v[idx] for k, v in paths.items()}, x[np.asarray(idx)])
+
+
+@_op("rechunk", _always)
+def _rechunk(rng, paths, x):
+    bs = (int(rng.integers(1, 9)), int(rng.integers(1, 8)))
+    return {k: v.rechunk(bs) for k, v in paths.items()}, x
+
+
+@_op("matmul", lambda x: x.shape[1] >= 1)
+def _matmul(rng, paths, x):
+    m = x.shape[1]
+    p = int(rng.integers(1, 6))
+    w = _mk_values(rng, m, p, x.dtype, sparsity=0.2)
+    bm = paths["e"].block_shape[1]
+    wd = from_array(w, (bm, max(1, min(p, int(rng.integers(1, p + 1))))))
+    return ({k: v @ wd for k, v in paths.items()},
+            x.astype(np.float64) @ w.astype(np.float64)
+            if _is_float(x) else x.astype(np.int64) @ w.astype(np.int64))
+
+
+@_op("reduce_axis", _always)
+def _reduce_axis(rng, paths, x):
+    op = ["sum", "max", "min"][int(rng.integers(3))]
+    axis = int(rng.integers(2))
+    out = {k: getattr(v, op)(axis=axis) for k, v in paths.items()}
+    np_out = getattr(np, {"sum": "sum", "max": "max", "min": "min"}[op])(
+        x, axis=axis, keepdims=True)
+    return out, np_out
+
+
+@_op("mean_axis", _float_only)
+def _mean_axis(rng, paths, x):
+    axis = int(rng.integers(2))
+    return ({k: v.mean(axis=axis) for k, v in paths.items()},
+            x.mean(axis=axis, keepdims=True, dtype=np.float64).astype(x.dtype))
+
+
+@_op("concat_self", lambda x: x.shape[0] >= 1)
+def _concat(rng, paths, x):
+    y = _mk_values(rng, int(rng.integers(1, 9)), x.shape[1], x.dtype)
+    w = from_array(y, paths["e"].block_shape)
+    return ({k: concat_rows([v, w]) for k, v in paths.items()},
+            np.concatenate([x, y], axis=0))
+
+
+# ---------------------------------------------------------------------------
+# Harness
+# ---------------------------------------------------------------------------
+
+
+def _meta(v):
+    return (tuple(v.shape), tuple(v.block_shape), jnp.dtype(v.dtype),
+            v.pad_state, v.block_format)
+
+
+def _assert_step(paths, x, label):
+    e, l, sp = paths["e"], paths["l"], paths["sp"]
+    tol = _tol(e.dtype)
+    # eager vs oracle, and the eager pad claim actually holds
+    e.check_invariants()
+    np.testing.assert_allclose(np.asarray(e.collect(), np.float64),
+                               np.asarray(x, np.float64), err_msg=label, **tol)
+    # lazy metadata tracks eager metadata exactly — shape, blocks, dtype,
+    # pad_state AND block_format — without computing anything
+    assert _meta(l) == _meta(e), (label, _meta(l), _meta(e))
+    # sparse: same logical result whatever the storage policy did
+    sp.check_invariants()
+    assert sp.shape == e.shape and sp.block_shape == e.block_shape, label
+    assert jnp.dtype(sp.dtype) == jnp.dtype(e.dtype), label
+    assert sp.block_format in ("dense", "bcoo"), label
+    np.testing.assert_allclose(np.asarray(sp.collect(), np.float64),
+                               np.asarray(x, np.float64), err_msg=label, **tol)
+
+
+def _run_case(case_seed: int):
+    rng = np.random.default_rng(case_seed)
+    n = int(rng.integers(1, 25))
+    m = int(rng.integers(1, 17))
+    bn = int(rng.integers(1, 9))
+    bm = int(rng.integers(1, 8))
+    dtype = [np.float32, np.int32][int(rng.integers(2))]
+    x = _mk_values(rng, n, m, dtype)
+    base = from_array(x, (bn, bm))
+    paths = {"e": base, "l": base.lazy(), "sp": base.tosparse()}
+    oracle = x.astype(np.float64) if dtype == np.float32 else x
+    trace = [f"init n={n} m={m} b=({bn},{bm}) {np.dtype(dtype).name}"]
+    _assert_step(paths, oracle, " | ".join(trace))
+
+    n_ops = int(rng.integers(2, MAX_OPS + 1))
+    for step in range(n_ops):
+        cur = np.asarray(oracle)
+        applicable = [(nm, ap) for nm, cond, ap in OPS if cond(cur)]
+        name, apply = applicable[int(rng.integers(len(applicable)))]
+        trace.append(name)
+        paths, oracle = apply(rng, paths, cur)
+        _assert_step(paths, oracle, " | ".join(trace))
+
+    # terminal: force the lazy plan through compute() and compare the four
+    # paths end-to-end (plus a whole-array reduction across all of them)
+    label = " | ".join(trace)
+    e, l, sp = paths["e"], paths["l"], paths["sp"]
+    out = l.compute()
+    out.check_invariants()
+    assert _meta(out) == _meta(e), (label, _meta(out), _meta(e))
+    np.testing.assert_allclose(np.asarray(out.collect(), np.float64),
+                               np.asarray(e.collect(), np.float64),
+                               err_msg=label, **_tol(e.dtype))
+    tol = dict(rtol=2e-4, atol=2e-4) if _is_float(np.asarray(oracle)) \
+        else dict(rtol=0, atol=0)
+    want = np.asarray(oracle).sum()
+    for name, v in (("eager", e), ("sparse", sp)):
+        np.testing.assert_allclose(float(v.sum()), float(want),
+                                   err_msg=f"{label} | sum[{name}]", **tol)
+    assert isinstance(l.sum(), LazyScalar)   # scalar recording stays lazy
+    # (lazy reductions compute inside the chains via reduce_axis/mean_axis;
+    # a second whole-plan compile per case would double harness runtime)
+
+
+@pytest.mark.parametrize("group", range(N_GROUPS))
+def test_differential_corpus(group):
+    for i in range(CASES_PER_GROUP):
+        _run_case(SEED + group * CASES_PER_GROUP + i)
+
+
+def test_corpus_size_meets_acceptance():
+    """ISSUE-4 acceptance: >= 200 corpus cases across all four paths."""
+    assert N_GROUPS * CASES_PER_GROUP >= 200

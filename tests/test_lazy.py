@@ -441,6 +441,61 @@ def test_scalar_dtype_in_plan_key():
     assert plan.cache_stats()["misses"] == 2
 
 
+def test_optimizer_runs_once_across_recorded_hot_loop():
+    """ROADMAP "lazy recording overhead": re-recording a structurally
+    unchanged DAG must skip plan re-canonicalization — across a 10-iteration
+    hot loop (the PCA power-iteration shape) the optimizer runs ONCE
+    (counter-based) and the cached path lowers to the identical jaxpr."""
+    plan.clear_cache()
+    _, a = mk(24, 16, 8, 8)
+    xl = a.lazy()
+    q0 = np.asarray(RNG.normal(size=(16, 4)), np.float32)
+    outs = []
+    for i in range(10):
+        qd = from_array(q0 + i, (8, 4))
+        outs.append((xl.T @ (xl @ qd)).compute())
+    st_ = plan.cache_stats()
+    assert st_["opt_runs"] == 1, st_
+    assert st_["opt_skips"] == 9, st_
+    assert st_["misses"] == 1 and st_["hits"] == 9, st_
+    # values stay right on the cached path (fresh leaf data each iteration)
+    for i, out in enumerate(outs):
+        want = np.asarray(a.collect()).T @ (np.asarray(a.collect()) @ (q0 + i))
+        np.testing.assert_allclose(np.asarray(out.collect()), want,
+                                   rtol=1e-3, atol=1e-3)
+    # the jaxpr of a skipped-optimization plan is unchanged vs a fresh one
+    # (same recording shape as the loop body: the shared xl leaf)
+    r1 = xl.T @ (xl @ from_array(q0, (8, 4)))
+    cached_plan = plan.plan_for(r1)          # optimizer-cache hit
+    assert plan.cache_stats()["opt_skips"] == 10
+    plan.clear_cache()
+    r2 = xl.T @ (xl @ from_array(q0, (8, 4)))
+    fresh_plan = plan.plan_for(r2)           # forced fresh optimization
+    assert str(cached_plan.jaxpr()) == str(fresh_plan.jaxpr())
+
+
+def test_optimizer_cache_distinguishes_leaf_aliasing():
+    """`c + c` (one array used twice) and `c + d` (two equal-signature
+    arrays) have the same node skeleton but different CSE outcomes — the
+    pre-optimization key must separate them."""
+    plan.clear_cache()
+    _, c = mk(8, 6, 4, 3)
+    _, d = mk(8, 6, 4, 3)
+    with repro.lazy():
+        r1 = c + c
+    out1 = r1.compute()
+    with repro.lazy():
+        r2 = c + d
+    out2 = r2.compute()
+    st_ = plan.cache_stats()
+    assert st_["opt_runs"] == 2, st_     # different aliasing: no false hit
+    np.testing.assert_allclose(np.asarray(out1.collect()),
+                               2 * np.asarray(c.collect()), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(out2.collect()),
+        np.asarray(c.collect()) + np.asarray(d.collect()), rtol=1e-6)
+
+
 def test_lazy_mode_is_scoped_and_reentrant():
     _, a = mk()
     assert isinstance(a + 1.0, DsArray)
