@@ -1,0 +1,112 @@
+"""Estimator fit/predict throughput, dense vs sparse, with plan-cache hits.
+
+The estimator layer's perf story has two axes the ISSUE names:
+
+* **dense vs bcoo** at 4096²-scale inputs — CSVM's kernel block and Ridge's
+  normal equations ride ``bcoo_dot_general`` for sparse inputs, so their
+  fit/predict time should track the nnz-proportional spmm laws
+  (``costmodel.csvm_kernel_*``) rather than the dense GEMM's;
+* **plan-cache behaviour** — a fit loop records one structural plan per
+  iteration; everything after iteration 1 must be optimizer skips + compiled
+  hits (``opt_runs == 1``), which this bench records per fit.
+
+``run()`` fills ``JSON_RECORDS``; ``benchmarks/run.py`` dumps them to
+``BENCH_estimators.json`` (estimator, op, size, density, us_per_call,
+backend, cache stats).  ``REPRO_BENCH_MAX_EST`` caps the row count (default
+4096; the full size is CPU-feasible because the data is 1% sparse and the
+dense comparison uses the same moderate feature count).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, time_call
+from repro.core import from_array, plan, random_sparse
+from repro.estimators import CascadeSVM, Ridge
+
+JSON_RECORDS: List[Dict] = []
+
+SIZE = int(os.environ.get("REPRO_BENCH_MAX_EST", "4096"))
+FEATURES = SIZE                 # the ISSUE's 4096² headline point is square
+DENSITY = 0.01
+BLOCK = (512, 64)
+
+
+def _record(estimator: str, op: str, size: int, density: float, us: float,
+            backend: str, fmt: str, cache: Dict[str, int]) -> None:
+    JSON_RECORDS.append({
+        "estimator": estimator, "op": op, "size": size, "density": density,
+        "us_per_call": us, "backend": backend, "format": fmt,
+        "opt_runs": cache.get("opt_runs", 0),
+        "opt_skips": cache.get("opt_skips", 0),
+        "plan_hits": cache.get("hits", 0),
+        "plan_misses": cache.get("misses", 0),
+    })
+
+
+def _mk_data(n: int, m: int, density: float):
+    key = jax.random.PRNGKey(7)
+    sp = random_sparse(key, (n, m), BLOCK, density=density)
+    dn = sp.todense()
+    host = np.asarray(dn.collect())
+    w = np.random.default_rng(1).normal(size=m).astype(np.float32)
+    y_reg = (host @ w).astype(np.float32)
+    y_cls = (y_reg > np.median(y_reg)).astype(np.int32)
+    return dn, sp, y_reg, y_cls
+
+
+def _fit_once(factory, x, y):
+    """(median fit us, plan-cache stats of one clean fit)."""
+    t = time_call(lambda: factory().fit(x, y), warmup=1, iters=2)
+    plan.clear_cache()
+    factory().fit(x, y)
+    return t, plan.cache_stats()
+
+
+def run() -> List[Row]:
+    JSON_RECORDS.clear()
+    rows: List[Row] = []
+    backend = jax.default_backend()
+    n = SIZE
+    dn, sp, y_reg, y_cls = _mk_data(n, FEATURES, DENSITY)
+
+    # Ridge: one-plan normal equations, dense vs sparse
+    ridge = lambda: Ridge(alpha=1.0)                       # noqa: E731
+    for label, x in (("dense", dn), ("sparse", sp)):
+        t_fit, cache = _fit_once(ridge, x, y_reg)
+        est = ridge().fit(x, y_reg)
+        t_pred = time_call(lambda: est.predict(x).blocks, warmup=1, iters=3)
+        _record("ridge", "fit", n, DENSITY, t_fit, backend, label, cache)
+        _record("ridge", "predict", n, DENSITY, t_pred, backend, label, {})
+        rows.append((f"est/ridge_fit_{label}_{n}", t_fit,
+                     f"opt_runs={cache['opt_runs']}"))
+        rows.append((f"est/ridge_predict_{label}_{n}", t_pred, ""))
+
+    # CSVM: 5-iteration cascade, the recorded kernel-block loop
+    iters = 3
+    csvm = lambda: CascadeSVM(kernel="rbf", sv_cap=64,       # noqa: E731
+                              max_iter=iters, tol=-1.0,
+                              n_chunks=8, solver_iters=100)
+    for label, x in (("dense", dn), ("sparse", sp)):
+        t_fit, cache = _fit_once(csvm, x, y_cls)
+        est = csvm().fit(x, y_cls)
+        t_pred = time_call(lambda: est.predict(x).blocks, warmup=1, iters=3)
+        _record("csvm", "fit", n, DENSITY, t_fit, backend, label, cache)
+        _record("csvm", "predict", n, DENSITY, t_pred, backend, label, {})
+        rows.append((f"est/csvm_fit_{label}_{n}", t_fit,
+                     f"opt_runs={cache['opt_runs']};"
+                     f"opt_skips={cache['opt_skips']};"
+                     f"hits={cache['hits']}"))
+        rows.append((f"est/csvm_predict_{label}_{n}", t_pred, ""))
+
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

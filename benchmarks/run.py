@@ -17,14 +17,15 @@ import os
 
 
 def main() -> None:
-    from benchmarks import (bench_als, bench_kmeans, bench_lazy,
-                            bench_matmul, bench_shuffle, bench_slicing,
-                            bench_sparse, bench_transpose)
+    from benchmarks import (bench_als, bench_estimators, bench_kmeans,
+                            bench_lazy, bench_matmul, bench_shuffle,
+                            bench_slicing, bench_sparse, bench_transpose)
     from benchmarks.common import emit
 
     print("name,us_per_call,derived")
     for mod in (bench_transpose, bench_als, bench_shuffle, bench_slicing,
-                bench_kmeans, bench_matmul, bench_lazy, bench_sparse):
+                bench_kmeans, bench_matmul, bench_lazy, bench_sparse,
+                bench_estimators):
         emit(mod.run())
 
     out = os.environ.get("REPRO_BENCH_JSON", "BENCH_matmul.json")
@@ -41,6 +42,11 @@ def main() -> None:
     with open(sparse_out, "w") as f:
         json.dump(bench_sparse.JSON_RECORDS, f, indent=2)
     print(f"# wrote {sparse_out} ({len(bench_sparse.JSON_RECORDS)} records)")
+
+    est_out = os.environ.get("REPRO_BENCH_EST_JSON", "BENCH_estimators.json")
+    with open(est_out, "w") as f:
+        json.dump(bench_estimators.JSON_RECORDS, f, indent=2)
+    print(f"# wrote {est_out} ({len(bench_estimators.JSON_RECORDS)} records)")
 
 
 if __name__ == "__main__":

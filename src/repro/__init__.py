@@ -7,5 +7,6 @@ type/constructors re-export from ``repro.core``.
 
 from repro.core.expr import LazyDsArray, lazy
 from repro.core.dsarray import DsArray, from_array
+from repro import estimators
 
-__all__ = ["lazy", "LazyDsArray", "DsArray", "from_array"]
+__all__ = ["lazy", "LazyDsArray", "DsArray", "from_array", "estimators"]

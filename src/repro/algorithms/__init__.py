@@ -1,6 +1,14 @@
-"""Distributed ML algorithms built on ds-arrays (paper §5)."""
+"""Distributed ML algorithms built on ds-arrays (paper §5).
+
+Every class here implements the ``repro.estimators`` contract
+(``BaseEstimator``: fit/predict/score + get_params/set_params); the
+estimator collection proper (CSVM, linear models, random forest) lives in
+``repro.estimators``.
+"""
 
 from repro.algorithms.kmeans import KMeans, kmeans_dataset
 from repro.algorithms.als import ALS, als_dataset
+from repro.algorithms.linalg import PCA, frobenius, pca, tsqr
 
-__all__ = ["KMeans", "kmeans_dataset", "ALS", "als_dataset"]
+__all__ = ["KMeans", "kmeans_dataset", "ALS", "als_dataset",
+           "PCA", "pca", "tsqr", "frobenius"]

@@ -29,6 +29,7 @@ import numpy as np
 from repro.core.dsarray import DsArray, from_array, random_array
 from repro.core.dataset_baseline import Dataset
 from repro.core.structural import gram
+from repro.estimators.base import BaseEstimator
 
 
 def _solve_gram_ds(y: DsArray, reg: float) -> jnp.ndarray:
@@ -44,8 +45,13 @@ def _solve_gram_ds(y: DsArray, reg: float) -> jnp.ndarray:
 
 
 @dataclasses.dataclass
-class ALS:
-    """dislib-style estimator: ``ALS(...).fit(r)`` with r an (n×m) ds-array."""
+class ALS(BaseEstimator):
+    """dislib-style estimator: ``ALS(...).fit(r)`` with r an (n×m) ds-array.
+
+    Implements the ``repro.estimators`` contract; ``predict(i, j)`` keeps
+    the recommender signature (a single rating) rather than the row-wise
+    classifier/regressor shape, and ``score(r)`` is the negative
+    reconstruction RMSE."""
 
     n_factors: int = 16
     reg: float = 0.1
@@ -58,7 +64,13 @@ class ALS:
     v_: Optional[DsArray] = None
     n_iter_: int = 0
 
-    def fit(self, r: DsArray) -> "ALS":
+    def fit(self, r: DsArray, y=None) -> "ALS":
+        del y                     # the ratings matrix IS the target
+        with self._driver_scope():
+            return self._fit(r)
+
+    def _fit(self, r: DsArray) -> "ALS":
+        r = self._validate_x(r)
         n, m = r.shape
         f = self.n_factors
         key = jax.random.PRNGKey(self.seed)
@@ -104,7 +116,17 @@ class ALS:
 
     def predict(self, i: int, j: int) -> float:
         """Predicted rating for (row i, col j)."""
-        return float((self.u_[i] @ self.v_[j].transpose()).collect()[0, 0])
+        self._check_fitted("u_")
+        with self._driver_scope():
+            return float(
+                (self.u_[i] @ self.v_[j].transpose()).collect()[0, 0])
+
+    def score(self, r: DsArray, y=None) -> float:
+        """Negative reconstruction RMSE (higher is better)."""
+        del y
+        self._check_fitted("u_")
+        with self._driver_scope():
+            return -self._rmse(self._validate_x(r), self.u_, self.v_)
 
 
 # ---------------------------------------------------------------------------

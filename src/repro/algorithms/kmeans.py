@@ -25,6 +25,7 @@ from jax.experimental.sparse import BCOO
 
 from repro.core.dsarray import DsArray, from_array
 from repro.core.dataset_baseline import Dataset
+from repro.estimators.base import BaseEstimator
 
 
 def _row_sq_norms(x: DsArray) -> jnp.ndarray:
@@ -192,8 +193,13 @@ def _kmeanspp_init_ds(x: DsArray, k: int, rng: np.random.Generator,
 
 
 @dataclasses.dataclass
-class KMeans:
-    """dislib-style estimator: ``KMeans(...).fit(x)`` with x a ds-array."""
+class KMeans(BaseEstimator):
+    """dislib-style estimator: ``KMeans(...).fit(x)`` with x a ds-array.
+
+    Implements the ``repro.estimators`` contract (``get_params`` /
+    ``set_params`` from the dataclass fields, trailing-underscore fitted
+    state); ``score`` is the clustering convention (negative inertia)
+    rather than the classifier/regressor mixins'."""
 
     n_clusters: int = 8
     max_iter: int = 20
@@ -209,8 +215,13 @@ class KMeans:
         bi = jax.lax.broadcasted_iota(jnp.int32, (gn, bn), 1)
         return (gi * bn + bi) < x.shape[0]
 
-    def fit(self, x: DsArray) -> "KMeans":
-        x = x.ensure_zero_pad()   # the contractions below read raw blocks
+    def fit(self, x: DsArray, y=None) -> "KMeans":
+        del y                     # unsupervised; kept for the fit(x, y) shape
+        with self._driver_scope():
+            return self._fit(x)
+
+    def _fit(self, x: DsArray) -> "KMeans":
+        x = self._validate_x(x).ensure_zero_pad()  # contractions read raw blocks
         n, m = x.shape
         row_valid = self._row_valid(x)
         # assignment-step invariant ‖x‖², hoisted out of the Lloyd loop and
@@ -232,20 +243,24 @@ class KMeans:
     def predict(self, x: DsArray) -> DsArray:
         """Labels as a new (n, 1) ds-array — the paper's API fix (predict
         returns a NEW distributed array instead of mutating the input)."""
-        if self.centers_ is None:
-            raise RuntimeError("call fit first")
-        x = x.ensure_zero_pad()
-        gn, gm, bn, bm = x.blocks.shape
-        m_pad = gm * bm
-        centers = jnp.pad(self.centers_, ((0, 0), (0, m_pad - self.centers_.shape[1])))
-        labels, _, _ = _center_stats(x.blocks, self._row_valid(x), centers,
-                                     _row_sq_norms(x), x.shape[1])
-        flat = labels.reshape(-1, 1).astype(jnp.int32)[: x.shape[0]]
-        return from_array(flat, (x.block_shape[0], 1))
+        self._check_fitted("centers_")
+        with self._driver_scope():
+            x = self._validate_x(x).ensure_zero_pad()
+            gn, gm, bn, bm = x.blocks.shape
+            m_pad = gm * bm
+            centers = jnp.pad(self.centers_,
+                              ((0, 0), (0, m_pad - self.centers_.shape[1])))
+            labels, _, _ = _center_stats(x.blocks, self._row_valid(x),
+                                         centers, _row_sq_norms(x),
+                                         x.shape[1])
+            flat = labels.reshape(-1, 1).astype(jnp.int32)[: x.shape[0]]
+            return from_array(flat, (x.block_shape[0], 1))
 
-    def score(self, x: DsArray) -> float:
+    def score(self, x: DsArray, y=None) -> float:
         """Negative inertia (sum of squared distances to nearest center)."""
-        x = x.ensure_zero_pad()
+        del y
+        self._check_fitted("centers_")
+        x = self._validate_x(x).ensure_zero_pad()
         gn, gm, bn, bm = x.blocks.shape
         m_pad = gm * bm
         centers = jnp.pad(self.centers_, ((0, 0), (0, m_pad - self.centers_.shape[1])))

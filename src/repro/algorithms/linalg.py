@@ -18,6 +18,7 @@ decomposition side:
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Tuple
 
 import jax
@@ -26,6 +27,7 @@ import numpy as np
 
 from repro.core.blocking import BlockGrid, ceil_div
 from repro.core.dsarray import DsArray, PAD_ZERO, from_array
+from repro.estimators.base import BaseEstimator
 
 
 def frobenius(a: DsArray) -> float:
@@ -56,9 +58,75 @@ def _broadcast_rows(row: DsArray, n: int, bn: Optional[int] = None) -> DsArray:
     return DsArray(blocks, BlockGrid((n, m), (bn, bm)), PAD_ZERO)
 
 
+@dataclasses.dataclass
+class PCA(BaseEstimator):
+    """Estimator form of :func:`pca` under the ``repro.estimators``
+    contract: ``fit`` stores ``components_ (k, m)`` and
+    ``explained_variance_ (k,)``; ``transform`` projects through the
+    block-native matmul (``sp @ dense`` for bcoo inputs — with
+    ``center=False`` the data matrix is never densified, the TruncatedSVD
+    convention); ``score`` is the mean explained variance of the kept
+    subspace."""
+
+    n_components: int = 2
+    n_iter: int = 30
+    seed: int = 0
+    center: bool = True
+
+    components_: Optional[jnp.ndarray] = None
+    explained_variance_: Optional[jnp.ndarray] = None
+    mean_: Optional[np.ndarray] = None
+
+    def fit(self, x, y=None) -> "PCA":
+        del y
+        with self._driver_scope():
+            x = self._validate_x(x)
+            if self.center:
+                # the TRAINING mean is fitted state (transform must center
+                # new data by it, not by the batch's own mean); center HERE
+                # and hand pca() the centered array so the column reduction
+                # runs once per fit, not once per layer
+                mean_row = x.mean(axis=0)
+                self.mean_ = np.asarray(mean_row.collect(), np.float32)
+                x = x - _broadcast_rows(mean_row, x.shape[0],
+                                        x.block_shape[0])
+            else:
+                self.mean_ = None
+            self.components_, self.explained_variance_ = pca(
+                x, self.n_components, n_iter=self.n_iter, seed=self.seed,
+                center=False)
+        return self
+
+    def transform(self, x) -> DsArray:
+        """Project onto the fitted components (centered by the mean stored
+        at fit): an (n, k) ds-array."""
+        self._check_fitted("components_")
+        with self._driver_scope():
+            x = self._validate_x(x)
+            comp = self.components_
+            if self.center:
+                mean = from_array(jnp.asarray(self.mean_).reshape(1, -1),
+                                  (1, x.block_shape[1]))
+                x = x - _broadcast_rows(mean, x.shape[0], x.block_shape[0])
+            w = from_array(jnp.asarray(comp).T, (x.block_shape[1],
+                                                 comp.shape[0]))
+            return x @ w
+
+    def fit_transform(self, x, y=None) -> DsArray:
+        return self.fit(x, y).transform(x)
+
+    def score(self, x, y=None) -> float:
+        del x, y
+        self._check_fitted("components_")
+        return float(jnp.mean(self.explained_variance_))
+
+
 def pca(x: DsArray, n_components: int, n_iter: int = 30, seed: int = 0,
         center: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Top-k PCA of (n_samples × n_features) ds-array.
+
+    (The functional form; :class:`PCA` is the estimator-contract wrapper
+    over exactly this routine.)
 
     Returns (components (k, m), explained_variance (k,)).  Centers the data
     via the ds-array mean (paper Fig. 5 column reduction) subtracted through

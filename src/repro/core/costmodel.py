@@ -300,6 +300,32 @@ def sparse_matmul_crossover_density(k: int, m: int, out_rows: int, e: int,
     return sparse_storage_crossover_density(e, idx_e)
 
 
+def bcoo_recompaction_saved_bytes(nse: int, block_elems: int, n_blocks: int,
+                                  e: int = 4, idx_e: int = 4) -> float:
+    """Bytes a lazy nse re-compaction deletes from every later streaming op.
+
+    Recorded sparse± nodes CONCATENATE entry lists, so a chain's capacity
+    grows as the sum of its operands' nse — but a block can hold at most
+    ``block_elems`` distinct positions, so ``sparse.canonicalize`` with a
+    static ``nse = block_elems`` target always preserves the values while
+    capping the capacity.  Everything past the compaction point streams
+    ``bcoo_bytes(target)`` instead of ``bcoo_bytes(nse)`` per block.
+    """
+    target = min(nse, block_elems)
+    return n_blocks * (bcoo_bytes(nse, e, idx_e) - bcoo_bytes(target, e, idx_e))
+
+
+def bcoo_recompaction_pays(nse: int, block_elems: int, e: int = 4,
+                           idx_e: int = 4) -> bool:
+    """Should the lazy recorder insert an nse-shrinking canonicalize node
+    after a sparse± Blockwise?  Iff the accumulated capacity exceeds the
+    per-block position bound — beyond it the extra slots are duplicates by
+    pigeonhole and every consumer of the chain pays their bytes for nothing
+    (at ``nse = block_elems`` the BCOO already stores ``(e + 2*idx_e)/e``x
+    the dense block, so growth past the bound is pure waste)."""
+    return bcoo_recompaction_saved_bytes(nse, block_elems, 1, e, idx_e) > 0
+
+
 def tosparse_pays(density: float, e: int = 4, idx_e: int = 4,
                   streaming_ops: int = 1) -> bool:
     """Should an array be converted to bcoo?  The conversion itself costs
@@ -365,3 +391,76 @@ def merged_reduction_passes(n_reductions: int, merged: bool = True) -> int:
     shared operand (and any fused chain feeding it) once for all of them;
     eager evaluates it per reduction."""
     return 1 if merged else max(1, n_reductions)
+
+
+# ---------------------------------------------------------------------------
+# Estimator laws: CSVM cascade + random-forest histogram growth.
+#
+# The estimator layer (repro.estimators) expresses whole fit loops over the
+# ds-array primitives above; these laws predict the per-iteration cost the
+# benchmarks (benchmarks/bench_estimators.py) then measure.  The cascade's
+# dominant op is the data-vs-model kernel matrix K(X, SV) — one sp@dense
+# bcoo_dot_general for BCOO-blocked X, so its bytes follow the spmm laws —
+# and the forest's is one histogram contraction per tree level.
+# ---------------------------------------------------------------------------
+
+
+def csvm_kernel_flops(n: int, m: int, n_sv: int) -> float:
+    """MACs x2 of the cascade's global kernel block K(X, SV) = X @ SVᵀ
+    (dense X); the RBF exponentiation adds O(n*n_sv), negligible."""
+    return 2.0 * n * m * n_sv
+
+
+def csvm_kernel_flops_sparse(nnz: int, n_sv: int) -> float:
+    """Sparse X: each stored entry meets every SV column once —
+    nnz-proportional, the reason the cascade was the sparse backend's
+    target workload (paper §6)."""
+    return spmm_flops(nnz, n_sv)
+
+
+def csvm_kernel_hbm_bytes(n: int, m: int, n_sv: int, e: int,
+                          nnz: int = 0, idx_e: int = 4) -> float:
+    """HBM traffic of one K(X, SV) evaluation: stream the data matrix once
+    (value+index stream for BCOO when ``nnz`` > 0, dense rows otherwise),
+    the small SV panel once, write the (n, n_sv) kernel block."""
+    data = bcoo_bytes(nnz, e, idx_e) if nnz else float(n) * m * e
+    return data + float(n_sv) * m * e + float(n) * n_sv * e
+
+
+def csvm_cascade_node_flops(s: int, m: int, solver_iters: int) -> float:
+    """One cascade node: an (s, s) kernel build (2*s²*m) plus
+    ``solver_iters`` dual projected-gradient steps (one (s, s) matvec
+    each)."""
+    return 2.0 * s * s * m + solver_iters * 2.0 * s * s
+
+
+def csvm_cascade_fit_flops(n: int, m: int, arity: int, sv_cap: int,
+                           solver_iters: int, chunks: int) -> float:
+    """One cascade pass: ``chunks`` level-0 nodes of ~n/chunks (+fed-back
+    SV) rows, then a merge tree of arity-way nodes over capped SV sets
+    (node size ≤ arity * sv_cap, ~chunks/(arity-1) merge nodes)."""
+    s0 = n // max(1, chunks) + sv_cap
+    level0 = chunks * csvm_cascade_node_flops(s0, m, solver_iters)
+    merge_nodes = max(0, (chunks - 1) // max(1, arity - 1))
+    merges = merge_nodes * csvm_cascade_node_flops(arity * sv_cap, m,
+                                                   solver_iters)
+    return level0 + merges
+
+
+def forest_histogram_passes(n_estimators: int, max_depth: int) -> int:
+    """Histogram tree growth reads the binned code tensor once per level per
+    forest (trees share the pass: the level contraction carries the tree dim)
+    — vs one pass per (tree, level, node) for naive per-node partitioning."""
+    del n_estimators
+    return max_depth
+
+
+def forest_level_flops(n: int, m: int, bins: int, classes: int,
+                       nodes: int, trees: int) -> float:
+    """One level's histogram contraction: every (sample, feature) pair
+    scatters its bin count into (tree, node, class) cells — the einsum is
+    n*m*bins*classes*trees MACs x2 bounded by the one-hot sparsity (each
+    sample hits ONE node and ONE class, so the effective work is
+    n*m*bins*trees*2)."""
+    del classes, nodes
+    return 2.0 * n * m * bins * trees

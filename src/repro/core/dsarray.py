@@ -76,8 +76,39 @@ op on a bcoo array      behaviour
                           implicit zeros); small result is dense
 ``max``/``min``/mean    max/min densify (implicit zeros compete); mean is
                           sum-based and stays sparse-native
-slice/rechunk/concat/   densify, then the dense block-native path
-shuffle/apply_along
+aligned slice           sparse-native batch-dim slice of the stacked BCOO
+                          (start on block boundary, unit step; a mid-block
+                          stop zero-masks the tail entries' data) — no
+                          ``bcoo_todense`` (``sparse.aligned_slice_sparse``)
+other slice/rechunk/    densify, then the dense block-native path
+concat/shuffle/apply
+======================  ======================================================
+
+Estimator layer (``repro.estimators`` + ``repro.algorithms``; the dislib
+collection the ds-array exists to power — every class implements the
+``BaseEstimator`` contract of fit/predict/score + get_params/set_params,
+accepts dense AND bcoo inputs, and records its fit-loop body lazily so
+iterations hit the structural plan caches):
+
+======================  ======================================================
+estimator               data-matrix path per fit/predict
+======================  ======================================================
+``CascadeSVM``          chunking = aligned row slices (batch-dim slices of
+                          the stacked BCOO — x never densifies, asserted);
+                          kernel block ``X @ SVᵀ`` = ONE recorded plan per
+                          iteration (sparse-lhs ``bcoo_dot_general``),
+                          cache-hit from iteration 2 (``opt_runs == 1``)
+``LinearRegression``/   normal equations ``XᵀX``/``Xᵀy`` in one recorded
+``Ridge``                 multi-root plan (transpose folded; sparse-lhs for
+                          bcoo); TSQR fallback on ill-conditioned inputs
+``RandomForest-``       quantize blocks once (dense path; bcoo densifies by
+``Classifier``            policy), one histogram einsum per level; predict =
+                          one ``apply_along_axis`` vote pass
+``KMeans``              ‖x‖² hoisted through one lazy plan; Lloyd
+                          contractions sparse-native (``bcoo_dot_general``)
+``PCA``                 power iteration records ``xᵀ(x·q)`` (sparse-native
+                          with ``center=False``); ``pca()`` is a thin alias
+``ALS``                 ``R@V`` / ``Rᵀ@U`` ds-array matmuls (sp @ dense)
 ======================  ======================================================
 
 Lazy plans record the same classification (``core.expr``): sparse Blockwise

@@ -432,6 +432,52 @@ class ToSparse(Expr):
         return ToSparse(children[0], self.nse)
 
 
+class Canonicalize(Expr):
+    """nse re-compaction inside a plan: merge duplicate BCOO indices and
+    shrink the entry capacity to a STATIC ``nse`` bound.
+
+    Recorded sparse± Blockwise nodes concatenate entry lists, so a chain's
+    capacity grows as the sum of its operands' nse — unboundedly, since the
+    recorder cannot measure nnz (the ROADMAP PR-4 follow-on).  A block can
+    hold at most ``bn*bm`` distinct positions though, so compacting to that
+    bound is always value-preserving and statically shaped (jittable inside
+    the plan, unlike a data-dependent shrink).  The facade inserts this node
+    when ``costmodel.bcoo_recompaction_pays`` says the accumulated capacity
+    passed the bound; like every sparse node it is a fusion boundary but
+    still CSEs and plan-caches by structure + nse."""
+
+    __slots__ = ("nse",)
+
+    def __init__(self, child: Expr, nse: int):
+        self.nse = int(nse)
+        self.children = (child,)
+        self._infer_meta()
+
+    def lower(self, v):
+        from repro.core import sparse as sparse_mod
+        return sparse_mod.canonicalize(v, nse=self.nse)
+
+    def local_key(self):
+        return ("canon", self.nse)
+
+    def rebuild(self, children):
+        return Canonicalize(children[0], self.nse)
+
+
+def _maybe_compact(node: Expr) -> Expr:
+    """Wrap a sparse-producing node in :class:`Canonicalize` when its
+    accumulated nse passed the per-block position bound (pigeonhole: the
+    excess slots are duplicates, every consumer pays their bytes for
+    nothing)."""
+    if not _is_sparse(node.meta):
+        return node
+    bn, bm = node.meta.block_shape
+    from repro.core import costmodel
+    if costmodel.bcoo_recompaction_pays(node.meta.blocks.nse, bn * bm):
+        return Canonicalize(node, bn * bm)
+    return node
+
+
 class MatMul(Expr):
     """Blocked GEMM.  ``transpose_a=True`` is the optimizer's folded form of
     ``MatMul(Transpose(x), y)``: it lowers through ``matmul_ta`` → the fused
@@ -818,10 +864,12 @@ class LazyDsArray:
                 mode = sparse_mod.classify_binary(
                     op, fa, ("ds", fb, b.meta.dtype), reverse, a.meta.dtype)
                 if mode == "pair":
-                    return LazyDsArray(Blockwise(
+                    # sparse± concatenates entry lists: compact the capacity
+                    # back to the block bound once growth stops paying
+                    return LazyDsArray(_maybe_compact(Blockwise(
                         sparse_mod.pair_fn(op, reverse), (a, b),
                         ("sp-pair", name, reverse), pad=PAD_ZERO,
-                        elementwise=True))
+                        elementwise=True)))
                 if mode == "gather":
                     op2 = (lambda u, v: op(v, u)) if reverse else op
                     return LazyDsArray(Blockwise(

@@ -464,6 +464,79 @@ def sparse_map_fn(fn: Callable) -> Callable:
 # ---------------------------------------------------------------------------
 
 
+def aligned_slice_sparse(a: "DsArray", rows: slice, cols: slice) -> "DsArray":
+    """Block-aligned slice of a BCOO-blocked ds-array, sparse-natively.
+
+    A slice whose start sits on a block boundary (unit step) is a pure
+    **batch-dim slice** of the stacked BCOO: ``data[g0:g1, h0:h1]`` /
+    ``indices[g0:g1, h0:h1]`` — O(selected entries), no re-bucketing, and
+    crucially no ``bcoo_todense`` (the ROADMAP PR-4 follow-on: this used to
+    densify).  A slice that STOPS mid-block keeps the entry slots but zeroes
+    the data of positions past the new logical edge — indices keep their
+    static shape, zero data is an explicit zero (the same trick
+    ``random_sparse`` uses for pad entries), so the zero-pad-by-construction
+    invariant holds on the result.
+
+    This is the CSVM cascade's per-chunk row partition: chunks are batch
+    slices of the one stacked BCOO, so the data matrix is never densified
+    on the way into the per-node solvers.
+    """
+    from repro.core.dsarray import DsArray, PAD_ZERO
+    from repro.core.blocking import grid_span
+    sp = a.blocks
+    gn, gm, bn, bm = sp.shape
+    n, m = a.shape
+    r0, r1, rs = rows.indices(n)
+    c0, c1, cs = cols.indices(m)
+    assert rs == 1 and cs == 1 and r0 % bn == 0 and c0 % bm == 0
+    g0, g1 = (0, 1) if r1 <= r0 else grid_span(r0, r1, bn)
+    h0, h1 = (0, 1) if c1 <= c0 else grid_span(c0, c1, bm)
+    data = sp.data[g0:g1, h0:h1]
+    indices = sp.indices[g0:g1, h0:h1]
+    nr, nc = max(0, r1 - r0), max(0, c1 - c0)
+    # zero entries past the new logical edge (slice stopped mid-block, or an
+    # empty selection kept its one placeholder block)
+    if (g1 - g0) * bn > nr or (h1 - h0) * bm > nc:
+        bi = jax.lax.broadcasted_iota(jnp.int32, data.shape, 0)
+        bj = jax.lax.broadcasted_iota(jnp.int32, data.shape, 1)
+        valid = ((bi * bn + indices[..., 0]) < nr) & \
+                ((bj * bm + indices[..., 1]) < nc)
+        data = jnp.where(valid, data, jnp.zeros((), data.dtype))
+    blocks = BCOO((data, indices), shape=(g1 - g0, h1 - h0, bn, bm),
+                  indices_sorted=sp.indices_sorted,
+                  unique_indices=sp.unique_indices)
+    from repro.core.structural import preserve_sharding
+    out = DsArray(blocks, BlockGrid((nr, nc), (bn, bm)), PAD_ZERO)
+    return preserve_sharding(out, sp.data)
+
+
+def rows_to_dense(a: "DsArray") -> np.ndarray:
+    """All rows of a (small) sparse ds-array as one dense ``(n, m)`` host
+    array: stored entries scatter-add straight into row-major layout.
+
+    This is the CSVM per-node basis extraction — the (s, m) dense sub-problem
+    matrix every kernel-SVM solver materializes (libsvm's kernel cache does
+    the same) — built from the BCOO's triplets in O(nnz) NumPy, never
+    through ``todense()`` (which would build the stacked dense tensor and
+    compile an XLA scatter per geometry).  Dense inputs take ``collect``.
+    """
+    if a.block_format != FORMAT_BCOO:
+        return np.asarray(a.collect())
+    sp = a.blocks
+    gn, gm, bn, bm = sp.shape
+    n, m = a.shape
+    data = np.asarray(sp.data)
+    idx = np.asarray(sp.indices)
+    out = np.zeros((gn * bn, gm * bm), data.dtype)
+    rr = (np.arange(gn)[:, None, None] * bn +
+          np.minimum(idx[..., 0], bn - 1))
+    cc = (np.arange(gm)[None, :, None] * bm +
+          np.minimum(idx[..., 1], bm - 1))
+    ok = (idx[..., 0] < bn) & (idx[..., 1] < bm)      # drop OOB pad slots
+    np.add.at(out, (rr[ok], cc[ok]), data[ok])        # add: duplicates merge
+    return out[:n, :m]
+
+
 def astype_sparse(a: "DsArray", dtype) -> "DsArray":
     from repro.core.dsarray import DsArray, PAD_ZERO
     # merge split entries first: cast(d1 + d2) != cast(d1) + cast(d2) for

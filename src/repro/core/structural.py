@@ -256,6 +256,16 @@ def getitem(a: "DsArray", key) -> "DsArray":
     def is_full(kind, sel, size):
         return kind == "aligned" and sel.indices(size) == (0, size, 1)
 
+    if getattr(a, "is_sparse", False) and rkind == "aligned" \
+            and ckind == "aligned":
+        # pure block-aligned selection of a BCOO array: slice the stacked
+        # BCOO's batch dims directly — no densify (ROADMAP PR-4 follow-on)
+        if is_full(rkind, rsel, a.shape[0]) and is_full(ckind, csel,
+                                                        a.shape[1]):
+            return a
+        from repro.core import sparse as sparse_mod
+        return sparse_mod.aligned_slice_sparse(a, rsel, csel)
+
     out = a
     # grid slices first (cheapest: shrink before gathering)
     if ((rkind == "aligned" and not is_full(rkind, rsel, a.shape[0]))

@@ -1,0 +1,22 @@
+"""repro.estimators — the dislib-style fit/predict layer over ds-arrays.
+
+The paper's ds-array exists to power dislib's estimator collection; this
+package is that layer for the reproduction: a sklearn-shaped contract
+(``base``) and the three estimators the paper's evaluation names —
+CascadeSVM (§6, the sparse backend's target workload), linear models
+(normal equations + TSQR fallback) and a random forest (histogram trees on
+the stacked tensor).  ``repro.algorithms``'s KMeans / ALS / PCA implement
+the same :class:`BaseEstimator` contract (import them from there — this
+package does not re-export them, to keep the import graph acyclic).
+"""
+
+from repro.estimators.base import (BaseClassifier, BaseEstimator,
+                                   BaseRegressor, NotFittedError)
+from repro.estimators.csvm import CascadeSVM
+from repro.estimators.forest import RandomForestClassifier
+from repro.estimators.linear import LinearRegression, Ridge
+
+__all__ = [
+    "BaseEstimator", "BaseClassifier", "BaseRegressor", "NotFittedError",
+    "CascadeSVM", "LinearRegression", "Ridge", "RandomForestClassifier",
+]

@@ -1,0 +1,338 @@
+"""Cascade SVM on ds-arrays (paper §6's target workload).
+
+The cascade (Graf et al. 2005, the algorithm dislib ships as CSVM): the
+data is partitioned row-wise, each partition trains an SVM, and the
+surviving support vectors merge pairwise up a reduction tree until one SV
+set remains; that set is fed back into every partition and the cascade
+repeats until the global model stops improving.  The structure maps onto
+ds-arrays exactly like the paper's task graphs:
+
+* **partitioning** — each level-0 chunk is a block-aligned row slice of the
+  one stacked tensor; for BCOO-blocked inputs that is a pure batch-dim
+  slice of the stacked BCOO (``core.sparse.aligned_slice_sparse``) — the
+  data matrix is NEVER densified on the way in (no ``bcoo_todense``,
+  jaxpr-asserted in ``tests/test_estimators.py``);
+* **per-node solves** — each node's (small) training set is its rows in the
+  model's dense form (``core.sparse.rows_to_dense``: an O(nnz) host
+  scatter of the stored entries, the same (s, m) basis libsvm's kernel
+  cache materializes) and the dual solves by jitted projected gradient
+  ascent with the bias folded into an augmented kernel ``K + 1``;
+* **the recorded hot loop** — every cascade iteration evaluates the global
+  kernel block ``K(X, SV) = X @ SVᵀ`` for the feedback/convergence check
+  through ONE lazy plan: the SV panel is padded to the static ``sv_cap``
+  capacity, so each iteration re-records a structurally identical DAG and
+  iterations 2..N skip the optimizer (``plan._OPT_CACHE``) and XLA
+  (``plan._CACHE``) entirely — regression-tested ``opt_runs == 1`` across a
+  5-iteration fit.  For BCOO inputs the plan's GEMM is one sparse-lhs
+  ``bcoo_dot_general`` (nnz-proportional — the reason PR 4 built the
+  sparse backend for this workload); RBF turns the same product into
+  ``exp(-γ(‖x‖² − 2·X·SVᵀ + ‖sv‖²))`` with the row norms ``‖x‖²`` computed
+  once, sparse-natively, before the loop.
+
+Cost laws: ``costmodel.csvm_kernel_{flops,hbm_bytes}`` and
+``costmodel.csvm_cascade_fit_flops``; measured in
+``benchmarks/bench_estimators.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocking import ceil_div
+from repro.core.dsarray import DsArray, from_array
+from repro.core import sparse as sparse_mod
+from repro.estimators.base import BaseClassifier
+
+_SV_EPS = 1e-6           # dual weight below which a vector is not an SV
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "iters"))
+def _solve_dual(b, y, mult, gamma, c, kernel: str, iters: int):
+    """Dual SVM by projected gradient ascent on the augmented kernel.
+
+    max  Σα − ½ αᵀ Q α,  0 ≤ α ≤ C·mult,   Q = (y yᵀ) ∘ (K + 1)
+
+    The ``+ 1`` embeds the bias as a constant feature, so the equality
+    constraint of the classic dual disappears and the box projection is
+    exact; the bias recovers as ``b = Σ α y``.  The step size is 1/λmax(Q)
+    from a short power iteration, which makes the ascent a contraction.
+    ``mult`` is the per-candidate multiplicity: 0 masks padded/duplicate
+    slots out of the model, and a genuine sample stored k times collapses
+    to one slot with box k·C — exactly the dual a standard SVM gives k
+    identical rows (shapes stay static either way).
+    """
+    s = b.shape[0]
+    if kernel == "rbf":
+        sq = jnp.sum(b * b, axis=1)
+        k = jnp.exp(-gamma * jnp.maximum(
+            sq[:, None] - 2.0 * (b @ b.T) + sq[None, :], 0.0))
+    else:
+        k = b @ b.T
+    q = (y[:, None] * y[None, :]) * (k + 1.0)
+    v = jnp.full((s,), 1.0 / np.sqrt(s), b.dtype)
+    for _ in range(12):
+        w = q @ v
+        v = w / jnp.maximum(jnp.linalg.norm(w), 1e-12)
+    eta = 1.0 / jnp.maximum(v @ (q @ v), 1e-6)
+    box = c * mult
+
+    def body(_, a):
+        return jnp.clip(a + eta * (1.0 - q @ a), 0.0, box)
+
+    return jax.lax.fori_loop(0, iters, body, jnp.zeros((s,), b.dtype))
+
+
+def _chunk_bounds(n: int, bn: int, n_chunks: int) -> List[Tuple[int, int]]:
+    """Block-aligned row ranges covering [0, n): each chunk owns a whole
+    number of block rows (so sparse chunks stay batch-dim slices)."""
+    gn = max(1, ceil_div(n, bn))
+    n_chunks = max(1, min(n_chunks, gn))
+    per = ceil_div(gn, n_chunks)
+    bounds = []
+    for i in range(0, gn, per):
+        r0, r1 = i * bn, min((i + per) * bn, n)
+        if r1 > r0:
+            bounds.append((r0, r1))
+    return bounds
+
+
+@dataclasses.dataclass
+class CascadeSVM(BaseClassifier):
+    """dislib-style cascade SVM: ``CascadeSVM(...).fit(x, y)`` with ``x`` a
+    dense or BCOO-blocked ds-array and binary ``y``.
+
+    ``sv_cap`` is the static support-vector capacity of the model (and of
+    every cascade node's output): it makes all fed-back shapes static, which
+    is what lets the per-iteration recorded plan hit the structural caches.
+    It is also the cascade's approximation knob — like the original cascade
+    (which assumes SVs ≪ data), a cap BELOW the problem's true support size
+    truncates the dual and accuracy degrades sharply (noisy/overlapping
+    classes need large caps; at ``sv_cap ≥`` the sklearn support count the
+    solver matches ``SVC``), so size it generously for hard data.
+    """
+
+    c: float = 1.0
+    kernel: str = "rbf"               # "rbf" | "linear"
+    gamma: object = "scale"           # float | "scale" → 1/(m·Var(x)) |
+                                      # "auto" → 1/m (sklearn's names)
+    cascade_arity: int = 2
+    n_chunks: Optional[int] = None    # default: one chunk per block row
+    sv_cap: int = 64
+    max_iter: int = 5
+    tol: float = 1e-3
+    solver_iters: int = 300
+
+    sv_: Optional[np.ndarray] = None      # (sv_cap, m) padded SV rows
+    sv_y_: Optional[np.ndarray] = None    # (sv_cap,) labels in {-1, 0, +1}
+    dual_coef_: Optional[np.ndarray] = None   # (sv_cap,) alpha (0 on pads)
+    intercept_: float = 0.0
+    gamma_: float = 0.0                   # resolved RBF width
+    n_sv_: int = 0
+    n_iter_: int = 0
+    converged_: bool = False
+
+    # -- per-node solve ------------------------------------------------------
+    def _resolve_gamma(self, x: DsArray) -> float:
+        """The RBF width as a number.  ``"scale"`` (sklearn's default,
+        ``1/(m·Var(x))``) derives the variance from two sparse-native
+        whole-array reductions — implicit zeros are real values of the
+        distribution, so ``E[x²] − E[x]²`` over all n·m positions is exactly
+        right and the bcoo operand never densifies.  The linear kernel
+        never reads gamma, so it skips the data passes entirely."""
+        n, m = x.shape
+        if self.kernel != "rbf":
+            return 0.0
+        if self.gamma == "auto":
+            return 1.0 / m
+        if self.gamma == "scale":
+            mean = float(np.asarray(x.mean()))
+            e2 = float(np.asarray((x * x).sum())) / (n * m)
+            var = max(e2 - mean * mean, 1e-12)
+            return 1.0 / (m * var)
+        return float(self.gamma)
+
+    @staticmethod
+    def _dedup(b: np.ndarray, y: np.ndarray, mult: np.ndarray,
+               is_data: np.ndarray) -> np.ndarray:
+        """Collapse duplicate (row, label) candidates into one slot.
+
+        Two distinct kinds of duplicate reach a node: (a) **copies** —
+        feedback puts the global SV set into EVERY level-0 chunk and merges
+        concatenate children wholesale, so the same vector arrives k times
+        without representing k samples (an un-deduped cascade hands it an
+        effective box of k·C and collapses to chance within 3 iterations);
+        (b) **genuine repeated samples** in the data, whose combined box
+        really is k·C (what a standard SVM gives k identical rows).  Data
+        rows precede model copies in every node's layout, so: data-data
+        duplicates ACCUMULATE multiplicity onto the first slot, while any
+        duplicate involving a model copy zeroes the copy.  Shapes are
+        untouched — only ``mult`` changes."""
+        mult = mult.copy()
+        seen: dict = {}
+        for i in np.flatnonzero(mult > 0):
+            key = (b[i].tobytes(), float(y[i]))
+            j = seen.setdefault(key, i)
+            if j != i:
+                if is_data[i] and is_data[j]:
+                    mult[j] += mult[i]
+                mult[i] = 0.0
+        return mult
+
+    def _node_solve(self, b: np.ndarray, y: np.ndarray, mult: np.ndarray,
+                    is_data: np.ndarray, gamma: float):
+        """Solve one cascade node and keep its top ``sv_cap`` support
+        vectors, returned PADDED to the static capacity."""
+        mult = self._dedup(b, y, mult, is_data)
+        alpha = np.asarray(_solve_dual(
+            jnp.asarray(b), jnp.asarray(y), jnp.asarray(mult, jnp.float32),
+            jnp.float32(gamma), jnp.float32(self.c),
+            self.kernel, int(self.solver_iters)))
+        order = np.argsort(-alpha)[: self.sv_cap]
+        rows = np.zeros((self.sv_cap, b.shape[1]), np.float32)
+        yy = np.zeros((self.sv_cap,), np.float32)
+        aa = np.zeros((self.sv_cap,), np.float32)
+        mm = np.zeros((self.sv_cap,), np.float32)
+        k = len(order)
+        rows[:k], yy[:k], aa[:k] = b[order], y[order], alpha[order]
+        mm[:k] = mult[order]
+        keep = aa > _SV_EPS * self.c
+        return (rows, np.where(keep, yy, 0.0), np.where(keep, aa, 0.0),
+                np.where(keep, mm, 0.0))
+
+    # -- the recorded global kernel block ------------------------------------
+    def _kernel_block(self, xl, x: DsArray, sv: np.ndarray,
+                      x_sq: Optional[np.ndarray]) -> np.ndarray:
+        """``K(X, SV)`` as an (n, sv_cap) host array; the data-side
+        contraction ``X @ SVᵀ`` runs as one recorded lazy plan (sparse-lhs
+        ``bcoo_dot_general`` for bcoo ``x``, never densifying it) whose
+        structure — and therefore optimizer + compile cache entry — is
+        identical every cascade iteration."""
+        sv_ds = from_array(jnp.asarray(sv.T), (x.block_shape[1], self.sv_cap))
+        prod = (xl @ sv_ds).compute()                    # (n, sv_cap)
+        km = np.asarray(prod.collect(), np.float32)
+        if self.kernel == "rbf":
+            sv_sq = (sv * sv).sum(axis=1)
+            km = np.exp(-self.gamma_ * np.maximum(
+                x_sq[:, None] - 2.0 * km + sv_sq[None, :], 0.0))
+        return km
+
+    def _decision_values(self, xl, x: DsArray,
+                         x_sq: Optional[np.ndarray]) -> np.ndarray:
+        km = self._kernel_block(xl, x, self.sv_, x_sq)
+        return km @ (self.dual_coef_ * self.sv_y_) + self.intercept_
+
+    def _decision_host(self, x) -> Tuple[np.ndarray, DsArray]:
+        """(decision values on the host, validated x) — shared by
+        decision_function and predict so predict does not round-trip the
+        margins through a device ds-array it immediately collects."""
+        x = self._validate_x(x).ensure_zero_pad()
+        return self._decision_values(x.lazy(), x, self._row_sq(x)), x
+
+    def _row_sq(self, x: DsArray) -> Optional[np.ndarray]:
+        """Iteration-invariant ‖x‖² row norms for the RBF expansion, via the
+        eager sparse-native pair-multiply + bcoo row reduction (dense: one
+        fused square+reduce) — computed once, outside the recorded loop."""
+        if self.kernel != "rbf":
+            return None
+        sq = (x * x).sum(axis=1)
+        return np.asarray(sq.collect(), np.float32).ravel()
+
+    # -- fit -----------------------------------------------------------------
+    def fit(self, x, y) -> "CascadeSVM":
+        with self._driver_scope():
+            return self._fit(x, y)
+
+    def _fit(self, x, y) -> "CascadeSVM":
+        if self.kernel not in ("rbf", "linear"):
+            raise ValueError(f"unknown kernel {self.kernel!r}")
+        x, y_raw = self._validate_fit(x, y)
+        x = x.ensure_zero_pad()
+        yi = self._encode_labels(y_raw, n_classes=2)
+        ypm = (2.0 * yi - 1.0).astype(np.float32)
+        n, m = x.shape
+        gamma = self.gamma_ = self._resolve_gamma(x)
+        bounds = _chunk_bounds(n, x.block_shape[0],
+                               self.n_chunks if self.n_chunks else 1 << 30)
+        x_sq = self._row_sq(x)
+        xl = x.lazy()
+
+        fb_rows = np.zeros((self.sv_cap, m), np.float32)
+        fb_y = np.zeros((self.sv_cap,), np.float32)
+        fb_mult = np.zeros((self.sv_cap,), np.float32)
+        prev_obj = np.inf
+        self.converged_ = False
+        for it in range(1, self.max_iter + 1):
+            # level 0: every chunk (data, multiplicity 1 each) + the
+            # fed-back global SV slot (model copies; static cap).  Each
+            # chunk's dense basis is a block-aligned slice of the stacked
+            # BCOO (x never densified) scattered on the host per node and
+            # released right after its solve — peak driver memory is ONE
+            # chunk, not the whole data matrix
+            sets = []
+            for r0, r1 in bounds:
+                cb = sparse_mod.rows_to_dense(x[r0:r1]).astype(np.float32)
+                cy = ypm[r0:r1]
+                b = np.concatenate([cb, fb_rows])
+                yy = np.concatenate([cy, fb_y])
+                mult = np.concatenate([np.ones(len(cb), np.float32),
+                                       fb_mult])
+                is_data = np.concatenate([np.ones(len(cb), bool),
+                                          np.zeros(self.sv_cap, bool)])
+                sets.append(self._node_solve(b, yy, mult, is_data, gamma))
+            # merge tree: arity-way concats of capped SV sets (all model
+            # copies — cross-chunk duplicates collapse without accumulating)
+            while len(sets) > 1:
+                nxt = []
+                for i in range(0, len(sets), self.cascade_arity):
+                    grp = sets[i: i + self.cascade_arity]
+                    if len(grp) == 1:
+                        nxt.append(grp[0])
+                        continue
+                    b = np.concatenate([g[0] for g in grp])
+                    yy = np.concatenate([g[1] for g in grp])
+                    mult = np.concatenate([g[3] for g in grp])
+                    is_data = np.zeros(len(b), bool)
+                    nxt.append(self._node_solve(b, yy, mult, is_data, gamma))
+                sets = nxt
+            rows, yy, aa, mm = sets[0]
+            keep = aa > _SV_EPS * self.c
+            self.sv_, self.sv_y_, self.dual_coef_ = rows, yy, aa
+            self.intercept_ = float((aa * yy).sum())   # b of the K+1 dual
+            self.n_sv_ = int(keep.sum())
+            self.n_iter_ = it
+            # global convergence: hinge objective over ALL data through the
+            # one recorded kernel-block plan (cache-hit after iteration 1)
+            dec = self._decision_values(xl, x, x_sq)
+            obj = float(np.maximum(0.0, 1.0 - ypm * dec).sum())
+            # no convergence verdict until there is a previous objective to
+            # compare against (inf <= tol*inf would stop every fit at it=1)
+            if np.isfinite(prev_obj) and \
+                    abs(prev_obj - obj) <= self.tol * max(1.0, abs(prev_obj)):
+                self.converged_ = True
+                break
+            prev_obj = obj
+            fb_rows, fb_y, fb_mult = rows, yy, mm
+        return self
+
+    # -- inference -----------------------------------------------------------
+    def decision_function(self, x) -> DsArray:
+        """Signed margins as a new ``(n, 1)`` ds-array (positive →
+        ``classes_[1]``); the kernel block reuses fit's cached plan when the
+        input geometry matches."""
+        self._check_fitted("sv_")
+        with self._driver_scope():
+            dec, x = self._decision_host(x)
+            return self._labels_ds(dec.astype(np.float32), x)
+
+    def predict(self, x) -> DsArray:
+        self._check_fitted("sv_")
+        with self._driver_scope():
+            dec, x = self._decision_host(x)
+            labels = np.where(dec > 0, self.classes_[1], self.classes_[0])
+            return self._labels_ds(labels, x)

@@ -1,0 +1,261 @@
+"""Random forest classifier on ds-arrays, histogram-grown on the stacked
+tensor.
+
+dislib's RandomForestClassifier trains each tree on a bootstrap of the
+distributed dataset; the TPU-native adaptation here replaces per-node row
+partitioning (data-dependent shapes, host recursion) with the
+**histogram/level-synchronous** growth scheme of LightGBM-style trees, which
+is one dense contraction per level:
+
+* features are quantized ONCE into ``n_bins`` codes block-natively: one
+  broadcast compare of the stacked block tensor against per-feature bin
+  edges (derived from the block-native ``min``/``max`` column reductions) —
+  the codes keep the block layout (rank-3, grid dim leading; the global
+  ``(n, m)`` rank-2 form is never built);
+* every tree level computes ALL (tree, node, feature, bin, class) histogram
+  counts in ONE einsum over the codes — trees ride a leading ``vmap``-style
+  batch dim, bootstraps enter as per-(tree, sample) multiplicities drawn
+  per block row ("per-block bootstrap": one PyCOMPSs task per block, here
+  one fold of the seeded generator per (tree, block-row)).  The einsum
+  consumes an explicit (n-ish, m, n_bins) one-hot of the codes — a
+  deliberate ``n_bins``× memory-for-simplicity trade at the current test/
+  bench scales; the ROADMAP follow-on replaces it with a segment-sum
+  histogram over the integer codes at O(n·m) memory;
+* splits maximize the Gini-impurity decrease from the cumulative
+  histograms; samples route to the next level with one gather per level;
+* ``predict`` walks all trees for every row inside a single
+  ``apply_along_axis`` call — one nested-vmap launch in block layout whose
+  per-row body is the majority vote over trees (block-native vote
+  reduction returning the usual ``(n, 1)`` ds-array).
+
+Cost laws: ``costmodel.forest_histogram_passes`` /
+``costmodel.forest_level_flops`` (the level contraction reads the code
+tensor once per level for the WHOLE forest — naive per-node partitioning
+reads it once per node).
+
+BCOO-blocked inputs densify on entry by policy: quantization compares every
+position (implicit zeros land in a bin too), which has no index-preserving
+sparse form — the op table in ``core.dsarray`` lists the estimator entry
+points with their storage behaviour.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dsarray import DsArray, apply_along_axis
+from repro.estimators.base import BaseClassifier
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins",))
+def _quantize_blocks(blocks, edges, n_bins: int):
+    """Bin codes for every element of the stacked tensor: ``sum(x > edge)``
+    over the per-feature bin edges laid out in block layout ``(gm, bm,
+    n_bins-1)``.  One broadcast compare per edge set, block-parallel."""
+    del n_bins
+    return (blocks[..., None] > edges[None, :, None, :, :]).sum(-1) \
+        .astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "n_classes"))
+def _level_histogram(codes1h, node1h_w, y1h, n_bins: int, n_classes: int):
+    """counts[t, node, feature, bin, class] for one level, as ONE einsum
+    over the (block-laid-out) samples: g = block row, a = row-in-block."""
+    del n_bins, n_classes
+    return jnp.einsum("gafB,tgaN,gaC->tNfBC", codes1h, node1h_w, y1h)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins",))
+def _best_splits(counts, n_bins: int):
+    """Per (tree, node): the (feature, bin) split maximizing the Gini
+    decrease, from the cumulative histogram.  Returns (feat, bin, gain);
+    nodes with no positive gain get the sentinel bin ``n_bins`` (every
+    sample routes left, i.e. the node stops splitting)."""
+    left = jnp.cumsum(counts, axis=3)                # (t, N, f, B, C)
+    total = left[:, :, :, -1:, :]
+    right = total - left
+    nl = left.sum(-1)                                # (t, N, f, B)
+    nr = right.sum(-1)
+    gl = nl - (left ** 2).sum(-1) / jnp.maximum(nl, 1.0)    # nl * gini_left
+    gr = nr - (right ** 2).sum(-1) / jnp.maximum(nr, 1.0)
+    nt = total.sum(-1)                               # (t, N, 1, 1) weight
+    gp = nt - (total ** 2).sum(-1) / jnp.maximum(nt, 1.0)
+    gain = gp - gl - gr                              # (t, N, f, B)
+    # a split must send something BOTH ways; bin B-1 sends all left
+    gain = jnp.where((nl > 0) & (nr > 0), gain, -jnp.inf)
+    t, n_nodes, m, b = gain.shape
+    flat = gain.reshape(t, n_nodes, m * b)
+    best = jnp.argmax(flat, axis=-1)
+    best_gain = jnp.take_along_axis(flat, best[..., None], -1)[..., 0]
+    feat = best // b
+    sbin = jnp.where(best_gain > 1e-6, best % b, n_bins)   # sentinel: leaf
+    return feat.astype(jnp.int32), sbin.astype(jnp.int32), best_gain
+
+
+@dataclasses.dataclass
+class RandomForestClassifier(BaseClassifier):
+    """dislib-style forest: ``RandomForestClassifier(...).fit(x, y)``.
+
+    Trees are complete binary trees of ``max_depth`` levels stored as flat
+    heap arrays (``feat_[t, node]`` / ``bin_[t, node]`` per level, leaf
+    class distribution at the bottom), grown level-synchronously from
+    histogram contractions — every array shape is static, so the whole
+    fit jits and replays across calls.
+    """
+
+    n_estimators: int = 8
+    max_depth: int = 6
+    n_bins: int = 16
+    bootstrap: bool = True
+    seed: int = 0
+
+    classes_: Optional[np.ndarray] = None
+    edges_: Optional[np.ndarray] = None     # (m, n_bins-1) feature bin edges
+    feat_: Optional[np.ndarray] = None      # (t, 2^depth - 1) split features
+    bin_: Optional[np.ndarray] = None       # (t, 2^depth - 1) split bins
+    leaf_class_: Optional[np.ndarray] = None  # (t, 2^depth) class index
+    n_features_in_: int = 0
+
+    # -- fit -----------------------------------------------------------------
+    def _bin_edges(self, x: DsArray) -> np.ndarray:
+        """Uniform per-feature bin edges between the block-native column
+        min/max reductions (paper Fig. 5 column tasks)."""
+        lo = np.asarray(x.min(axis=0).collect(), np.float32).ravel()
+        hi = np.asarray(x.max(axis=0).collect(), np.float32).ravel()
+        span = np.where(hi > lo, hi - lo, 1.0)
+        steps = np.arange(1, self.n_bins, dtype=np.float32) / self.n_bins
+        return (lo[:, None] + span[:, None] * steps[None, :]).astype(np.float32)
+
+    def _bootstrap_weights(self, gn: int, bn: int, n: int,
+                           t: int) -> np.ndarray:
+        """(t, gn, bn) sample multiplicities: each (tree, block-row) draws
+        its own bootstrap of the block's valid rows from one fold of the
+        seeded generator — the per-block task analogue, independent of how
+        the grid is later distributed."""
+        w = np.zeros((t, gn, bn), np.float32)
+        for ti in range(t):
+            for g in range(gn):
+                rows = min(bn, n - g * bn)
+                if rows <= 0:
+                    continue
+                rng = np.random.default_rng(
+                    np.random.SeedSequence([self.seed, ti, g]))
+                if self.bootstrap:
+                    w[ti, g, :rows] = np.bincount(
+                        rng.integers(0, rows, size=rows), minlength=rows)[:rows]
+                else:
+                    w[ti, g, :rows] = 1.0
+        return w
+
+    def fit(self, x, y) -> "RandomForestClassifier":
+        with self._driver_scope():
+            return self._fit(x, y)
+
+    def _fit(self, x, y) -> "RandomForestClassifier":
+        x, y_raw = self._validate_fit(x, y)
+        if x.is_sparse:
+            x = x.todense()          # quantization bins every position
+        x = x.ensure_zero_pad()
+        yi = self._encode_labels(y_raw)
+        n, m = x.shape
+        c = len(self.classes_)
+        t, depth, nb = self.n_estimators, self.max_depth, self.n_bins
+        self.n_features_in_ = m
+        self.edges_ = self._bin_edges(x)
+
+        gn, gm, bn, bm = x.blocks.shape
+        # block-laid-out edges -> codes on the stacked tensor -> row-grouped
+        # rank-3 (grid dim leading; never the (n, m) rank-2 global form)
+        edges_b = np.zeros((gm, bm, nb - 1), np.float32)
+        edges_flat = np.full((gm * bm, nb - 1), np.inf, np.float32)
+        edges_flat[:m] = self.edges_
+        edges_b[:] = edges_flat.reshape(gm, bm, nb - 1)
+        codes = _quantize_blocks(x.blocks, jnp.asarray(edges_b), nb)
+        codes_rows = codes.transpose(0, 2, 1, 3).reshape(gn, bn, gm * bm)
+        codes_rows = codes_rows[:, :, :m]                      # (gn, bn, m)
+
+        w = jnp.asarray(self._bootstrap_weights(gn, bn, n, t))  # (t, gn, bn)
+        y_pad = np.zeros((gn * bn,), np.int64)
+        y_pad[:n] = yi
+        y1h = jax.nn.one_hot(jnp.asarray(y_pad.reshape(gn, bn)), c)
+        codes1h = jax.nn.one_hot(codes_rows, nb)               # (gn,bn,m,B)
+
+        node = jnp.zeros((t, gn, bn), jnp.int32)
+        feats, bins = [], []
+        for level in range(depth):
+            node1h_w = jax.nn.one_hot(node, 1 << level) * w[..., None]
+            counts = _level_histogram(codes1h, node1h_w, y1h, nb, c)
+            feat, sbin, _ = _best_splits(counts, nb)           # (t, 2^level)
+            feats.append(np.asarray(feat))
+            bins.append(np.asarray(sbin))
+            # route: node' = 2*node + (code[sample, feat(node)] > bin(node))
+            f_sel = jnp.take_along_axis(
+                feat, node.reshape(t, -1), axis=1).reshape(node.shape)
+            b_sel = jnp.take_along_axis(
+                sbin, node.reshape(t, -1), axis=1).reshape(node.shape)
+            # take_along_axis broadcasts the leading dims: the (1, n, m)
+            # code tensor is shared across trees, never copied t times
+            code_sel = jnp.take_along_axis(
+                codes_rows.reshape(1, -1, m),
+                f_sel.reshape(t, -1, 1), axis=2).reshape(node.shape)
+            node = 2 * node + (code_sel > b_sel)
+        # leaves: class distribution per (tree, leaf); empty leaves inherit
+        # the global distribution so they never predict an unseen class id
+        node1h_w = jax.nn.one_hot(node, 1 << depth) * w[..., None]
+        leaf_counts = jnp.einsum("tgaN,gaC->tNC", node1h_w, y1h)
+        prior = jax.nn.one_hot(jnp.asarray(yi), c).sum(0) * 1e-6
+        self.leaf_class_ = np.asarray(
+            jnp.argmax(leaf_counts + prior[None, None, :], axis=-1),
+            np.int32)
+        self.feat_ = np.concatenate(feats, axis=1)     # heap order per level
+        self.bin_ = np.concatenate(bins, axis=1)
+        return self
+
+    # -- predict -------------------------------------------------------------
+    def predict(self, x) -> DsArray:
+        """Majority vote of all trees, block-natively: ONE
+        ``apply_along_axis`` nested-vmap launch whose per-row body
+        quantizes the row, walks every tree (vmapped) and bin-counts the
+        votes — no ``collect()`` of the data."""
+        self._check_fitted("feat_")
+        with self._driver_scope():
+            return self._predict(x)
+
+    def _predict(self, x) -> DsArray:
+        x = self._validate_x(x)
+        if x.is_sparse:
+            x = x.todense()
+        t, depth = self.n_estimators, self.max_depth
+        c = len(self.classes_)
+        edges = jnp.asarray(self.edges_)                       # (m, B-1)
+        feat = jnp.asarray(self.feat_)                         # (t, 2^d - 1)
+        sbin = jnp.asarray(self.bin_)
+        leaf = jnp.asarray(self.leaf_class_)                   # (t, 2^d)
+        classes = jnp.asarray(self.classes_)
+        level_base = np.cumsum([0] + [1 << d for d in range(depth - 1)])
+        level_base = jnp.asarray(level_base, jnp.int32)        # (depth,)
+
+        def one_tree(codes, tf, tb, tl):
+            def step(d, nd):
+                idx = level_base[d] + nd
+                go_right = codes[tf[idx]] > tb[idx]
+                return 2 * nd + go_right.astype(jnp.int32)
+            nd = jax.lax.fori_loop(0, depth, step, jnp.int32(0))
+            return tl[nd]
+
+        def row_vote(row):
+            codes = (row[:, None] > edges).sum(-1).astype(jnp.int32)
+            votes = jax.vmap(one_tree, in_axes=(None, 0, 0, 0))(
+                codes, feat, sbin, leaf)                       # (t,)
+            counts = (votes[:, None] ==
+                      jnp.arange(c)[None, :]).sum(0)           # (c,)
+            return classes[jnp.argmax(counts)].astype(classes.dtype)
+
+        out = apply_along_axis(row_vote, 1, x)                 # (n, 1)
+        return out.astype(classes.dtype) if out.dtype != classes.dtype else out

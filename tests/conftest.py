@@ -134,3 +134,44 @@ except ImportError:
 
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st
+
+
+# ---------------------------------------------------------------------------
+# Shared jaxpr-walking helpers.
+#
+# The no-densify / no-global-intermediate acceptance assertions
+# (test_lazy, test_sparse, test_estimators) all need to enumerate every
+# equation of a jaxpr including nested sub-jaxprs, and to detect outputs
+# shaped like a densified stacked operand.  One canonical version lives
+# here so a fix to the traversal applies to every suite at once.
+# ---------------------------------------------------------------------------
+
+
+def walk_eqns(jaxpr):
+    """Yield every eqn of a (closed) jaxpr, descending into sub-jaxprs."""
+    def visit(jx):
+        for eqn in jx.eqns:
+            yield eqn
+            for v in eqn.params.values():
+                for c in (v if isinstance(v, (list, tuple)) else [v]):
+                    sub = getattr(c, "jaxpr", None)
+                    if sub is not None:
+                        yield from visit(sub)
+
+    yield from visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+
+
+def dense_operand_intermediates(jaxpr, dense_shape):
+    """Eqn outputs at least as big as the densified sparse operand whose
+    trailing dims are its block shape — the signature of a todense()."""
+    import numpy as _np
+    gn, gm, bn, bm = dense_shape
+    full = gn * gm * bn * bm
+    bad = []
+    for e in walk_eqns(jaxpr):
+        for v in e.outvars:
+            shp = tuple(getattr(v.aval, "shape", ()))
+            if len(shp) >= 2 and shp[-2:] == (bn, bm) and \
+                    int(_np.prod(shp)) >= full:
+                bad.append((e.primitive.name, shp))
+    return bad

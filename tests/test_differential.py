@@ -291,3 +291,63 @@ def test_differential_corpus(group):
 def test_corpus_size_meets_acceptance():
     """ISSUE-4 acceptance: >= 200 corpus cases across all four paths."""
     assert N_GROUPS * CASES_PER_GROUP >= 200
+
+
+# ---------------------------------------------------------------------------
+# ISSUE-5: estimator fit/predict as differential steps — the same model fit
+# from every input path (eager dense, bcoo, ragged grid) must agree with
+# itself and with a NumPy oracle on fixed small datasets.
+# ---------------------------------------------------------------------------
+
+
+def _estimator_case(case_seed: int):
+    rng = np.random.default_rng(case_seed)
+    n = int(rng.integers(40, 90))
+    m = int(rng.integers(3, 7))
+    bn = int(rng.integers(4, 17))
+    bm = int(rng.integers(2, m + 1))
+    x = _mk_values(rng, n, m, np.float32, sparsity=0.5)
+    coef = rng.normal(size=m).astype(np.float32)
+    y_reg = (x @ coef + 1.0).astype(np.float32)
+    y_cls = (x @ coef > np.median(x @ coef)).astype(np.int32)
+    base = from_array(x, (bn, bm))
+    return x, y_reg, y_cls, coef, base
+
+
+@pytest.mark.parametrize("case", range(4))
+def test_differential_ridge_fit_predict(case):
+    from repro.estimators import Ridge
+    x, y_reg, _, coef, base = _estimator_case(SEED + 1000 + case)
+    paths = {"e": base, "sp": base.tosparse(),
+             "ragged": from_array(x, (7, 3))}
+    # NumPy oracle: closed-form ridge with unpenalized intercept
+    alpha = 0.5
+    m = x.shape[1]
+    xa = np.concatenate([x, np.ones((len(x), 1), np.float32)], axis=1)
+    reg = np.eye(m + 1) * alpha
+    reg[m, m] = 0.0
+    theta = np.linalg.solve(xa.T @ xa + reg, xa.T @ y_reg)
+    want = xa @ theta
+    for label, xd in paths.items():
+        est = Ridge(alpha=alpha).fit(xd, y_reg)
+        pred = np.asarray(est.predict(xd).collect(), np.float64).ravel()
+        np.testing.assert_allclose(pred, want, rtol=2e-3, atol=2e-3,
+                                   err_msg=label)
+        np.testing.assert_allclose(est.coef_, theta[:m], rtol=2e-3,
+                                   atol=2e-3, err_msg=label)
+
+
+@pytest.mark.parametrize("case", range(3))
+def test_differential_csvm_fit_predict(case):
+    from repro.estimators import CascadeSVM
+    x, _, y_cls, _, base = _estimator_case(SEED + 2000 + case)
+    paths = {"e": base, "sp": base.tosparse(),
+             "ragged": from_array(x, (7, 3))}
+    preds = {}
+    for label, xd in paths.items():
+        est = CascadeSVM(kernel="linear", sv_cap=32, max_iter=3).fit(xd, y_cls)
+        acc = est.score(xd, y_cls)
+        assert acc >= 0.85, (label, acc)
+        preds[label] = np.asarray(est.predict(xd).collect()).ravel()
+    # dense and sparse fits see the same chunks (same block rows): identical
+    np.testing.assert_array_equal(preds["e"], preds["sp"])

@@ -59,17 +59,7 @@ def assert_claim_holds(a: DsArray, label=""):
 # ---------------------------------------------------------------------------
 
 
-def _walk_eqns(jaxpr):
-    def visit(jx):
-        for eqn in jx.eqns:
-            yield eqn
-            for v in eqn.params.values():
-                for c in (v if isinstance(v, (list, tuple)) else [v]):
-                    sub = getattr(c, "jaxpr", None)
-                    if sub is not None:
-                        yield from visit(sub)
-
-    yield from visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+from conftest import walk_eqns as _walk_eqns  # canonical traversal
 
 
 def _primitives(jaxpr) -> set:
