@@ -1,0 +1,44 @@
+"""Static analysis for ds-array plans and their compiled jaxprs.
+
+Two inspection planes over one :func:`check` entry point:
+
+* **plan plane** — lint rules over the recorded ``Expr`` DAG, before and
+  after ``core.plan`` optimization (densify discipline, pad soundness,
+  cache-key stability, peak-HBM liveness ordering);
+* **jaxpr plane** — rules over the traced/compiled artifact (select-pass
+  budgets, full-grid HBM intermediates), generalizing the hand-rolled
+  jaxpr assertions the test suite grew in PRs 2-5.
+
+>>> from repro import analysis
+>>> analysis.check(plan_or_dsarray).raise_if_failed()
+
+``python -m repro.analysis`` lints the plans behind the examples and
+estimator fits (see ``__main__``).
+"""
+
+from repro.analysis.api import check, liveness_report
+from repro.analysis.findings import (AnalysisError, Finding, Report,
+                                     SEVERITIES, severity_rank)
+from repro.analysis.graph import PlanView
+from repro.analysis.jaxprs import (assert_fused_single_body,
+                                   assert_no_densify,
+                                   assert_no_global_intermediate,
+                                   count_selects,
+                                   dense_operand_intermediates,
+                                   entry_full_grid_defs, jaxpr_primitives,
+                                   rank2_global_intermediates, walk_eqns)
+from repro.analysis.liveness import (LivenessReport, minimized_order,
+                                     simulate_peak)
+from repro.analysis.rules import Rule, all_rule_ids, get_rules, register
+
+__all__ = [
+    "check", "liveness_report",
+    "AnalysisError", "Finding", "Report", "SEVERITIES", "severity_rank",
+    "PlanView",
+    "assert_fused_single_body", "assert_no_densify",
+    "assert_no_global_intermediate", "count_selects",
+    "dense_operand_intermediates", "entry_full_grid_defs",
+    "jaxpr_primitives", "rank2_global_intermediates", "walk_eqns",
+    "LivenessReport", "minimized_order", "simulate_peak",
+    "Rule", "all_rule_ids", "get_rules", "register",
+]

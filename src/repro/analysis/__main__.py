@@ -1,0 +1,183 @@
+"""``python -m repro.analysis`` — lint the plans behind the examples and
+estimator fits.
+
+Re-records the lazy plans the example scripts and estimator ``fit`` loops
+actually build (fits are captured live via ``plan.capture_plans``), runs
+every registered rule over each distinct plan, prints the findings plus the
+``peak-hbm-liveness`` naive-vs-minimized numbers, and exits nonzero on any
+unsuppressed finding at or above ``--fail-on`` (default: warn — the CI
+analysis lane's contract of zero unexplained findings on main).
+
+Waivers live in :data:`WAIVERS`: one suppression token (or rule id) per
+entry with a one-line justification, the graph analogue of ``# noqa``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Dict, Iterator, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import analysis
+from repro.core import from_array, plan as _plan, random_array
+from repro.core.io import from_array_auto
+
+#: token (or rule id) -> one-line justification.  Every entry must explain
+#: WHY the finding is acceptable; an empty dict means main is clean.
+WAIVERS: Dict[str, str] = {
+}
+
+
+def _dedup(plans: List["_plan.Plan"]) -> List["_plan.Plan"]:
+    """Distinct plans by structural key (hot loops re-plan one structure)."""
+    seen, out = set(), []
+    for p in plans:
+        if p.key not in seen:
+            seen.add(p.key)
+            out.append(p)
+    return out
+
+
+def _captured(fit) -> List["_plan.Plan"]:
+    with _plan.capture_plans() as caught:
+        fit()
+    return _dedup(caught)
+
+
+# -- scenario builders -------------------------------------------------------
+
+
+def _six_op_chain() -> List["_plan.Plan"]:
+    """The PR-3 acceptance chain: 6 elementwise ops fusing to one body."""
+    key = jax.random.PRNGKey(0)
+    a = from_array(jax.random.normal(key, (64, 48)), (8, 8)).lazy()
+    r = (((a + a) * 2.0 - a).abs() * 0.5 + 0.25)
+    return [_plan.plan_for(r)]
+
+
+def _quickstart() -> List["_plan.Plan"]:
+    """The lazy mirrors of examples/quickstart.py: the paper's indexing
+    expression, gram matmul, and the Fig. 5 column mean."""
+    key = jax.random.PRNGKey(1)
+    x = random_array(key, shape=(200, 80), block_shape=(50, 20)).lazy()
+    w = x[100:180, :40]
+    paper_expr = (w.transpose().norm(axis=1) ** 2).sqrt()
+    gram = x.transpose() @ x
+    col_mean = x.mean(axis=0)
+    return [_plan.plan_for(paper_expr),
+            _plan.plan_for(gram, col_mean)]
+
+
+def _linreg_fit() -> List["_plan.Plan"]:
+    from repro.estimators import LinearRegression
+    rng = np.random.default_rng(2)
+    x = from_array(rng.normal(size=(64, 6)).astype(np.float32), (16, 3))
+    y = rng.normal(size=(64,)).astype(np.float32)
+    return _captured(lambda: LinearRegression().fit(x, y))
+
+
+def _csvm_fit() -> List["_plan.Plan"]:
+    from repro.estimators import CascadeSVM
+    rng = np.random.default_rng(3)
+    xa = rng.normal(size=(64, 8)).astype(np.float32)
+    y = (xa[:, 0] > 0).astype(np.float32)
+    x = from_array(xa, (16, 8))
+    return _captured(lambda: CascadeSVM(max_iter=1, solver_iters=20,
+                                        sv_cap=16).fit(x, y))
+
+
+def _csvm_sparse_fit() -> List["_plan.Plan"]:
+    from repro.estimators import CascadeSVM
+    rng = np.random.default_rng(4)
+    xa = rng.normal(size=(64, 8)).astype(np.float32)
+    xa[rng.random(xa.shape) > 0.2] = 0.0
+    y = (xa.sum(axis=1) > 0).astype(np.float32)
+    x = from_array_auto(xa, (16, 8), "bcoo")
+    return _captured(lambda: CascadeSVM(max_iter=1, solver_iters=20,
+                                        sv_cap=16).fit(x, y))
+
+
+def _kmeans_fit() -> List["_plan.Plan"]:
+    from repro.algorithms.kmeans import KMeans
+    rng = np.random.default_rng(5)
+    x = from_array(rng.normal(size=(64, 4)).astype(np.float32), (16, 4))
+    return _captured(lambda: KMeans(n_clusters=3, max_iter=2,
+                                    seed=0).fit(x))
+
+
+def _pca_fit() -> List["_plan.Plan"]:
+    from repro.algorithms.linalg import PCA
+    rng = np.random.default_rng(6)
+    x = from_array(rng.normal(size=(64, 8)).astype(np.float32), (16, 4))
+    return _captured(lambda: PCA(n_components=2, n_iter=3, seed=0).fit(x))
+
+
+SCENARIOS = [
+    ("six-op-chain", _six_op_chain),
+    ("quickstart", _quickstart),
+    ("linreg-fit", _linreg_fit),
+    ("csvm-fit", _csvm_fit),
+    ("csvm-sparse-fit", _csvm_sparse_fit),
+    ("kmeans-fit", _kmeans_fit),
+    ("pca-fit", _pca_fit),
+]
+
+
+def iter_plans(names) -> Iterator[Tuple[str, "_plan.Plan"]]:
+    for name, build in SCENARIOS:
+        if names and name not in names:
+            continue
+        for i, p in enumerate(build()):
+            yield (f"{name}" if i == 0 else f"{name}#{i}"), p
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="lint the plans behind the examples and estimator fits")
+    ap.add_argument("--scenario", action="append", default=None,
+                    metavar="NAME", help="run one scenario (repeatable); "
+                    "known: " + ", ".join(n for n, _ in SCENARIOS))
+    ap.add_argument("--fail-on", default="warn",
+                    choices=list(analysis.SEVERITIES),
+                    help="exit nonzero on findings at/above this severity")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids (default: all)")
+    args = ap.parse_args(argv)
+    rules = args.rules.split(",") if args.rules else None
+
+    failed = 0
+    for name, p in iter_plans(args.scenario):
+        rep = analysis.check(p, rules=rules, fail_on=args.fail_on,
+                             suppress=list(WAIVERS))
+        live = rep.by_rule("peak-hbm-liveness")
+        print(f"== {name}: {len(p.roots)} root(s), "
+              f"{p.stats.get('nodes_after', '?')} nodes ==")
+        for f in live:
+            naive, minimized = f.data[0], f.data[1]
+            ratio = naive / minimized if minimized else 1.0
+            print(f"   peak HBM: naive={naive:,} minimized={minimized:,} "
+                  f"({ratio:.2f}x)")
+        for f in rep.findings:
+            if f.rule == "peak-hbm-liveness" and f.severity == "info":
+                continue
+            print(f"   {f}")
+        for f in rep.suppressed:
+            print(f"   [waived: {WAIVERS.get(f.token) or WAIVERS.get(f.rule)}]"
+                  f" {f.rule} @ {f.site}")
+        if not rep.ok:
+            failed += len(rep.failing)
+    if failed:
+        print(f"\n{failed} unsuppressed finding(s) at/above "
+              f"--fail-on={args.fail_on}", file=sys.stderr)
+        return 1
+    print("\nall plans clean.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,142 @@
+"""Canonical jaxpr/HLO inspection helpers.
+
+These were copy-pasted across seven test modules before PR 6; they now live
+here so the tests and the analyzer rules share one traversal — a fix to the
+walk applies to every consumer at once.  The ``assert_*`` wrappers are the
+public test-facing form of the corresponding lint rules.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Set, Tuple
+
+import numpy as np
+
+
+def _open(jaxpr):
+    return jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr
+
+
+def walk_eqns(jaxpr):
+    """Yield every eqn of a (closed) jaxpr, descending into sub-jaxprs."""
+    def visit(jx):
+        for eqn in jx.eqns:
+            yield eqn
+            for v in eqn.params.values():
+                for c in (v if isinstance(v, (list, tuple)) else [v]):
+                    sub = getattr(c, "jaxpr", None)
+                    if sub is not None:
+                        yield from visit(sub)
+
+    yield from visit(_open(jaxpr))
+
+
+def jaxpr_primitives(jaxpr) -> Set[str]:
+    """The set of primitive names anywhere in the jaxpr (incl. sub-jaxprs)."""
+    return {e.primitive.name for e in walk_eqns(jaxpr)}
+
+
+def count_selects(jaxpr) -> int:
+    """Mask/remask passes in the trace: ``select``/``select_n`` eqns."""
+    return sum(1 for e in walk_eqns(jaxpr)
+               if e.primitive.name in ("select_n", "select"))
+
+
+def dense_operand_intermediates(jaxpr, dense_shape) -> List[tuple]:
+    """Eqn outputs at least as big as the densified sparse operand whose
+    trailing dims are its block shape — the signature of a todense()."""
+    gn, gm, bn, bm = dense_shape
+    full = gn * gm * bn * bm
+    bad = []
+    for e in walk_eqns(jaxpr):
+        for v in e.outvars:
+            shp = tuple(getattr(v.aval, "shape", ()))
+            if len(shp) >= 2 and shp[-2:] == (bn, bm) and \
+                    int(np.prod(shp)) >= full:
+                bad.append((e.primitive.name, shp))
+    return bad
+
+
+def rank2_global_intermediates(jaxpr, n, m, pn, pm) -> List[tuple]:
+    """All rank-2 eqn outputs whose extent reaches the global array size.
+
+    The seed paths materialized ``(pn, pm)``/``(n, m)`` tensors; block-native
+    ops may only produce tensors that keep grid dims (rank 3/4) or small
+    per-axis masks.
+    """
+    bad = []
+    for e in walk_eqns(jaxpr):
+        for v in e.outvars:
+            shape = tuple(getattr(v.aval, "shape", ()))
+            if len(shape) == 2 and shape[0] >= min(n, pn) and \
+                    shape[1] >= min(m, pm):
+                bad.append((e.primitive.name, shape))
+    return bad
+
+
+def _def_type(line: str) -> str:
+    """The type portion of one HLO instruction line (between ``=`` and the
+    opcode), handling tuple-typed defs like ``(f32[4,3,8,8]) opt-barrier``."""
+    rhs = line.split("=", 1)[1].strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                return rhs[:i + 1]
+        return rhs
+    return rhs.split("(", 1)[0]
+
+
+def entry_full_grid_defs(compiled_text: str, shape4) -> List[str]:
+    """Non-parameter, non-ROOT ENTRY instructions defining a full-grid value.
+
+    The eager chain wrote every intermediate to HBM; a fused plan's ENTRY
+    must contain the full-grid shape only as parameters and the ROOT
+    fusion — anything else is an intermediate full-grid HBM write.
+    """
+    marker = "[" + ",".join(str(d) for d in shape4) + "]"
+    entry = compiled_text[compiled_text.index("ENTRY"):]
+    # ENTRY body ends at the first closing brace at column 0
+    body = entry.split("\n}")[0]
+    bad = []
+    for line in body.splitlines():
+        line = line.strip()
+        if "=" not in line or marker not in _def_type(line):
+            continue
+        if "parameter(" in line or line.startswith("ROOT"):
+            continue
+        bad.append(line)
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# Assertion wrappers (the public test-facing form of the lint rules)
+# ---------------------------------------------------------------------------
+
+
+def assert_no_densify(jaxpr, dense_shape, msg: str = "") -> None:
+    """Rule ``no-densify``, jaxpr plane: no eqn output shaped like the
+    densified form of the ``dense_shape``-blocked sparse operand."""
+    bad = dense_operand_intermediates(jaxpr, dense_shape)
+    assert not bad, (f"sparse operand densified: {bad}"
+                     + (f" ({msg})" if msg else ""))
+
+
+def assert_no_global_intermediate(jaxpr, n, m, pn, pm) -> None:
+    """Rule ``no-full-grid-intermediate``, rank-2 form: no global-extent
+    rank-2 tensor anywhere in the trace (block-native ops keep grid dims)."""
+    bad = rank2_global_intermediates(jaxpr, n, m, pn, pm)
+    assert not bad, f"global-shape intermediates produced: {bad}"
+
+
+def assert_fused_single_body(plan, shape4) -> None:
+    """Rule ``no-full-grid-intermediate`` for a fully-fused plan: one jit
+    body (no nested calls) whose compiled ENTRY defines the full-grid shape
+    only as parameters and the ROOT fusion."""
+    prims = jaxpr_primitives(plan.jaxpr())
+    assert "pjit" not in prims and "custom_jvp_call" not in prims, prims
+    txt = plan.lowered().compile().as_text()
+    bad = entry_full_grid_defs(txt, tuple(shape4))
+    assert not bad, f"intermediate full-grid HBM writes in ENTRY: {bad}"

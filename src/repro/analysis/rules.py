@@ -1,0 +1,370 @@
+"""The lint rules: small classes registered under stable ids.
+
+Each rule inspects one or two planes of a :class:`~repro.analysis.graph.
+PlanView` and returns :class:`Finding`s.  Planes are declared via
+``needs`` so the driver can report what a rule costs: ``"plan"`` is free
+(DAG walk), ``"jaxpr"`` pays one trace, ``"hlo"`` pays one XLA compile.
+Rules that would need an expensive plane but can prove from the DAG alone
+that nothing can fire skip it (e.g. ``no-densify`` never traces a plan
+with no sparse nodes).
+
+Rule ids, one line each:
+
+``no-densify``            sparse values only densify through explicit nodes
+``no-full-grid-intermediate``  fused bodies write no extra full-grid HBM defs
+``pad-soundness``         claimed pad_state never stronger than derivable
+``remask-budget``         select passes stay within the costmodel budget
+``recompile-hazard``      recordings whose plan-cache key cannot be stable
+``peak-hbm-liveness``     naive vs liveness-minimized peak HBM (info; warn
+                          when reordering saves >= 2x)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple, Type
+
+import numpy as np
+
+from repro.core import costmodel
+from repro.core.expr import (AsType, Blockwise, ConcatRows, Densify, Expr,
+                             GetItem, MatMul, PadGrid, Rechunk, Reduce,
+                             Shuffle, ToSparse, Transpose, _is_ds, _is_sparse)
+from repro.analysis import jaxprs, liveness
+from repro.analysis.findings import Finding
+from repro.analysis.graph import PlanView
+
+_REGISTRY: Dict[str, Type["Rule"]] = {}
+
+
+def register(cls: Type["Rule"]) -> Type["Rule"]:
+    assert cls.id not in _REGISTRY, f"duplicate rule id {cls.id}"
+    _REGISTRY[cls.id] = cls
+    return cls
+
+
+def all_rule_ids() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def get_rules(ids=None) -> List["Rule"]:
+    if ids is None:
+        return [cls() for cls in _REGISTRY.values()]
+    unknown = [i for i in ids if i not in _REGISTRY]
+    if unknown:
+        raise ValueError(f"unknown rule ids {unknown}; "
+                         f"known: {sorted(_REGISTRY)}")
+    return [_REGISTRY[i]() for i in ids]
+
+
+class Rule:
+    """One lint rule: ``run(view)`` returns findings for one plan."""
+
+    id: str = "?"
+    severity: str = "error"
+    needs: Tuple[str, ...] = ("plan",)
+
+    def run(self, view: PlanView) -> List[Finding]:
+        raise NotImplementedError
+
+    def finding(self, site: str, message: str, severity: str = None,
+                data: tuple = ()) -> Finding:
+        return Finding(rule=self.id, severity=severity or self.severity,
+                       site=site, message=message, data=data)
+
+
+# ---------------------------------------------------------------------------
+
+
+#: nodes a sparse value may legally flow into without a finding: Densify is
+#: the explicit claim, MatMul/Reduce consume BCOO natively (spmm / entry
+#: reduction), ToSparse/Canonicalize are format ops.
+_SPARSE_SINKS = (Densify, MatMul, Reduce, ToSparse)
+#: structural ops whose sparse handling is documented to go through dense.
+_DOCUMENTED_DENSIFY = (GetItem, Rechunk, ConcatRows, Shuffle, Transpose,
+                       PadGrid)
+
+
+@register
+class NoDensify(Rule):
+    """A bcoo value never flows through a densifying op unless an explicit
+    ``Densify`` node claims the conversion (the paper's sparse wins die the
+    moment a chain silently materializes the dense form)."""
+
+    id = "no-densify"
+    severity = "error"
+    needs = ("plan", "jaxpr")
+
+    def run(self, view: PlanView) -> List[Finding]:
+        out: List[Finding] = []
+        flagged: set = set()
+        sparse_nodes = [n for n in view.nodes if _is_sparse(n.meta)]
+        for n in view.nodes:
+            if not (_is_ds(n.meta) and not _is_sparse(n.meta)):
+                continue
+            if not any(_is_sparse(c.meta) for c in n.children):
+                continue
+            if isinstance(n, _SPARSE_SINKS):
+                continue
+            if isinstance(n, _DOCUMENTED_DENSIFY):
+                out.append(self.finding(
+                    view.label(n), "sparse operand goes through the "
+                    "documented dense path of a structural op",
+                    severity="info"))
+                flagged.add(id(n))
+                continue
+            out.append(self.finding(
+                view.label(n),
+                f"{n.kind} consumes a bcoo operand but produces a dense "
+                "result without an explicit Densify node claiming the "
+                "conversion"))
+            flagged.add(id(n))
+        if not sparse_nodes:
+            return out
+        # jaxpr plane: eqn outputs shaped like the densified sparse operand
+        # that no legitimate dense node accounts for
+        claimed = {tuple(n.meta.blocks.shape) for n in view.nodes
+                   if _is_ds(n.meta) and not _is_sparse(n.meta)
+                   and id(n) not in flagged}
+        seen: set = set()
+        for sp in sparse_nodes:
+            shape4 = tuple(sp.meta.blocks.shape)
+            if shape4 in seen or shape4 in claimed:
+                continue
+            seen.add(shape4)
+            hits = jaxprs.dense_operand_intermediates(view.jaxpr(), shape4)
+            for prim, shp in hits:
+                if tuple(shp) in claimed:
+                    continue
+                out.append(self.finding(
+                    f"eqn:{prim}{list(shp)}",
+                    f"trace materializes a dense {list(shp)} value from a "
+                    f"bcoo operand blocked {list(shape4)} with no Densify "
+                    "node in the plan"))
+        return out
+
+
+@register
+class NoFullGridIntermediate(Rule):
+    """No non-root full-grid HBM def in the compiled ENTRY beyond what the
+    plan's surviving nodes account for — the general form of the PR-3
+    hand-rolled single-fused-body HLO check."""
+
+    id = "no-full-grid-intermediate"
+    severity = "error"
+    needs = ("plan", "hlo")
+
+    def run(self, view: PlanView) -> List[Finding]:
+        dense_bw = [n for n in view.nodes
+                    if isinstance(n, Blockwise) and _is_ds(n.meta)
+                    and not _is_sparse(n.meta)]
+        if not dense_bw:
+            return []        # nothing fusible: skip the XLA compile
+        shapes = {tuple(n.meta.blocks.shape) for n in dense_bw}
+        roots = {id(r) for r in view.roots}
+        txt = view.hlo_text()
+        out: List[Finding] = []
+        for shape4 in sorted(shapes):
+            # every surviving non-root node of this shape legitimately
+            # materializes once; with several roots each root's def also
+            # appears as a plain ENTRY instruction (ROOT is the tuple)
+            budget = sum(
+                1 for n in view.nodes
+                if id(n) not in roots and n.children
+                and _is_ds(n.meta) and not _is_sparse(n.meta)
+                and tuple(n.meta.blocks.shape) == shape4)
+            if len(view.roots) > 1:
+                budget += sum(
+                    1 for r in view.roots
+                    if _is_ds(r.meta) and not _is_sparse(r.meta)
+                    and tuple(r.meta.blocks.shape) == shape4)
+            defs = jaxprs.entry_full_grid_defs(txt, shape4)
+            if len(defs) > budget:
+                out.append(self.finding(
+                    f"entry:{list(shape4)}",
+                    f"{len(defs)} full-grid {list(shape4)} HBM defs in the "
+                    f"compiled ENTRY but the plan accounts for {budget} — "
+                    "an intermediate is being materialized inside a fused "
+                    f"chain (first: {defs[0][:96]})",
+                    data=(len(defs), budget)))
+        return out
+
+
+@register
+class PadSoundness(Rule):
+    """Abstract-interpret pad state with the same probe the recorder uses
+    and flag any node whose CLAIMED pad_state is stronger than the derived
+    one — a wrong zero/fill claim makes every downstream mask elision
+    unsound."""
+
+    id = "pad-soundness"
+    severity = "error"
+    needs = ("plan",)
+
+    def run(self, view: PlanView) -> List[Finding]:
+        out: List[Finding] = []
+        for n in view.nodes:
+            if not isinstance(n, Blockwise) or not _is_ds(n.meta):
+                continue
+            if _is_sparse(n.meta):
+                continue     # bcoo results are zero-padded by construction
+            claim = n.pad
+            derived = n._probe_pad()
+            if claim == derived:
+                continue
+            if claim.kind == "dirty":
+                continue     # weaker than derivable: sound, never flagged
+            if derived.kind == "dirty":
+                out.append(self.finding(
+                    view.label(n),
+                    f"claims pad_state {claim} but the probe cannot derive "
+                    "it (derived DIRTY): the claim is stronger than the "
+                    "transfer rules support",
+                    data=(str(claim), str(derived))))
+            else:
+                out.append(self.finding(
+                    view.label(n),
+                    f"claims pad_state {claim} but the probe derives "
+                    f"{derived}: mask elision downstream would read wrong "
+                    "pad values",
+                    data=(str(claim), str(derived))))
+        return out
+
+
+#: consumers that may pay one deferred remask per ds operand
+#: (``costmodel.chain_remask_passes(1, pad_tracked=True,
+#: zero_preserving=False) == 1``).
+_REMASK_CONSUMERS = (MatMul, Reduce, GetItem, Rechunk, ConcatRows, Shuffle,
+                     Densify, ToSparse)
+
+
+@register
+class RemaskBudget(Rule):
+    """Count mask/select passes in the trace against the costmodel budget:
+    one deferred pass per ds operand of each pad-sensitive consumer, plus
+    one per root materialization — the pad-state tracking contract."""
+
+    id = "remask-budget"
+    severity = "warn"
+    needs = ("plan", "jaxpr")
+
+    def run(self, view: PlanView) -> List[Finding]:
+        per_consumer = costmodel.chain_remask_passes(
+            1, pad_tracked=True, zero_preserving=False)
+        budget = len(view.roots) * per_consumer
+        for n in view.nodes:
+            if isinstance(n, _REMASK_CONSUMERS):
+                budget += per_consumer * sum(
+                    1 for c in n.children if _is_ds(c.meta))
+        count = jaxprs.count_selects(view.jaxpr())
+        if count <= budget:
+            return []
+        return [self.finding(
+            "plan",
+            f"{count} select/mask passes in the trace exceed the remask "
+            f"budget of {budget} (one deferred pass per pad-sensitive "
+            "consumer operand + one per root)",
+            data=(count, budget))]
+
+
+def _iter_key_atoms(key):
+    if isinstance(key, tuple):
+        for k in key:
+            yield from _iter_key_atoms(k)
+    else:
+        yield key
+
+
+def _scalar_atoms(key):
+    """(value, dtype-str) pairs as baked by ``expr._scalar_key``."""
+    if isinstance(key, tuple):
+        if len(key) == 2 and isinstance(key[0], (bool, int, float)) \
+                and isinstance(key[1], str):
+            try:
+                np.dtype(key[1])
+            except TypeError:
+                pass
+            else:
+                yield key
+                return
+        for k in key:
+            yield from _scalar_atoms(k)
+
+
+@register
+class RecompileHazard(Rule):
+    """Plan-cache key instability in the AS-RECORDED DAG: keys that cannot
+    match across recordings (fresh lambdas), baked non-static data, and
+    scalar operands whose weak-type drift splits the cache."""
+
+    id = "recompile-hazard"
+    severity = "warn"
+    needs = ("plan",)
+
+    def run(self, view: PlanView) -> List[Finding]:
+        out: List[Finding] = []
+        scalars: Dict[float, set] = {}
+        scalar_site: Dict[float, str] = {}
+        for n in view.raw_nodes:
+            if not isinstance(n, Blockwise):
+                continue
+            site = f"{n.describe()}#raw"
+            for atom in _iter_key_atoms(n.key):
+                if callable(atom) and \
+                        getattr(atom, "__name__", "") == "<lambda>":
+                    out.append(self.finding(
+                        site, "a lambda is baked into the plan key: every "
+                        "re-recording creates a fresh function object, so "
+                        "the compiled-plan cache can never hit (name the "
+                        "fn, or pass a stable _key)"))
+            for cell in getattr(n.fn, "__closure__", None) or ():
+                v = cell.cell_contents
+                if getattr(v, "ndim", 0) and not callable(v):
+                    out.append(self.finding(
+                        site, f"recorded fn closes over a {v.ndim}-D array "
+                        f"{tuple(v.shape)}: the data is baked into the "
+                        "compiled plan instead of being a runtime input "
+                        "(thread it through map_blocks operands)"))
+            for val, dt in _scalar_atoms(n.key):
+                try:
+                    fval = float(val)
+                except (TypeError, OverflowError):
+                    continue
+                scalars.setdefault(fval, set()).add(dt)
+                scalar_site.setdefault(fval, site)
+        for fval, dts in sorted(scalars.items()):
+            if len(dts) > 1:
+                out.append(self.finding(
+                    scalar_site[fval],
+                    f"scalar {fval} is baked with {len(dts)} distinct "
+                    f"dtypes {sorted(dts)} in one plan: weak-type drift "
+                    "(e.g. `2` vs `2.0`) keys separate cache entries for "
+                    "the same computation",
+                    data=(fval, tuple(sorted(dts)))))
+        return out
+
+
+@register
+class PeakHbmLiveness(Rule):
+    """Per-node live-set bytes under the naive emission order vs a
+    liveness-minimizing topological order (dask ``order.py`` style) from
+    the costmodel byte laws.  Always reports both peaks (info); flags the
+    plan (warn) when reordering saves ``PEAK_REORDER_FACTOR``x or more."""
+
+    id = "peak-hbm-liveness"
+    severity = "warn"
+    needs = ("plan",)
+
+    def run(self, view: PlanView) -> List[Finding]:
+        rep = liveness.analyze(view.roots)
+        data = (rep.naive_peak, rep.minimized_peak, rep.input_bytes,
+                rep.n_nodes)
+        if rep.reorder_pays:
+            return [self.finding(
+                "plan",
+                f"naive emission order peaks at {rep.naive_peak:,} live "
+                f"bytes; a liveness-minimizing order needs only "
+                f"{rep.minimized_peak:,} ({rep.ratio:.2f}x) — reordering "
+                "pays (costmodel.PEAK_REORDER_FACTOR)",
+                data=data)]
+        return [self.finding(
+            "plan", str(rep), severity="info", data=data)]

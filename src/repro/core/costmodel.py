@@ -464,3 +464,40 @@ def forest_level_flops(n: int, m: int, bins: int, classes: int,
     n*m*bins*trees*2)."""
     del classes, nodes
     return 2.0 * n * m * bins * trees
+
+
+# ---------------------------------------------------------------------------
+# Liveness laws: peak HBM of a plan under a static execution order.
+#
+# Dispatch on TPU is compiled away, but HBM is not: a plan's intermediates
+# are live from the eqn that defines them to their last consumer, so the
+# EXECUTION ORDER decides the peak resident bytes — dask computes exactly
+# this in order.py for its scheduler, and the ROADMAP's multi-host item
+# needs it to bound per-host block footprint.  ``repro.analysis.liveness``
+# simulates both the naive emission order and a Sethi-Ullman-style
+# minimizing order using these byte laws per node.
+# ---------------------------------------------------------------------------
+
+
+def node_live_bytes(shape4, e: int, nse: int = None, idx_e: int = 4) -> float:
+    """Resident HBM bytes of one plan node's output: dense stacked tensor,
+    or per-block BCOO entries (value + 2-D index) when ``nse`` is given."""
+    gn, gm, bn, bm = shape4
+    if nse is not None:
+        return float(gn) * gm * bcoo_bytes(nse, e, idx_e)
+    return dense_stacked_bytes(gn, gm, bn, bm, e)
+
+
+#: reordering is worth surfacing when the naive order's peak is at least
+#: this factor above the liveness-minimizing order's.
+PEAK_REORDER_FACTOR = 2.0
+
+
+def liveness_reorder_pays(naive_peak: float, ordered_peak: float,
+                          factor: float = PEAK_REORDER_FACTOR) -> bool:
+    """Does a liveness-minimizing topological order pay?  True when the
+    naive child-first emission order holds ``factor``x (default 2x) the
+    peak bytes of the reordered schedule."""
+    if ordered_peak <= 0:
+        return False
+    return naive_peak >= factor * ordered_peak

@@ -119,7 +119,32 @@ optimizer never composes them with dense elementwise chains (``core.plan``)
 ``check_invariants()`` validates the claims above on concrete arrays (pad
 region matches ``pad_state``, grid/shape consistency, BCOO indices
 in-bounds-or-zero); exported for tests and run at every construction under
-``REPRO_DEBUG=1``.
+``REPRO_DEBUG=1`` (``pytest --repro-debug`` arms it for a whole test run).
+Violations name the offending block: ``block (gi, gj) at offset (bi, bj)``
+for dense pads, ``block (gi, gj) slot k`` for BCOO entries.
+
+Each claim in the tables above is machine-checked by ``repro.analysis``
+(``analysis.check(plan_or_dsarray)``, CLI ``python -m repro.analysis``).
+Rule ids per op row:
+
+======================  ======================================================
+op family               analyzer rules that police it
+======================  ======================================================
+sparse op rows          ``no-densify`` — a bcoo operand reaching a dense
+(``sp @ dense``, maps,    kernel without a recorded ``Densify``/documented
+sums, slices)             sink is an error on both the plan and the jaxpr
+elementwise chains      ``remask-budget`` — select/mask passes in the trace
+(L ops, ≤1 remask)        vs ``costmodel.chain_remask_passes``;
+                          ``no-full-grid-intermediate`` — the fused chain
+                          must compile to one body, no full-grid HBM def
+pad-state rows          ``pad-soundness`` — a recorded Blockwise may not
+(ZERO/FILL/DIRTY)         claim a stronger pad than its fn probe derives
+scalar ops / map_blocks ``recompile-hazard`` — baked scalars with weak-type
+                          drift, raw lambdas in plan keys, captured arrays
+any multi-node plan     ``peak-hbm-liveness`` — naive emission order vs the
+                          liveness-minimizing topological order (bytes from
+                          ``costmodel.node_live_bytes``); warns at ≥2x
+======================  ======================================================
 
 Remask-elision rules: a binary/unary op on known pad states yields the op of
 the pad constants (probed on 0-d values at trace time) — nan or a traced
@@ -483,15 +508,24 @@ class DsArray:
         sgn, sgm = self.stacked_grid
         g = np.asarray(self.blocks).transpose(0, 2, 1, 3)
         g = g.reshape(sgn * bn, sgm * bm)
-        pad = np.concatenate([g[n:].ravel(), g[:n, m:].ravel()])
+        pad_mask = (np.arange(sgn * bn)[:, None] >= n) | \
+                   (np.arange(sgm * bm)[None, :] >= m)
         if self.pad_state.kind == "zero":
-            if pad.size and not (pad == 0).all():
-                raise AssertionError("pad_state=ZERO but pad region nonzero")
+            bad = pad_mask & (g != 0)
         elif self.pad_state.kind == "fill":
             want = np.asarray(self.pad_state.fill, self.blocks.dtype)
-            if pad.size and not (pad == want).all():
-                raise AssertionError(
-                    f"pad_state=FILL({self.pad_state.fill}) but pad differs")
+            bad = pad_mask & (g != want)
+        else:
+            return self
+        if bad.any():
+            r, c = (int(v) for v in np.argwhere(bad)[0])
+            gi, bi = divmod(r, bn)
+            gj, bj = divmod(c, bm)
+            raise AssertionError(
+                f"pad_state={self.pad_state} but pad region differs: "
+                f"{int(bad.sum())} violation(s), first in block "
+                f"({gi}, {gj}) at offset ({bi}, {bj}) "
+                f"(global ({r}, {c}), value {g[r, c]!r})")
         return self
 
     # -- laziness -------------------------------------------------------------

@@ -189,6 +189,22 @@ class Expr:
     def rebuild(self, children: Sequence["Expr"]) -> "Expr":
         raise NotImplementedError
 
+    @property
+    def kind(self) -> str:
+        """The node's class name — the stable kind id the analysis layer
+        keys rules and finding sites on."""
+        return type(self).__name__
+
+    def describe(self) -> str:
+        """Short human-stable label for findings: ``Kind`` or ``Kind[tag]``
+        where the tag is the leading element of ``local_key()``."""
+        try:
+            lk = self.local_key()
+        except NotImplementedError:
+            return self.kind
+        tag = lk[0] if isinstance(lk, tuple) and lk else lk
+        return f"{self.kind}[{tag}]"
+
 
 class Leaf(Expr):
     """A concrete DsArray: a plan input.  Identity (not data) keyed — two

@@ -43,6 +43,7 @@ structure + nse like any other.
 
 from __future__ import annotations
 
+import contextlib
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -56,6 +57,26 @@ from repro.core.expr import (ArrayLeaf, Blockwise, Expr, Leaf, MatMul,
 # ---------------------------------------------------------------------------
 # Optimizer
 # ---------------------------------------------------------------------------
+
+
+def emission_order(roots: Sequence[Expr]) -> List[Expr]:
+    """Every DAG node in the naive emission order: the child-first,
+    left-to-right DFS that ``Plan._make_run``'s ``ev`` memoization actually
+    evaluates in.  The analysis layer's 'naive' schedule is exactly this."""
+    seen = set()
+    order: List[Expr] = []
+
+    def visit(n: Expr) -> None:
+        if id(n) in seen:
+            return
+        seen.add(id(n))
+        for c in n.children:
+            visit(c)
+        order.append(n)
+
+    for r in roots:
+        visit(r)
+    return order
 
 
 def _count_nodes(roots: Sequence[Expr]) -> int:
@@ -369,6 +390,25 @@ def clear_cache() -> None:
     _STATS.update(hits=0, misses=0, launches=0, opt_runs=0, opt_skips=0)
 
 
+# Plan observers: the analysis CLI records the plans real workloads build
+# (estimator fits call compute_multi internally) by registering a callback
+# here.  Empty in normal operation — Plan.__init__ pays one truthiness
+# check.
+_PLAN_OBSERVERS: List = []
+
+
+@contextlib.contextmanager
+def capture_plans():
+    """Collect every ``Plan`` constructed inside the block (post-dedup is
+    the caller's job — hot loops re-plan the same structure)."""
+    captured: List[Plan] = []
+    _PLAN_OBSERVERS.append(captured.append)
+    try:
+        yield captured
+    finally:
+        _PLAN_OBSERVERS.remove(captured.append)
+
+
 class Plan:
     """An optimized, compilable plan over one or more roots.
 
@@ -395,8 +435,18 @@ class Plan:
             self.key, positions, stats = cached
             self.stats = dict(stats)
             self.leaves = [raw_leaves[p] for p in positions]
-            return
-        self._optimize_now(pre_key, raw_leaves)
+        else:
+            self._optimize_now(pre_key, raw_leaves)
+        if _PLAN_OBSERVERS:
+            for cb in list(_PLAN_OBSERVERS):
+                cb(self)
+
+    @property
+    def raw_roots(self) -> List[Expr]:
+        """The as-recorded (pre-optimization) roots — the plan plane the
+        ``recompile-hazard`` rule lints, since canonicalization erases the
+        recording artifacts (fresh lambdas, baked scalars) it looks for."""
+        return self._raw_roots
 
     def _optimize_now(self, pre_key=None, raw_leaves=None) -> None:
         _STATS["opt_runs"] += 1

@@ -640,15 +640,26 @@ def check_bcoo_invariants(a: "DsArray") -> None:
     data = np.asarray(sp.data)
     gn, gm, bn, bm = sp.shape
     n, m = a.shape
-    if idx.size and idx.min() < 0:
-        raise AssertionError("negative BCOO index")
+    def _site(mask) -> str:
+        gi, gj, slot = (int(v) for v in np.argwhere(mask)[0])
+        return (f"{int(mask.sum())} violation(s), first in block "
+                f"({gi}, {gj}) slot {slot}: index "
+                f"({int(idx[gi, gj, slot, 0])}, {int(idx[gi, gj, slot, 1])})"
+                f", data {data[gi, gj, slot]!r}")
+
+    neg = (idx[..., 0] < 0) | (idx[..., 1] < 0)
+    if np.any(neg):
+        raise AssertionError(f"negative BCOO index: {_site(neg)}")
     oob = (idx[..., 0] >= bn) | (idx[..., 1] >= bm)
-    if np.any(data[oob] != 0):
-        raise AssertionError("out-of-bounds BCOO slot with nonzero data")
+    bad = oob & (data != 0)
+    if np.any(bad):
+        raise AssertionError(
+            f"out-of-bounds BCOO slot with nonzero data: {_site(bad)}")
     bi = np.arange(gn)[:, None, None]
     bj = np.arange(gm)[None, :, None]
     in_pad = ((bi * bn + idx[..., 0]) >= n) | ((bj * bm + idx[..., 1]) >= m)
-    if np.any(data[in_pad & ~oob] != 0):
+    bad = in_pad & ~oob & (data != 0)
+    if np.any(bad):
         raise AssertionError(
             "nonzero BCOO entry in the logical pad region "
-            "(sparse pad invariant violated)")
+            f"(sparse pad invariant violated): {_site(bad)}")

@@ -139,39 +139,49 @@ except ImportError:
 # ---------------------------------------------------------------------------
 # Shared jaxpr-walking helpers.
 #
-# The no-densify / no-global-intermediate acceptance assertions
-# (test_lazy, test_sparse, test_estimators) all need to enumerate every
-# equation of a jaxpr including nested sub-jaxprs, and to detect outputs
-# shaped like a densified stacked operand.  One canonical version lives
-# here so a fix to the traversal applies to every suite at once.
+# The canonical versions moved into ``repro.analysis.jaxprs`` in PR 6 (the
+# analyzer's jaxpr plane is built on them); these re-exports keep the
+# long-standing `from conftest import walk_eqns` sites working and
+# guarantee tests and analyzer can never drift apart.
 # ---------------------------------------------------------------------------
 
-
-def walk_eqns(jaxpr):
-    """Yield every eqn of a (closed) jaxpr, descending into sub-jaxprs."""
-    def visit(jx):
-        for eqn in jx.eqns:
-            yield eqn
-            for v in eqn.params.values():
-                for c in (v if isinstance(v, (list, tuple)) else [v]):
-                    sub = getattr(c, "jaxpr", None)
-                    if sub is not None:
-                        yield from visit(sub)
-
-    yield from visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+from repro.analysis.jaxprs import (  # noqa: E402,F401
+    dense_operand_intermediates, walk_eqns)
 
 
-def dense_operand_intermediates(jaxpr, dense_shape):
-    """Eqn outputs at least as big as the densified sparse operand whose
-    trailing dims are its block shape — the signature of a todense()."""
-    import numpy as _np
-    gn, gm, bn, bm = dense_shape
-    full = gn * gm * bn * bm
-    bad = []
-    for e in walk_eqns(jaxpr):
-        for v in e.outvars:
-            shp = tuple(getattr(v.aval, "shape", ()))
-            if len(shp) >= 2 and shp[-2:] == (bn, bm) and \
-                    int(_np.prod(shp)) >= full:
-                bad.append((e.primitive.name, shp))
-    return bad
+# ---------------------------------------------------------------------------
+# Opt-in invariant lane: `pytest --repro-debug` sets REPRO_DEBUG=1 for the
+# whole session, so every DsArray construction (and the sparse BCOO paths)
+# re-validates `check_invariants()` — the CI debug lane runs the full
+# tier-1 suite this way, and failures name the offending block coordinates.
+# ---------------------------------------------------------------------------
+
+import pytest  # noqa: E402
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--repro-debug", action="store_true", default=False,
+        help="run with REPRO_DEBUG=1: validate DsArray.check_invariants() "
+             "at every construction")
+
+
+def pytest_configure(config):
+    if config.getoption("--repro-debug"):
+        os.environ["REPRO_DEBUG"] = "1"
+
+
+@pytest.fixture(autouse=True)
+def _repro_debug_invariants(request):
+    """Keep REPRO_DEBUG visible per-test when the lane is armed (tests that
+    themselves mutate the env restore it afterwards)."""
+    if request.config.getoption("--repro-debug"):
+        prev = os.environ.get("REPRO_DEBUG")
+        os.environ["REPRO_DEBUG"] = "1"
+        yield
+        if prev is None:
+            os.environ["REPRO_DEBUG"] = "1"
+        else:
+            os.environ["REPRO_DEBUG"] = prev
+    else:
+        yield

@@ -299,7 +299,8 @@ def test_linreg_tsqr_fallback_on_ill_conditioned():
 # ---------------------------------------------------------------------------
 
 
-from conftest import dense_operand_intermediates, walk_eqns  # noqa: E402
+from repro.analysis import (  # noqa: E402
+    assert_no_densify, walk_eqns)
 
 
 def test_csvm_sparse_fit_never_densifies_and_caches_plan(monkeypatch):
@@ -344,7 +345,7 @@ def test_csvm_sparse_fit_never_densifies_and_caches_plan(monkeypatch):
     kb = xs.lazy() @ sv_ds
     jx = plan.plan_for(kb).jaxpr()
     dense_shape = xs.blocks.shape
-    assert dense_operand_intermediates(jx, dense_shape) == []
+    assert_no_densify(jx, dense_shape)
     prims = {e.primitive.name for e in walk_eqns(jx)}
     assert "bcoo_dot_general" in prims, prims
 

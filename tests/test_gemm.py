@@ -110,23 +110,10 @@ def test_gemm_backend_policy(monkeypatch):
 
 # ---------------------------------------------------------------------------
 # Lowering assertions: walk the jaxpr for the pallas_call primitive
+# (canonical traversal lives in repro.analysis)
 # ---------------------------------------------------------------------------
 
-
-def _primitives(jaxpr) -> set:
-    names = set()
-
-    def visit(jx):
-        for eqn in jx.eqns:
-            names.add(eqn.primitive.name)
-            for v in eqn.params.values():
-                for c in (v if isinstance(v, (list, tuple)) else [v]):
-                    sub = getattr(c, "jaxpr", None)
-                    if sub is not None:
-                        visit(sub)
-
-    visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
-    return names
+from repro.analysis import jaxpr_primitives as _primitives  # noqa: E402
 
 
 def test_dsarray_matmul_lowers_through_pallas(monkeypatch):

@@ -59,38 +59,14 @@ def assert_claim_holds(a: DsArray, label=""):
 # ---------------------------------------------------------------------------
 
 
-from conftest import walk_eqns as _walk_eqns  # canonical traversal
-
-
-def _primitives(jaxpr) -> set:
-    return {e.primitive.name for e in _walk_eqns(jaxpr)}
-
-
-def _count_selects(jaxpr) -> int:
-    return sum(1 for e in _walk_eqns(jaxpr)
-               if e.primitive.name in ("select_n", "select"))
-
-
-def _entry_full_grid_defs(compiled_text: str, shape4) -> list:
-    """Non-parameter, non-root ENTRY instructions defining a full-grid value.
-
-    The eager chain wrote every intermediate to HBM; the fused plan's ENTRY
-    must contain the full-grid shape only as the parameter and the ROOT
-    fusion — anything else is an intermediate full-grid HBM write.
-    """
-    marker = "[" + ",".join(str(d) for d in shape4) + "]"
-    entry = compiled_text[compiled_text.index("ENTRY"):]
-    # ENTRY body ends at the first closing brace at column 0
-    body = entry.split("\n}")[0]
-    bad = []
-    for line in body.splitlines():
-        line = line.strip()
-        if "=" not in line or marker not in line.split("=", 1)[1].split("(")[0]:
-            continue
-        if "parameter(" in line or line.startswith("ROOT"):
-            continue
-        bad.append(line)
-    return bad
+# canonical versions live in repro.analysis (the analyzer's jaxpr plane):
+# the tests and the lint rules share one traversal by construction
+from repro.analysis import (  # noqa: E402
+    count_selects as _count_selects,
+    entry_full_grid_defs as _entry_full_grid_defs,
+    jaxpr_primitives as _primitives,
+    walk_eqns as _walk_eqns,
+)
 
 
 # ---------------------------------------------------------------------------

@@ -132,22 +132,7 @@ def test_max_of_negative_data_refills():
 # ---------------------------------------------------------------------------
 
 
-def _count_selects(jaxpr) -> int:
-    cnt = 0
-
-    def visit(jx):
-        nonlocal cnt
-        for eqn in jx.eqns:
-            if eqn.primitive.name in ("select_n", "select"):
-                cnt += 1
-            for v in eqn.params.values():
-                for c in (v if isinstance(v, (list, tuple)) else [v]):
-                    sub = getattr(c, "jaxpr", None)
-                    if sub is not None:
-                        visit(sub)
-
-    visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
-    return cnt
+from repro.analysis import count_selects as _count_selects  # noqa: E402
 
 
 def test_four_op_chain_has_at_most_one_mask_pass():

@@ -77,22 +77,7 @@ def test_exact_shuffle_traces_through_jit():
 # ---------------------------------------------------------------------------
 
 
-def rank2_global_intermediates(jaxpr, n, m, pn, pm):
-    bad = []
-
-    def visit(jx):
-        for eqn in jx.eqns:
-            for v in eqn.outvars:
-                shape = tuple(getattr(v.aval, "shape", ()))
-                if len(shape) == 2 and shape[0] >= min(n, pn) and \
-                        shape[1] >= min(m, pm):
-                    bad.append((eqn.primitive.name, shape))
-            for sub in eqn.params.values():
-                if hasattr(sub, "jaxpr"):
-                    visit(sub.jaxpr)
-        return bad
-
-    return visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+from repro.analysis import rank2_global_intermediates  # noqa: E402
 
 
 def test_exact_shuffle_no_global_intermediate():

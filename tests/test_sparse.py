@@ -45,7 +45,8 @@ def mk_sparse(n=13, m=9, bn=4, bm=3, dtype=np.float32, density=0.3):
 # ---------------------------------------------------------------------------
 
 
-from conftest import dense_operand_intermediates, walk_eqns
+from repro.analysis import (
+    assert_no_densify, walk_eqns)
 
 _walk_eqns = walk_eqns          # canonical traversal lives in conftest
 
@@ -273,8 +274,7 @@ def test_spmm_matches_and_never_densifies():
     # stacked form (gn, gk, bn, bk) must never appear as an intermediate
     jx = jax.make_jaxpr(lambda sb, wb: local_matmul(sb, wb))(
         s.blocks, wd.ensure_zero_pad().blocks)
-    bad = dense_operand_intermediates(jx, s.blocks.shape)
-    assert not bad, bad
+    assert_no_densify(jx, s.blocks.shape)
 
 
 def test_spmm_transpose_a_never_densifies():
@@ -288,8 +288,7 @@ def test_spmm_transpose_a_never_densifies():
     jx = jax.make_jaxpr(
         lambda sb, wb: local_matmul(sb, wb, transpose_a=True))(
         s.blocks, wd.ensure_zero_pad().blocks)
-    bad = dense_operand_intermediates(jx, s.blocks.shape)
-    assert not bad, bad
+    assert_no_densify(jx, s.blocks.shape)
 
 
 def test_sparse_matvec():
@@ -306,8 +305,7 @@ def test_sparse_reductions_never_densify():
                lambda sb: DsArray(sb, s.grid).sum(axis=0).blocks,
                lambda sb: DsArray(sb, s.grid).sum(axis=1).blocks):
         jx = jax.make_jaxpr(fn)(s.blocks)
-        bad = dense_operand_intermediates(jx, s.blocks.shape)
-        assert not bad, bad
+        assert_no_densify(jx, s.blocks.shape)
 
 
 def test_sparse_elementwise_never_densifies():
@@ -318,12 +316,11 @@ def test_sparse_elementwise_never_densifies():
     jx = jax.make_jaxpr(
         lambda sb, db: sparse_mod.gather_fn(jnp.multiply, True)(sb, db).data)(
         s.blocks, b.blocks)
-    bad = dense_operand_intermediates(jx, s.blocks.shape)
-    assert not bad, bad
+    assert_no_densify(jx, s.blocks.shape)
     jx2 = jax.make_jaxpr(
         lambda sb: sparse_mod.data_map_fn(jnp.multiply, 2.0, False)(sb).data)(
         s.blocks)
-    assert not dense_operand_intermediates(jx2, s.blocks.shape)
+    assert_no_densify(jx2, s.blocks.shape)
 
 
 # ---------------------------------------------------------------------------
@@ -436,8 +433,7 @@ def test_kmeans_sparse_assignment_never_densifies():
     jx = jax.make_jaxpr(lambda sb: _center_stats(
         sb, jnp.asarray(row_valid), jnp.asarray(centers),
         jnp.asarray(x_sq), 12))(s.blocks)
-    bad = dense_operand_intermediates(jx, s.blocks.shape)
-    assert not bad, bad
+    assert_no_densify(jx, s.blocks.shape)
 
 
 def test_pca_gram_als_sparse():
@@ -509,7 +505,7 @@ def test_sparse_aligned_slice_no_todense_in_jaxpr():
     jx = plan.plan_for(lz).jaxpr()
     prims = {e.primitive.name for e in _walk_eqns(jx)}
     assert "scatter" not in prims and "scatter-add" not in prims, prims
-    assert not dense_operand_intermediates(jx, s.blocks.shape)
+    assert_no_densify(jx, s.blocks.shape)
     out = lz.compute()
     out.check_invariants()
     np.testing.assert_allclose(np.asarray(out.collect()), x[:8, :6])

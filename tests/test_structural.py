@@ -145,36 +145,15 @@ def test_gram_matches_dense():
 # ---------------------------------------------------------------------------
 
 
-def rank2_global_intermediates(jaxpr, n, m, pn, pm):
-    """All rank-2 eqn outputs whose extent reaches the global array size.
-
-    The seed path materialized ``(pn, pm)``/``(n, m)`` tensors; block-native
-    ops may only produce tensors that keep grid dims (rank 3/4) or small
-    per-axis masks.
-    """
-    bad = []
-
-    def visit(jx):
-        for eqn in jx.eqns:
-            for v in eqn.outvars:
-                shape = tuple(getattr(v.aval, "shape", ()))
-                if len(shape) == 2 and shape[0] >= min(n, pn) and \
-                        shape[1] >= min(m, pm):
-                    bad.append((eqn.primitive.name, shape))
-            for sub in eqn.params.values():
-                if hasattr(sub, "jaxpr"):
-                    visit(sub.jaxpr)
-        return bad
-
-    return visit(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+from repro.analysis import (  # noqa: E402
+    assert_no_global_intermediate, rank2_global_intermediates)
 
 
 def _check_no_global(fn, a: DsArray):
     jaxpr = jax.make_jaxpr(fn)(a.blocks)
     n, m = a.shape
     gn, gm, bn, bm = a.blocks.shape
-    bad = rank2_global_intermediates(jaxpr, n, m, gn * bn, gm * bm)
-    assert not bad, f"global-shape intermediates produced: {bad}"
+    assert_no_global_intermediate(jaxpr, n, m, gn * bn, gm * bm)
 
 
 def test_aligned_slice_no_global_intermediate():
