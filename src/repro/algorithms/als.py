@@ -29,7 +29,7 @@ import numpy as np
 from repro.core.dsarray import DsArray, from_array, random_array
 from repro.core.dataset_baseline import Dataset
 from repro.core.structural import gram
-from repro.estimators.base import BaseEstimator
+from repro.estimators.base import BaseEstimator, _FitCheckpoint, _fire
 
 
 def _solve_gram_ds(y: DsArray, reg: float) -> jnp.ndarray:
@@ -64,12 +64,14 @@ class ALS(BaseEstimator):
     v_: Optional[DsArray] = None
     n_iter_: int = 0
 
-    def fit(self, r: DsArray, y=None) -> "ALS":
+    def fit(self, r: DsArray, y=None, checkpoint_dir: Optional[str] = None,
+            resume: Optional[str] = None) -> "ALS":
         del y                     # the ratings matrix IS the target
         with self._driver_scope():
-            return self._fit(r)
+            return self._fit(r, checkpoint_dir=checkpoint_dir, resume=resume)
 
-    def _fit(self, r: DsArray) -> "ALS":
+    def _fit(self, r: DsArray, checkpoint_dir: Optional[str] = None,
+             resume: Optional[str] = None) -> "ALS":
         r = self._validate_x(r)
         n, m = r.shape
         f = self.n_factors
@@ -84,14 +86,34 @@ class ALS(BaseEstimator):
 
         prev = jnp.float32(jnp.inf)
         it = 0
-        for it in range(1, self.max_iter + 1):
+        start_it = 1
+        if resume is not None:
+            got = _FitCheckpoint(resume, type(self).__name__).load()
+            if got is not None:
+                it0, st = got
+                u, v = st["u"], st["v"]
+                prev = jnp.float32(st["prev"])
+                if bool(st["done"]):
+                    self.u_, self.v_, self.n_iter_ = u, v, it0
+                    return self
+                start_it = it0 + 1
+                it = it0
+        ckpt = _FitCheckpoint(checkpoint_dir, type(self).__name__) \
+            if checkpoint_dir is not None else None
+        for it in range(start_it, self.max_iter + 1):
+            _fire("fit_iteration", estimator=type(self).__name__,
+                  iteration=it)
             u, v = self._step(r, rt, u, v)
+            done = False
             if self.check_convergence:
                 err = self._rmse(r, u, v)
-                if abs(prev - err) < self.tol:
-                    prev = err
-                    break
+                done = abs(prev - err) < self.tol
                 prev = err
+            if ckpt is not None:
+                ckpt.save(it, {"u": u, "v": v, "prev": float(prev),
+                               "done": bool(done)})
+            if done:
+                break
         self.u_, self.v_, self.n_iter_ = u, v, it
         return self
 

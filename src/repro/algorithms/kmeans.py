@@ -25,7 +25,7 @@ from jax.experimental.sparse import BCOO
 
 from repro.core.dsarray import DsArray, from_array
 from repro.core.dataset_baseline import Dataset
-from repro.estimators.base import BaseEstimator
+from repro.estimators.base import BaseEstimator, _FitCheckpoint, _fire
 
 
 def _row_sq_norms(x: DsArray) -> jnp.ndarray:
@@ -115,6 +115,18 @@ def _kmeans_run(blocks, centers0, row_valid, x_sq, n_cols, tol, max_iter):
         return new, shift, it + 1
 
     return jax.lax.while_loop(cond, body, (centers0, jnp.float32(jnp.inf), 0))
+
+
+@functools.partial(jax.jit, static_argnames=("n_cols",))
+def _kmeans_step(blocks, centers, row_valid, x_sq, n_cols):
+    """ONE Lloyd iteration (same math as ``_kmeans_run``'s body) — the
+    host-driven loop used when per-iteration checkpointing is requested,
+    where the device-resident while_loop cannot yield control."""
+    _, sums, counts = _center_stats(blocks, row_valid, centers, x_sq, n_cols)
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    new = jnp.where(counts[:, None] > 0, sums / safe, centers)
+    shift = jnp.sqrt(((new - centers) ** 2).sum())
+    return new, shift
 
 
 def _kmeanspp_init(x: np.ndarray, k: int, rng: np.random.Generator) -> np.ndarray:
@@ -215,12 +227,14 @@ class KMeans(BaseEstimator):
         bi = jax.lax.broadcasted_iota(jnp.int32, (gn, bn), 1)
         return (gi * bn + bi) < x.shape[0]
 
-    def fit(self, x: DsArray, y=None) -> "KMeans":
+    def fit(self, x: DsArray, y=None, checkpoint_dir: Optional[str] = None,
+            resume: Optional[str] = None) -> "KMeans":
         del y                     # unsupervised; kept for the fit(x, y) shape
         with self._driver_scope():
-            return self._fit(x)
+            return self._fit(x, checkpoint_dir=checkpoint_dir, resume=resume)
 
-    def _fit(self, x: DsArray) -> "KMeans":
+    def _fit(self, x: DsArray, checkpoint_dir: Optional[str] = None,
+             resume: Optional[str] = None) -> "KMeans":
         x = self._validate_x(x).ensure_zero_pad()  # contractions read raw blocks
         n, m = x.shape
         row_valid = self._row_valid(x)
@@ -234,10 +248,42 @@ class KMeans(BaseEstimator):
         init = _kmeanspp_init_ds(x, self.n_clusters,
                                  np.random.default_rng(self.seed), row_valid,
                                  x_sq)
-        centers, _, iters = _kmeans_run(x.blocks, init, row_valid, x_sq, m,
-                                        self.tol, self.max_iter)
+        if checkpoint_dir is None and resume is None:
+            # clean path: the device-resident jitted while_loop, untouched
+            centers, _, iters = _kmeans_run(x.blocks, init, row_valid, x_sq,
+                                            m, self.tol, self.max_iter)
+            self.centers_ = centers[:, :m]
+            self.n_iter_ = int(iters)
+            return self
+        # checkpointing path: Lloyd driven from the host (one jitted step
+        # per iteration, same math) so every iteration can commit
+        centers = init
+        it = 0
+        start_it = 1
+        done = False
+        if resume is not None:
+            got = _FitCheckpoint(resume, type(self).__name__).load()
+            if got is not None:
+                it0, st = got
+                centers = jnp.asarray(st["centers"])
+                it = it0
+                done = bool(st["done"])
+                start_it = it0 + 1
+        ckpt = _FitCheckpoint(checkpoint_dir, type(self).__name__) \
+            if checkpoint_dir is not None else None
+        if not done:
+            for it in range(start_it, self.max_iter + 1):
+                _fire("fit_iteration", estimator=type(self).__name__,
+                      iteration=it)
+                centers, shift = _kmeans_step(x.blocks, centers, row_valid,
+                                              x_sq, m)
+                done = bool(shift <= self.tol)
+                if ckpt is not None:
+                    ckpt.save(it, {"centers": centers, "done": done})
+                if done:
+                    break
         self.centers_ = centers[:, :m]
-        self.n_iter_ = int(iters)
+        self.n_iter_ = it
         return self
 
     def predict(self, x: DsArray) -> DsArray:

@@ -1,2 +1,3 @@
-from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_step,
+from repro.checkpoint.checkpoint import (AsyncCheckpointer,
+                                         CheckpointWriteError, latest_step,
                                          manifest_extra, restore, save)

@@ -23,6 +23,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import sys
 import threading
 from typing import Any, Callable, Dict, List, Optional
 
@@ -31,6 +32,19 @@ import jax.numpy as jnp
 import numpy as np
 
 Params = Any
+
+
+class CheckpointWriteError(RuntimeError):
+    """A background checkpoint write failed; raised from ``wait()`` / the
+    next ``save()`` on the driver thread (``__cause__`` is the original)."""
+
+
+def _fire(site: str, **info) -> None:
+    """Fault-injection hook: consult ``repro.resilience.inject`` only when a
+    chaos test already imported it (one sys.modules lookup otherwise)."""
+    ri = sys.modules.get("repro.resilience.inject")
+    if ri is not None:
+        ri.maybe_fire(site, **info)
 
 
 def _flatten_with_paths(tree):
@@ -77,10 +91,20 @@ def latest_step(root: str) -> Optional[int]:
 
 
 def restore(root: str, step: int, like: Params,
-            shardings: Optional[Params] = None) -> Params:
+            shardings: Optional[Params] = None,
+            allow_cast: bool = False) -> Params:
     """Restore into the structure of ``like``; if ``shardings`` (a pytree of
     NamedSharding / None) is given, leaves are placed accordingly — this is
-    the elastic-resharding path (the saved mesh is irrelevant)."""
+    the elastic-resharding path (the saved mesh is irrelevant).
+
+    A dtype mismatch between a saved leaf and its ``like`` proto raises
+    (like shape mismatches always have) — a silent ``astype`` turns a
+    float64-trained model restored into a float32 program into a precision
+    loss nobody asked for.  ``allow_cast=True`` is the explicit escape
+    hatch for elastic restores that intentionally re-precision (e.g. a
+    mixed-precision downscale).
+    """
+    _fire("io_load", source="checkpoint", step=step)
     d = os.path.join(root, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
@@ -98,7 +122,14 @@ def restore(root: str, step: int, like: Params,
         if list(arr.shape) != list(proto.shape):
             raise ValueError(f"shape mismatch for {p}: {arr.shape} vs "
                              f"{proto.shape}")
-        arr = arr.astype(proto.dtype)
+        proto_dtype = np.dtype(proto.dtype)
+        if arr.dtype != proto_dtype:
+            if not allow_cast:
+                raise ValueError(
+                    f"dtype mismatch for {p}: checkpoint has {arr.dtype}, "
+                    f"restore target wants {proto_dtype} (pass "
+                    f"allow_cast=True to cast explicitly)")
+            arr = arr.astype(proto_dtype)
         out.append(jax.device_put(arr, sh) if sh is not None
                    else jnp.asarray(arr))
     return treedef.unflatten(out)
@@ -112,24 +143,46 @@ def manifest_extra(root: str, step: int) -> Dict[str, Any]:
 
 class AsyncCheckpointer:
     """Snapshot-on-call, write-in-background.  ``wait()`` joins the writer
-    (call before process exit and before reading the checkpoint back)."""
+    (call before process exit and before reading the checkpoint back).
+
+    A writer-thread failure (disk full, unwritable root) is captured and
+    re-raised — wrapped in :class:`CheckpointWriteError` — from ``wait()``
+    or the next ``save()``, whichever comes first; silently swallowing it
+    would let training run on believing in checkpoints that do not exist.
+    ``last_committed`` only ever advances past a completed atomic commit
+    and is read/written under a lock (the writer thread publishes it, the
+    train loop polls it).
+    """
 
     def __init__(self, root: str, keep: int = 3):
         self.root = root
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
-        self.last_committed: Optional[int] = None
+        self._lock = threading.Lock()
+        self._error: Optional[BaseException] = None
+        self._last_committed: Optional[int] = None
+
+    @property
+    def last_committed(self) -> Optional[int]:
+        with self._lock:
+            return self._last_committed
 
     def save(self, step: int, tree: Params,
              extra: Optional[Dict[str, Any]] = None) -> None:
-        self.wait()
+        self.wait()                 # also re-raises a prior writer failure
         host_tree = jax.tree_util.tree_map(
             lambda x: np.asarray(jax.device_get(x)), tree)
 
         def work():
-            save(self.root, step, host_tree, extra)
-            self.last_committed = step
-            self._gc()
+            try:
+                save(self.root, step, host_tree, extra)
+                with self._lock:
+                    self._last_committed = step
+                self._gc()
+            except BaseException as exc:    # noqa: BLE001 — published, not
+                with self._lock:            # swallowed: re-raised from the
+                    self._error = exc       # driver thread in wait()
+                return
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -138,6 +191,11 @@ class AsyncCheckpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        with self._lock:
+            err, self._error = self._error, None
+        if err is not None:
+            raise CheckpointWriteError(
+                f"background checkpoint write failed: {err}") from err
 
     def _gc(self) -> None:
         if not os.path.isdir(self.root):

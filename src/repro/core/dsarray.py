@@ -123,6 +123,28 @@ in-bounds-or-zero); exported for tests and run at every construction under
 Violations name the offending block: ``block (gi, gj) at offset (bi, bj)``
 for dense pads, ``block (gi, gj) slot k`` for BCOO entries.
 
+Numerical guards and resilience (``repro.resilience``) ride the same
+block-granular conventions:
+
+======================  ======================================================
+entry point             what it does
+======================  ======================================================
+``finite_report()``     per-block NaN/Inf diagnosis (pad-state aware: FILL/
+                          DIRTY pads never false-positive); offending blocks
+                          named ``block (gi, gj)`` in ``check_invariants``
+                          style — also ``resilience.guards.finite_report``
+``guard_finite(...)``   cheap whole-value post-condition: ONE fused
+                          reduction per value, raising
+                          ``NumericalDivergence`` with the block report
+``run_resilient(...)``  guarded plan execution: transient errors retry with
+                          backoff, OOM degrades fused → per-node eager →
+                          einsum GEMM backend, deterministic errors raise;
+                          ``resilience.stats()`` counts recoveries
+``inject(FaultSpec)``   deterministic fault injection (chaos harness) at
+                          ``plan_execute`` / ``gemm_dispatch`` /
+                          ``fit_iteration`` / ``io_load`` sites
+======================  ======================================================
+
 Each claim in the tables above is machine-checked by ``repro.analysis``
 (``analysis.check(plan_or_dsarray)``, CLI ``python -m repro.analysis``).
 Rule ids per op row:
@@ -527,6 +549,16 @@ class DsArray:
                 f"({gi}, {gj}) at offset ({bi}, {bj}) "
                 f"(global ({r}, {c}), value {g[r, c]!r})")
         return self
+
+    def finite_report(self):
+        """Block-granular NaN/Inf diagnosis (``resilience.guards``): which
+        blocks hold non-finite values, with counts and the first offending
+        in-block offset (dense) or entry slot (bcoo).  Pad-state aware — a
+        DIRTY or FILL pad region never false-positives.  Returns a
+        ``FiniteReport`` (``.ok`` / ``.describe()``); blocks are named
+        ``block (gi, gj)`` in the ``check_invariants`` style."""
+        from repro.resilience import guards
+        return guards.finite_report(self)
 
     # -- laziness -------------------------------------------------------------
     def lazy(self) -> "LazyDsArray":

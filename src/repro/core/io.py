@@ -10,12 +10,22 @@ from __future__ import annotations
 
 import json
 import os
+import sys
 from typing import Optional, Tuple
 
 import numpy as np
 
 from repro.core import costmodel
 from repro.core.dsarray import DsArray, from_array
+
+
+def _fire(site: str, **info) -> None:
+    """Fault-injection hook (``repro.resilience.inject``): loaders raise an
+    injected ``IOLoadError`` before touching the file, so I/O-failure
+    handling is provable without unreadable fixtures on disk."""
+    ri = sys.modules.get("repro.resilience.inject")
+    if ri is not None:
+        ri.maybe_fire(site, **info)
 
 
 def from_array_auto(arr, block_shape: Tuple[int, int],
@@ -48,6 +58,7 @@ def from_array_auto(arr, block_shape: Tuple[int, int],
 def load_txt(path: str, block_shape: Tuple[int, int], delimiter: str = ",",
              dtype=np.float32, block_format: str = "dense") -> DsArray:
     """Load a delimited text file into a ds-array (one parse per block-row)."""
+    _fire("io_load", source="load_txt", path=path)
     data = np.loadtxt(path, delimiter=delimiter, dtype=dtype, ndmin=2)
     return from_array_auto(data, block_shape, block_format)
 
@@ -56,6 +67,7 @@ def load_npy_rows(path: str, block_shape: Tuple[int, int],
                   row_range: Optional[Tuple[int, int]] = None,
                   block_format: str = "dense") -> DsArray:
     """Memory-mapped .npy load; reads only the requested row range."""
+    _fire("io_load", source="load_npy_rows", path=path)
     mm = np.load(path, mmap_mode="r")
     if row_range is not None:
         mm = mm[row_range[0]: row_range[1]]
@@ -65,6 +77,7 @@ def load_npy_rows(path: str, block_shape: Tuple[int, int],
 def load_npz_sparse(path: str, block_shape: Tuple[int, int]) -> DsArray:
     """scipy.sparse ``.npz`` file -> BCOO-blocked ds-array, never densifying
     (the paper's CSVM datasets ship in exactly this form)."""
+    _fire("io_load", source="load_npz_sparse", path=path)
     import scipy.sparse as ssp
     from repro.core import sparse as sparse_mod
     return sparse_mod.from_scipy(ssp.load_npz(path), block_shape)
@@ -87,6 +100,7 @@ def save_blocks(dirpath: str, a: DsArray) -> None:
 
 
 def load_blocks(dirpath: str) -> DsArray:
+    _fire("io_load", source="load_blocks", path=dirpath)
     from repro.core.blocking import BlockGrid
     import jax.numpy as jnp
 

@@ -44,6 +44,8 @@ structure + nse like any other.
 from __future__ import annotations
 
 import contextlib
+import os
+import sys
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -377,7 +379,7 @@ _CACHE: "OrderedDict[tuple, callable]" = OrderedDict()
 _OPT_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
 _CACHE_MAX = 256
 _STATS = {"hits": 0, "misses": 0, "launches": 0,
-          "opt_runs": 0, "opt_skips": 0}
+          "opt_runs": 0, "opt_skips": 0, "eager_launches": 0}
 
 
 def cache_stats() -> Dict[str, int]:
@@ -387,7 +389,20 @@ def cache_stats() -> Dict[str, int]:
 def clear_cache() -> None:
     _CACHE.clear()
     _OPT_CACHE.clear()
-    _STATS.update(hits=0, misses=0, launches=0, opt_runs=0, opt_skips=0)
+    _STATS.update(hits=0, misses=0, launches=0, opt_runs=0, opt_skips=0,
+                  eager_launches=0)
+
+
+def _fire(site: str, **info) -> None:
+    """Fault-injection hook (see ``repro.resilience.inject``).
+
+    Same zero-overhead idiom as ``DsArray._lazy_mode``: only consult the
+    injector when its module is already imported (a chaos test armed it);
+    clean runs pay one sys.modules lookup, never an import.
+    """
+    ri = sys.modules.get("repro.resilience.inject")
+    if ri is not None:
+        ri.maybe_fire(site, **info)
 
 
 # Plan observers: the analysis CLI records the plans real workloads build
@@ -512,6 +527,7 @@ class Plan:
             return jax.jit(self._make_run()).lower(*self.leaf_values())
 
     def execute(self) -> tuple:
+        _fire("plan_execute", mode="fused")
         compiled = _CACHE.get(self.key)
         if compiled is None:
             _STATS["misses"] += 1
@@ -525,6 +541,35 @@ class Plan:
         _STATS["launches"] += 1
         with _expr.suspend_lazy():
             return compiled(*self.leaf_values())
+
+    def execute_eager(self, backend: Optional[str] = None) -> tuple:
+        """Per-node un-jitted execution — the degradation rungs.
+
+        The fused jitted plan holds every intermediate of its body live
+        inside one XLA launch; when that launch RESOURCE_EXHAUSTs, running
+        the same DAG node-by-node (each ``lower`` its own dispatch, memo
+        freed per plan) trades launch count for peak footprint.  With
+        ``backend`` set (``"einsum"``), local GEMMs additionally bypass the
+        Pallas kernel via the ``REPRO_GEMM`` dispatch for the duration of
+        this execution.  Results match ``execute()`` modulo float
+        reassociation.  Never cached — this is the emergency path.
+        """
+        _fire("plan_execute", mode=backend or "eager")
+        _STATS["eager_launches"] += 1
+        run = self._make_run()
+        if backend is None:
+            with _expr.suspend_lazy():
+                return run(*self.leaf_values())
+        prev = os.environ.get("REPRO_GEMM")
+        os.environ["REPRO_GEMM"] = backend
+        try:
+            with _expr.suspend_lazy():
+                return run(*self.leaf_values())
+        finally:
+            if prev is None:
+                os.environ.pop("REPRO_GEMM", None)
+            else:
+                os.environ["REPRO_GEMM"] = prev
 
 
 def compute_multi(*exprs: Expr) -> tuple:

@@ -10,9 +10,15 @@ This module provides the host-side machinery:
   stragglers is architectural: the only cross-pod collective is one gradient
   reduce per step, so a slow pod delays one psum, not every layer).
 * ``run_with_restarts`` — drives a step function, checkpoints every
-  ``ckpt_every`` steps (async), and on ANY exception restores the newest
-  committed checkpoint and continues, up to ``max_failures``.  The data
-  pipeline needs no replay: batch(i) is a pure function of i.
+  ``ckpt_every`` steps (async), and on failure restores the newest
+  committed checkpoint and continues, up to ``max_failures``, with
+  exponential backoff between restarts.  Errors are classified first
+  (``repro.resilience.classify_error``): a *deterministic* failure — NaN
+  loss, shape bug, assertion — raises immediately instead of burning every
+  restart recomputing the same crash; unknown exceptions default to
+  *transient* (a training step touches hosts, disks and interconnects, so
+  retry-everything stays the backstop).  The data pipeline needs no
+  replay: batch(i) is a pure function of i.
 * Elastic restore: the restore path takes a shardings pytree for the CURRENT
   mesh, so a job checkpointed on 2 pods restarts cleanly on 1 (or 4).
 """
@@ -66,12 +72,21 @@ def run_with_restarts(
     heartbeat: Optional[Heartbeat] = None,
     state_shardings: Optional[Any] = None,
     on_metrics: Optional[Callable[[int, Dict[str, float]], None]] = None,
+    backoff: float = 0.0,
+    backoff_factor: float = 2.0,
+    max_backoff: float = 30.0,
 ) -> Tuple[Any, RestartStats]:
     """Generic supervised train loop (see launch/train.py for the LM driver).
 
     ``step_fn(state, step)`` must be deterministic given (state, step) — the
     synthetic pipeline guarantees the data side of that contract.
+
+    ``backoff`` > 0 sleeps before each restart, doubling (``backoff_factor``)
+    per consecutive failure up to ``max_backoff`` — restarting full-tilt
+    into a still-recovering slice just re-fails faster.
     """
+    from repro.resilience import execute as _resil
+
     saver = ckpt.AsyncCheckpointer(ckpt_root)
     stats = RestartStats()
 
@@ -80,7 +95,8 @@ def run_with_restarts(
         if last is None:
             return init_state(), 0
         state = init_state()
-        state = ckpt.restore(ckpt_root, last, state, state_shardings)
+        state = ckpt.restore(ckpt_root, last, state, state_shardings,
+                             allow_cast=True)
         return state, last + 1
 
     state, step = restore_or_init()
@@ -95,12 +111,23 @@ def run_with_restarts(
                 saver.save(step, state, extra={"metrics": {
                     k: float(v) for k, v in metrics.items()}})
             step += 1
-        except Exception:                                    # noqa: BLE001
+        except Exception as exc:                             # noqa: BLE001
+            # unknowns default to transient here: a real step touches
+            # devices/disk/network, so only provably-deterministic failures
+            # (NaN loss, shape bugs) skip the restart machinery
+            kind = _resil.classify_error(exc, default=_resil.TRANSIENT)
+            if kind == _resil.DETERMINISTIC:
+                saver.wait()
+                raise
             stats.failures += 1
             stats.restarts_at = stats.restarts_at + (step,)
             if stats.failures > max_failures:
                 saver.wait()
                 raise
+            if backoff > 0.0:
+                time.sleep(min(
+                    backoff * backoff_factor ** (stats.failures - 1),
+                    max_backoff))
             saver.wait()
             state, step = restore_or_init()
     saver.wait()

@@ -8,15 +8,29 @@ CascadeSVM (§6, the sparse backend's target workload), linear models
 the stacked tensor).  ``repro.algorithms``'s KMeans / ALS / PCA implement
 the same :class:`BaseEstimator` contract (import them from there — this
 package does not re-export them, to keep the import graph acyclic).
+
+Model registry: ``save_model``/``load_model`` persist fitted estimators
+through ``repro.checkpoint``; :func:`load_model` here dispatches on the
+class name recorded in the manifest — ``repro.algorithms`` names resolve
+lazily at call time, so the import graph stays acyclic.
 """
 
 from repro.estimators.base import (BaseClassifier, BaseEstimator,
-                                   BaseRegressor, NotFittedError)
+                                   BaseRegressor, NotFittedError,
+                                   resolve_estimator)
 from repro.estimators.csvm import CascadeSVM
 from repro.estimators.forest import RandomForestClassifier
 from repro.estimators.linear import LinearRegression, Ridge
 
+
+def load_model(directory: str) -> BaseEstimator:
+    """Reconstruct any saved model: the manifest names the class, the
+    registry (estimators exports, then ``repro.algorithms``) resolves it."""
+    return BaseEstimator.load_model(directory)
+
+
 __all__ = [
     "BaseEstimator", "BaseClassifier", "BaseRegressor", "NotFittedError",
     "CascadeSVM", "LinearRegression", "Ridge", "RandomForestClassifier",
+    "load_model", "resolve_estimator",
 ]

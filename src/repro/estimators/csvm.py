@@ -47,7 +47,7 @@ import numpy as np
 from repro.core.blocking import ceil_div
 from repro.core.dsarray import DsArray, from_array
 from repro.core import sparse as sparse_mod
-from repro.estimators.base import BaseClassifier
+from repro.estimators.base import BaseClassifier, _FitCheckpoint, _fire
 
 _SV_EPS = 1e-6           # dual weight below which a vector is not an SV
 
@@ -244,11 +244,21 @@ class CascadeSVM(BaseClassifier):
         return np.asarray(sq.collect(), np.float32).ravel()
 
     # -- fit -----------------------------------------------------------------
-    def fit(self, x, y) -> "CascadeSVM":
+    def fit(self, x, y, checkpoint_dir: Optional[str] = None,
+            resume: Optional[str] = None) -> "CascadeSVM":
+        """Fit the cascade.  ``checkpoint_dir`` commits the full
+        cross-iteration state (feedback SVs + convergence trackers + fitted
+        snapshot) after every outer iteration; ``resume`` restarts from the
+        newest committed iteration in that directory — a fit killed at
+        cascade iteration k resumed this way is equivalent to the
+        uninterrupted fit (the per-chunk solves are deterministic functions
+        of (x, y, feedback state))."""
         with self._driver_scope():
-            return self._fit(x, y)
+            return self._fit(x, y, checkpoint_dir=checkpoint_dir,
+                             resume=resume)
 
-    def _fit(self, x, y) -> "CascadeSVM":
+    def _fit(self, x, y, checkpoint_dir: Optional[str] = None,
+             resume: Optional[str] = None) -> "CascadeSVM":
         if self.kernel not in ("rbf", "linear"):
             raise ValueError(f"unknown kernel {self.kernel!r}")
         x, y_raw = self._validate_fit(x, y)
@@ -267,7 +277,30 @@ class CascadeSVM(BaseClassifier):
         fb_mult = np.zeros((self.sv_cap,), np.float32)
         prev_obj = np.inf
         self.converged_ = False
-        for it in range(1, self.max_iter + 1):
+        start_it = 1
+        if resume is not None:
+            got = _FitCheckpoint(resume, type(self).__name__).load()
+            if got is not None:
+                it0, st = got
+                fb_rows = np.asarray(st["fb_rows"])
+                fb_y = np.asarray(st["fb_y"])
+                fb_mult = np.asarray(st["fb_mult"])
+                prev_obj = float(st["prev_obj"])
+                self.sv_ = np.asarray(st["sv"])
+                self.sv_y_ = np.asarray(st["sv_y"])
+                self.dual_coef_ = np.asarray(st["dual_coef"])
+                self.intercept_ = float(st["intercept"])
+                self.n_sv_ = int(st["n_sv"])
+                self.n_iter_ = int(st["n_iter"])
+                self.converged_ = bool(st["converged"])
+                if self.converged_:
+                    return self
+                start_it = it0 + 1
+        ckpt = _FitCheckpoint(checkpoint_dir, type(self).__name__) \
+            if checkpoint_dir is not None else None
+        for it in range(start_it, self.max_iter + 1):
+            _fire("fit_iteration", estimator=type(self).__name__,
+                  iteration=it)
             # level 0: every chunk (data, multiplicity 1 each) + the
             # fed-back global SV slot (model copies; static cap).  Each
             # chunk's dense basis is a block-aligned slice of the stacked
@@ -315,9 +348,22 @@ class CascadeSVM(BaseClassifier):
             if np.isfinite(prev_obj) and \
                     abs(prev_obj - obj) <= self.tol * max(1.0, abs(prev_obj)):
                 self.converged_ = True
+            else:
+                prev_obj = obj
+                fb_rows, fb_y, fb_mult = rows, yy, mm
+            if ckpt is not None:
+                # commit AFTER the state advance, so the newest committed
+                # iteration fully determines every later one
+                ckpt.save(it, {
+                    "fb_rows": fb_rows, "fb_y": fb_y, "fb_mult": fb_mult,
+                    "prev_obj": float(prev_obj),
+                    "sv": self.sv_, "sv_y": self.sv_y_,
+                    "dual_coef": self.dual_coef_,
+                    "intercept": float(self.intercept_),
+                    "n_sv": int(self.n_sv_), "n_iter": int(self.n_iter_),
+                    "converged": bool(self.converged_)})
+            if self.converged_:
                 break
-            prev_obj = obj
-            fb_rows, fb_y, fb_mult = rows, yy, mm
         return self
 
     # -- inference -----------------------------------------------------------

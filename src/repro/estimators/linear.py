@@ -32,6 +32,7 @@ import numpy as np
 from repro.core import plan
 from repro.core.dsarray import DsArray, from_array
 from repro.estimators.base import BaseRegressor
+from repro.resilience.guards import NumericalDivergence, require_finite_host
 
 # cond(X) beyond which the squared-cond normal equations lose f32 accuracy
 # (cond(G) = cond(X)² ≳ 1/eps_f32 ≈ 1.7e7): fall back to TSQR
@@ -86,10 +87,9 @@ class LinearRegression(BaseRegressor):
         else:
             a, b, reg = gram, xty, np.eye(m) * self.alpha
         try:
-            theta = np.linalg.solve(a + reg, b)
-            if not np.isfinite(theta).all():
-                raise np.linalg.LinAlgError
-        except np.linalg.LinAlgError:
+            theta = require_finite_host(np.linalg.solve(a + reg, b),
+                                        "normal-equations solution")
+        except (np.linalg.LinAlgError, NumericalDivergence):
             # rank-deficient Gram (all-zero feature columns are routine in
             # sparse text data): the min-norm lstsq solution, like sklearn
             theta = np.linalg.lstsq(a + reg, b, rcond=None)[0]
@@ -136,10 +136,10 @@ class LinearRegression(BaseRegressor):
         q, r = tsqr(xc)
         qty = np.asarray(q, np.float64).T @ yc
         try:
-            coef = np.linalg.solve(np.asarray(r, np.float64), qty)
-            if not np.isfinite(coef).all():
-                raise np.linalg.LinAlgError
-        except np.linalg.LinAlgError:
+            coef = require_finite_host(
+                np.linalg.solve(np.asarray(r, np.float64), qty),
+                "tsqr R-solve solution")
+        except (np.linalg.LinAlgError, NumericalDivergence):
             # singular R (exactly collinear/zero columns): min-norm solve
             coef = np.linalg.lstsq(np.asarray(r, np.float64), qty,
                                    rcond=None)[0]

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import functools
 import os
+import sys
 from typing import Optional
 
 import jax
@@ -30,6 +31,16 @@ from jax.experimental.sparse import BCOO
 
 from repro.core.blocking import round_up
 from repro.kernels.matmul.kernel import matmul_padded, stacked_matmul
+
+
+def _fire(site: str, **info) -> None:
+    """Fault-injection hook: active only when ``repro.resilience.inject``
+    is already imported (a chaos test armed it); clean runs pay one
+    sys.modules lookup.  Fires at trace time, so an armed dispatch fault
+    aborts the launch before any device work."""
+    ri = sys.modules.get("repro.resilience.inject")
+    if ri is not None:
+        ri.maybe_fire(site, **info)
 
 
 _PALLAS_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
@@ -119,11 +130,13 @@ def local_matmul(a: jnp.ndarray, b: jnp.ndarray, *, out_dtype=None,
         raise ValueError(f"local_matmul inner mismatch {a.shape} x {b.shape}")
     out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
     if isinstance(a, BCOO):
+        _fire("gemm_dispatch", mode="sparse")
         return _sparse_local_matmul(a, b, out_dtype=out_dtype,
                                     transpose_a=transpose_a)
     if isinstance(b, BCOO):
         b = b.todense()         # dense @ sp: right operand densifies
     mode = gemm_backend(bn, bk, bm, jnp.dtype(a.dtype), backend)
+    _fire("gemm_dispatch", mode=mode)
     if mode == "einsum":
         preferred = None
         if jnp.issubdtype(a.dtype, jnp.floating):

@@ -1,0 +1,80 @@
+"""Resilience subsystem: fault injection, guarded execution, numerical guards.
+
+The paper's ds-array inherits failure handling from PyCOMPSs; this package is
+the reproduction's equivalent substrate, in three layers:
+
+* :mod:`repro.resilience.inject` — deterministic, seeded, context-scoped
+  fault injection (``with inject(FaultSpec(...)):``) so every recovery path
+  is provable in CI;
+* :mod:`repro.resilience.execute` — :func:`run_resilient` with error
+  classification, bounded retry + exponential backoff for transients, and
+  the OOM degradation ladder fused → eager → einsum;
+* :mod:`repro.resilience.guards` — block-granular numerical guards
+  (``DsArray.finite_report()``, ``guard_finite``,
+  :class:`NumericalDivergence`).
+
+Import order matters for the rest of the repo: ``inject`` is
+dependency-free, so ``core.plan``, ``kernels.matmul.ops``, ``checkpoint``
+and the estimators import it directly without cycles.  ``execute`` and
+``guards`` sit above core and are imported lazily where needed.
+"""
+
+from repro.resilience.execute import (
+    DETERMINISTIC,
+    OOM,
+    TRANSIENT,
+    RetryPolicy,
+    classify_error,
+    reset_stats,
+    run_resilient,
+    stats,
+)
+from repro.resilience.guards import (
+    BadBlock,
+    FiniteReport,
+    NumericalDivergence,
+    all_finite,
+    finite_report,
+    guard_finite,
+    poison_block,
+    require_finite_host,
+)
+from repro.resilience.inject import (
+    CrashError,
+    FaultError,
+    FaultSpec,
+    IOLoadError,
+    OOMError,
+    TransientError,
+    inject,
+    maybe_fire,
+    poison_matches,
+)
+
+__all__ = [
+    "BadBlock",
+    "CrashError",
+    "DETERMINISTIC",
+    "FaultError",
+    "FaultSpec",
+    "FiniteReport",
+    "IOLoadError",
+    "NumericalDivergence",
+    "OOM",
+    "OOMError",
+    "RetryPolicy",
+    "TRANSIENT",
+    "TransientError",
+    "all_finite",
+    "classify_error",
+    "finite_report",
+    "guard_finite",
+    "inject",
+    "maybe_fire",
+    "poison_block",
+    "poison_matches",
+    "require_finite_host",
+    "reset_stats",
+    "run_resilient",
+    "stats",
+]

@@ -1,0 +1,227 @@
+"""Block-granular numerical guards for ds-arrays and plan outputs.
+
+Long-running iterative fits diverge numerically long before they crash: one
+NaN in one block propagates through every GEMM it touches and the fit
+silently converges to garbage.  The runtime the paper rides (PyCOMPSs)
+surfaces *task* failures; numerical failures need their own guard layer, and
+it has to be block-granular — on a distributed array, "there is a NaN
+somewhere in 2 GB" is not an actionable report, "block (3, 1) at offset
+(2, 7)" is (the same philosophy as ``DsArray.check_invariants()``).
+
+Three levels, cheapest first:
+
+* :func:`all_finite` — ONE fused reduction over an array (pad-state aware:
+  a DIRTY or non-finite FILL pad is masked out first, so pads never
+  false-positive); this is the per-execution post-condition
+  ``run_resilient(..., guard="finite")`` runs on the clean path.
+* :func:`finite_report` — the block-granular diagnosis, host-side: per-block
+  NaN/Inf counts with the first offending offset, dense and BCOO
+  (``DsArray.finite_report()`` delegates here).  Only built when the cheap
+  check already failed.
+* :func:`require_finite_host` — guard for small host-side arrays (solver
+  outputs); the single API behind the previously ad-hoc ``np.isfinite``
+  checks in ``estimators.linear``.
+
+All failures raise :class:`NumericalDivergence`, which carries the
+structured report — ``run_with_restarts`` and ``run_resilient`` classify it
+as *deterministic* (retrying a NaN recomputes the NaN).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dsarray import DsArray
+
+
+class NumericalDivergence(ArithmeticError):
+    """A guarded value contains NaN/Inf.  ``report`` holds the
+    :class:`FiniteReport` (None for host-scalar guards)."""
+
+    def __init__(self, message: str, report: Optional["FiniteReport"] = None):
+        super().__init__(message)
+        self.report = report
+
+
+@dataclasses.dataclass(frozen=True)
+class BadBlock:
+    """One offending block: coordinate, counts, and the first bad site
+    (dense: in-block offset; bcoo: entry slot)."""
+
+    gi: int
+    gj: int
+    n_nan: int
+    n_inf: int
+    first: Tuple[int, ...]      # (bi, bj) dense offset | (slot,) bcoo
+    sparse: bool = False
+
+    def describe(self) -> str:
+        what = []
+        if self.n_nan:
+            what.append(f"{self.n_nan} nan")
+        if self.n_inf:
+            what.append(f"{self.n_inf} inf")
+        site = (f"slot {self.first[0]}" if self.sparse
+                else f"offset {self.first}")
+        return f"block ({self.gi}, {self.gj}): {' + '.join(what)}, " \
+               f"first at {site}"
+
+
+@dataclasses.dataclass(frozen=True)
+class FiniteReport:
+    """Block-granular finiteness report for one ds-array."""
+
+    shape: Tuple[int, int]
+    block_format: str
+    bad_blocks: Tuple[BadBlock, ...]
+
+    @property
+    def ok(self) -> bool:
+        return not self.bad_blocks
+
+    def describe(self) -> str:
+        if self.ok:
+            return f"all finite ({self.block_format} {self.shape})"
+        lines = "; ".join(b.describe() for b in self.bad_blocks[:8])
+        more = len(self.bad_blocks) - 8
+        if more > 0:
+            lines += f"; ... {more} more block(s)"
+        return (f"non-finite values in {len(self.bad_blocks)} block(s) of "
+                f"{self.block_format} ds-array {self.shape}: {lines}")
+
+
+def _dense_valid_mask(a: DsArray) -> np.ndarray:
+    """(sgn, sgm, bn, bm) bool: True on positions inside the logical shape."""
+    sgn, sgm = a.stacked_grid
+    bn, bm = a.block_shape
+    n, m = a.shape
+    rows = (np.arange(sgn)[:, None] * bn + np.arange(bn)[None, :]) < n
+    cols = (np.arange(sgm)[:, None] * bm + np.arange(bm)[None, :]) < m
+    return rows[:, None, :, None] & cols[None, :, None, :]
+
+
+def finite_report(a: DsArray) -> FiniteReport:
+    """Per-block NaN/Inf diagnosis (host-side; pad-state aware).
+
+    Dense: only positions inside the logical shape count — a DIRTY pad
+    holding NaN is the pad's business, not a divergence.  BCOO: every stored
+    entry counts (a non-finite stored value poisons any data map that
+    touches it, pad slot or not); reported as ``block (gi, gj) slot k`` in
+    the ``check_invariants`` style.
+    """
+    if a.is_sparse:
+        data = np.asarray(a.blocks.data)                   # (gn, gm, nse)
+        bad_nan = np.isnan(data)
+        bad_inf = np.isinf(data)
+        bad = bad_nan | bad_inf
+        blocks = []
+        for gi, gj in zip(*np.nonzero(bad.any(axis=-1))):
+            slot = int(np.flatnonzero(bad[gi, gj])[0])
+            blocks.append(BadBlock(
+                int(gi), int(gj), int(bad_nan[gi, gj].sum()),
+                int(bad_inf[gi, gj].sum()), (slot,), sparse=True))
+        return FiniteReport(a.shape, "bcoo", tuple(blocks))
+    g = np.asarray(a.blocks)
+    valid = _dense_valid_mask(a)
+    bad_nan = np.isnan(g) & valid
+    bad_inf = np.isinf(g) & valid
+    bad = bad_nan | bad_inf
+    blocks = []
+    for gi, gj in zip(*np.nonzero(bad.any(axis=(2, 3)))):
+        bi, bj = (int(v) for v in np.argwhere(bad[gi, gj])[0])
+        blocks.append(BadBlock(
+            int(gi), int(gj), int(bad_nan[gi, gj].sum()),
+            int(bad_inf[gi, gj].sum()), (bi, bj)))
+    return FiniteReport(a.shape, "dense", tuple(blocks))
+
+
+def _pad_is_finite(a: DsArray) -> bool:
+    """True when the pad region is known finite (so raw blocks can be
+    checked without a mask pass)."""
+    ps = a.pad_state
+    if ps.kind == "zero":
+        return True
+    if ps.kind == "fill":
+        return bool(math.isfinite(float(ps.fill)))
+    return False
+
+
+def all_finite(value) -> bool:
+    """ONE fused finiteness reduction over a ds-array / array / scalar.
+
+    The cheap whole-plan post-condition: for a ds-array whose pad is known
+    finite this is ``isfinite(blocks).all()`` on the raw stacked tensor (no
+    mask pass); a DIRTY pad masks first so an intentionally-unknown pad
+    region never false-positives.
+    """
+    if isinstance(value, DsArray):
+        if value.is_sparse:
+            return bool(jnp.isfinite(value.blocks.data).all())
+        blocks = value.blocks if _pad_is_finite(value) else value._remask()
+        return bool(jnp.isfinite(blocks).all())
+    if not jnp.issubdtype(jnp.asarray(value).dtype, jnp.floating):
+        return True
+    return bool(jnp.isfinite(jnp.asarray(value)).all())
+
+
+def guard_finite(*values, what: str = "plan output"):
+    """Post-condition: every value is finite, else :class:`NumericalDivergence`.
+
+    Clean path cost: one fused reduction per value.  On failure the
+    block-granular :func:`finite_report` is built (only then) and its
+    coordinates go into the error message.  Integer-dtype values pass for
+    free.  Returns the values (single value un-tupled) for chaining.
+    """
+    for i, v in enumerate(values):
+        if isinstance(v, DsArray):
+            if jnp.issubdtype(v.dtype, jnp.floating) and not all_finite(v):
+                rep = finite_report(v)
+                raise NumericalDivergence(
+                    f"{what}[{i}]: {rep.describe()}", rep)
+        elif not all_finite(v):
+            raise NumericalDivergence(
+                f"{what}[{i}]: non-finite scalar/array value "
+                f"{np.asarray(v)!r}")
+    return values[0] if len(values) == 1 else values
+
+
+def require_finite_host(arr: np.ndarray, what: str) -> np.ndarray:
+    """Small host-side arrays (solver outputs): raise on NaN/Inf.
+
+    The single API behind the former ad-hoc ``np.isfinite(...).all()``
+    checks in ``estimators.linear`` — callers that treat divergence as a
+    fallback trigger catch :class:`NumericalDivergence` alongside
+    ``LinAlgError``.
+    """
+    a = np.asarray(arr)
+    if np.issubdtype(a.dtype, np.floating) and not np.isfinite(a).all():
+        n_nan = int(np.isnan(a).sum())
+        n_inf = int(np.isinf(a).sum())
+        raise NumericalDivergence(
+            f"{what}: {n_nan} nan + {n_inf} inf in shape {a.shape}")
+    return arr
+
+
+def poison_block(a: DsArray, block: Tuple[int, int],
+                 value: float = math.nan) -> DsArray:
+    """``a`` with ``value`` written into one position of block ``block`` —
+    the fault-injection side of the guards (dense: offset (0, 0) of the
+    block; bcoo: entry slot 0 of the block).  Used by ``run_resilient`` to
+    apply armed poison specs, and directly by tests."""
+    gi, gj = block
+    sgn, sgm = a.stacked_grid
+    if not (0 <= gi < sgn and 0 <= gj < sgm):
+        raise ValueError(f"block {block} outside stacked grid {(sgn, sgm)}")
+    if a.is_sparse:
+        data = a.blocks.data.at[gi, gj, 0].set(value)
+        from repro.core.sparse import _rebuild
+        return DsArray(_rebuild(a.blocks, data, a.blocks.indices),
+                       a.grid, a.pad_state)
+    blocks = a.blocks.at[gi, gj, 0, 0].set(
+        jnp.asarray(value, a.blocks.dtype))
+    return DsArray(blocks, a.grid, a.pad_state)

@@ -351,3 +351,57 @@ def test_differential_csvm_fit_predict(case):
         preds[label] = np.asarray(est.predict(xd).collect()).ravel()
     # dense and sparse fits see the same chunks (same block rows): identical
     np.testing.assert_array_equal(preds["e"], preds["sp"])
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection lane (runs in BOTH the sparse and resilience CI lanes):
+# the same kind of random chains, executed through ``run_resilient`` while
+# deterministic faults fire at the ``plan_execute`` site.  Recovery — a
+# transient retry, or OOM degradation down the fused → eager → einsum
+# ladder — must reproduce the NumPy oracle exactly like a clean run.
+# ---------------------------------------------------------------------------
+
+
+def _resilient_chain(case_seed: int):
+    """A random lazy matmul chain + its NumPy oracle."""
+    rng = np.random.default_rng(case_seed)
+    n = int(rng.integers(4, 20))
+    k = int(rng.integers(3, 16))
+    m = int(rng.integers(2, 12))
+    x = rng.normal(size=(n, k)).astype(np.float32)
+    y = rng.normal(size=(k, m)).astype(np.float32)
+    a = from_array(x, (int(rng.integers(2, 8)), int(rng.integers(2, 8))))
+    b = from_array(y, (int(rng.integers(2, 8)), int(rng.integers(2, 6))))
+    lz = (a.lazy() @ b) * 1.5 + 0.25
+    ox = (x.astype(np.float64) @ y.astype(np.float64)) * 1.5 + 0.25
+    if n >= 2 and rng.random() < 0.5:
+        lz, ox = lz.T, ox.T
+    return lz, ox
+
+
+@pytest.mark.resilience
+@pytest.mark.parametrize("case", range(6))
+def test_differential_recovery_matches_oracle(case):
+    import repro.resilience as R
+
+    faults = [
+        (),                                             # clean baseline
+        (R.FaultSpec(kind="transient", site="plan_execute",
+                     at=1, times=2),),                  # 2 retries
+        (R.FaultSpec(kind="oom", site="plan_execute",
+                     modes=("fused",), times=None),),   # degrade: eager
+        (R.FaultSpec(kind="oom", site="plan_execute",
+                     modes=("fused", "eager"), times=None),),  # → einsum
+    ]
+    for i, specs in enumerate(faults):
+        lz, want = _resilient_chain(SEED + 9000 + case)
+        R.reset_stats()
+        with R.inject(*specs):
+            out = R.run_resilient(lz, guard="finite")
+        np.testing.assert_allclose(np.asarray(out.collect(), np.float64),
+                                   want, rtol=2e-4, atol=2e-4,
+                                   err_msg=f"case={case} faults[{i}]")
+        s = R.stats()
+        assert s["recoveries"] == (1 if specs else 0), (case, i, s)
+        assert s["guard_failures"] == 0
+    R.reset_stats()
