@@ -1,0 +1,154 @@
+"""Serving latency/throughput: p50/p99 and requests/s vs batch size.
+
+Measures the tentpole's two claims directly:
+
+* **warm vs cold** — the first request of a geometry against an AOT-warmed
+  registry vs against a cold plan cache: the delta is the XLA compile the
+  warm path moved to model-load time;
+* **steady-state latency** — request streams at batch sizes 1/8/32/128
+  through a warmed server, dense and bcoo at ``REPRO_BENCH_SERVE_FEATURES``
+  (default 4096) features, with the plan-cache discipline recorded per
+  stream (misses/opt_runs deltas MUST be zero — the zero-recompile
+  acceptance, machine-checked from ``BENCH_serve.json``).
+
+``run()`` fills ``JSON_RECORDS``; ``benchmarks/run.py`` dumps them to
+``BENCH_serve.json`` (mode, format, batch size, features, p50/p99 us,
+requests/s, cache-hit + recompile counters).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import from_array, plan
+import repro.serve as serve
+
+JSON_RECORDS: List[Dict] = []
+
+FEATURES = int(os.environ.get("REPRO_BENCH_SERVE_FEATURES", "4096"))
+ROWS = int(os.environ.get("REPRO_BENCH_SERVE_ROWS", "1024"))
+STREAM = int(os.environ.get("REPRO_BENCH_SERVE_STREAM", "64"))
+BATCH_SIZES = (1, 8, 32, 128)
+DENSITY = 0.01
+BLOCK_ROWS = 128
+
+
+def _fit_ridge():
+    from repro.estimators import Ridge
+    rng = np.random.default_rng(11)
+    X = rng.normal(size=(ROWS, FEATURES)).astype(np.float32)
+    w = rng.normal(size=(FEATURES, 1)).astype(np.float32)
+    y = (X @ w).astype(np.float32)
+    est = Ridge(alpha=0.1)
+    est.fit(from_array(X, (BLOCK_ROWS, FEATURES)),
+            from_array(y, (BLOCK_ROWS, 1)))
+    return est
+
+
+def _payloads(fmt: str, batch: int, count: int):
+    rng = np.random.default_rng(batch)
+    if fmt == "dense":
+        return [rng.normal(size=(batch, FEATURES)).astype(np.float32)
+                for _ in range(count)]
+    import scipy.sparse as sp
+    return [sp.random(batch, FEATURES, density=DENSITY, format="csr",
+                      random_state=rng, dtype=np.float32)
+            for _ in range(count)]
+
+
+def _nse() -> int:
+    # per-block capacity for the declared density, with 4x headroom for
+    # the binomial tail across blocks
+    return max(64, int(BLOCK_ROWS * FEATURES * DENSITY * 4))
+
+
+def _record(mode: str, fmt: str, batch: int, us_p50: float, us_p99: float,
+            rps: float, extra: Dict) -> None:
+    JSON_RECORDS.append({
+        "mode": mode, "format": fmt, "batch": batch, "features": FEATURES,
+        "p50_us": us_p50, "p99_us": us_p99, "requests_per_s": rps, **extra})
+
+
+def _stream(srv, fmt: str, batch: int, count: int) -> Dict[str, float]:
+    """Serve ``count`` single-batch requests one at a time; per-request
+    wall latency from the future's own clock."""
+    lats = []
+    t0 = time.perf_counter()
+    for payload in _payloads(fmt, batch, count):
+        fut = srv.submit("ridge", payload)
+        srv.pump()
+        fut.result()
+        lats.append(fut.latency)
+    wall = time.perf_counter() - t0
+    lats.sort()
+    return {
+        "p50": lats[len(lats) // 2] * 1e6,
+        "p99": lats[min(len(lats) - 1, int(len(lats) * 0.99))] * 1e6,
+        "rps": count * batch / wall,
+    }
+
+
+def run() -> List[Row]:
+    est = _fit_ridge()
+    rows: List[Row] = []
+    try:
+        import scipy.sparse  # noqa: F401
+        formats = ("dense", "bcoo")
+    except ImportError:                                # pragma: no cover
+        formats = ("dense",)
+
+    for fmt in formats:
+        # cold: no AOT warm, first request pays plan opt + XLA compile
+        plan.clear_cache()
+        serve.reset_stats()
+        reg = serve.ModelRegistry()
+        reg.register("ridge", est, batch_sizes=BATCH_SIZES, formats=(fmt,),
+                     block_rows=BLOCK_ROWS, nse=_nse(), warm=False)
+        srv = serve.PredictServer(reg)
+        fut = srv.submit("ridge", _payloads(fmt, 8, 1)[0])
+        t0 = time.perf_counter()
+        srv.pump()
+        fut.result()
+        cold_us = (time.perf_counter() - t0) * 1e6
+
+        # warm: AOT-compile at load, then the same first request
+        plan.clear_cache()
+        serve.reset_stats()
+        t0 = time.perf_counter()
+        reg.warm_all()
+        warm_load_us = (time.perf_counter() - t0) * 1e6
+        fut = srv.submit("ridge", _payloads(fmt, 8, 1)[0])
+        t0 = time.perf_counter()
+        srv.pump()
+        fut.result()
+        warm_us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"serve_first_request_cold_{fmt}", cold_us, ""))
+        rows.append((f"serve_first_request_warm_{fmt}", warm_us,
+                     f"{cold_us / warm_us:.1f}x"))
+        _record("first_request", fmt, 8, warm_us, warm_us, 0.0, {
+            "cold_us": cold_us, "warm_us": warm_us,
+            "warm_load_us": warm_load_us,
+            "aot_compiles": plan.cache_stats()["aot_compiles"]})
+
+        # steady state: latency/throughput per batch size, recompiles
+        # must stay frozen across the whole stream
+        for batch in BATCH_SIZES:
+            serve.reset_stats()
+            before = plan.cache_stats()
+            r = _stream(srv, fmt, batch, STREAM)
+            after = plan.cache_stats()
+            st = serve.stats()
+            _record("steady", fmt, batch, r["p50"], r["p99"], r["rps"], {
+                "requests": st["requests"],
+                "cache_hits": st["cache_hits"],
+                "recompiles": after["misses"] - before["misses"],
+                "reopts": after["opt_runs"] - before["opt_runs"]})
+            rows.append((f"serve_p50_{fmt}_b{batch}", r["p50"],
+                         f"p99={r['p99']:.0f}us rps={r['rps']:.0f} "
+                         f"hits={st['cache_hits']}/{st['requests']}"))
+    return rows

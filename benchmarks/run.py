@@ -18,14 +18,15 @@ import os
 
 def main() -> None:
     from benchmarks import (bench_als, bench_estimators, bench_kmeans,
-                            bench_lazy, bench_matmul, bench_shuffle,
-                            bench_slicing, bench_sparse, bench_transpose)
+                            bench_lazy, bench_matmul, bench_serve,
+                            bench_shuffle, bench_slicing, bench_sparse,
+                            bench_transpose)
     from benchmarks.common import emit
 
     print("name,us_per_call,derived")
     for mod in (bench_transpose, bench_als, bench_shuffle, bench_slicing,
                 bench_kmeans, bench_matmul, bench_lazy, bench_sparse,
-                bench_estimators):
+                bench_estimators, bench_serve):
         emit(mod.run())
 
     out = os.environ.get("REPRO_BENCH_JSON", "BENCH_matmul.json")
@@ -47,6 +48,11 @@ def main() -> None:
     with open(est_out, "w") as f:
         json.dump(bench_estimators.JSON_RECORDS, f, indent=2)
     print(f"# wrote {est_out} ({len(bench_estimators.JSON_RECORDS)} records)")
+
+    serve_out = os.environ.get("REPRO_BENCH_SERVE_JSON", "BENCH_serve.json")
+    with open(serve_out, "w") as f:
+        json.dump(bench_serve.JSON_RECORDS, f, indent=2)
+    print(f"# wrote {serve_out} ({len(bench_serve.JSON_RECORDS)} records)")
 
 
 if __name__ == "__main__":

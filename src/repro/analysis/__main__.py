@@ -116,6 +116,27 @@ def _pca_fit() -> List["_plan.Plan"]:
     return _captured(lambda: PCA(n_components=2, n_iter=3, seed=0).fit(x))
 
 
+def _serve_predict() -> List["_plan.Plan"]:
+    """The predict plans the serving registry AOT-warms: a fitted Ridge
+    served dense and bcoo across its declared geometry buckets."""
+    from repro.estimators import Ridge
+    from repro.serve import ModelRegistry
+    rng = np.random.default_rng(7)
+    xa = rng.normal(size=(64, 8)).astype(np.float32)
+    y = (xa @ rng.normal(size=(8, 1))).astype(np.float32)
+    est = Ridge(alpha=0.1).fit(from_array(xa, (16, 8)),
+                               from_array(y, (16, 1)))
+    reg = ModelRegistry()
+    try:
+        import scipy.sparse  # noqa: F401
+        formats, nse = ("dense", "bcoo"), 64
+    except ImportError:                                # pragma: no cover
+        formats, nse = ("dense",), None
+    reg.register("ridge", est, batch_sizes=(8, 32), formats=formats,
+                 block_rows=4, nse=nse)
+    return _dedup(reg.warmed_plans())
+
+
 SCENARIOS = [
     ("six-op-chain", _six_op_chain),
     ("quickstart", _quickstart),
@@ -124,6 +145,7 @@ SCENARIOS = [
     ("csvm-sparse-fit", _csvm_sparse_fit),
     ("kmeans-fit", _kmeans_fit),
     ("pca-fit", _pca_fit),
+    ("serve-predict", _serve_predict),
 ]
 
 

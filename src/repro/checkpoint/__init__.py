@@ -1,3 +1,4 @@
 from repro.checkpoint.checkpoint import (AsyncCheckpointer,
                                          CheckpointWriteError, latest_step,
-                                         manifest_extra, restore, save)
+                                         list_steps, manifest_extra, restore,
+                                         save)

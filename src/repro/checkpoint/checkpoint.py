@@ -79,15 +79,25 @@ def save(root: str, step: int, tree: Params,
     return final
 
 
-def latest_step(root: str) -> Optional[int]:
+def list_steps(root: str) -> List[int]:
+    """All committed steps in ``root``, ascending.  Only fully-committed
+    checkpoints count (a ``.tmp`` dir from a crashed writer is invisible) —
+    this is the model registry's version enumeration: ``save_model``
+    versions are checkpoint steps, so the serving layer lists a model
+    directory's available versions with one readdir."""
     if not os.path.isdir(root):
-        return None
+        return []
     steps = []
     for name in os.listdir(root):
         if name.startswith("step_") and not name.endswith(".tmp") and \
                 os.path.exists(os.path.join(root, name, "manifest.json")):
             steps.append(int(name.split("_")[1]))
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(root: str) -> Optional[int]:
+    steps = list_steps(root)
+    return steps[-1] if steps else None
 
 
 def restore(root: str, step: int, like: Params,

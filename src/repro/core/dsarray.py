@@ -142,7 +142,30 @@ entry point             what it does
                           ``resilience.stats()`` counts recoveries
 ``inject(FaultSpec)``   deterministic fault injection (chaos harness) at
                           ``plan_execute`` / ``gemm_dispatch`` /
-                          ``fit_iteration`` / ``io_load`` sites
+                          ``fit_iteration`` / ``io_load`` /
+                          ``serve_dispatch`` sites
+======================  ======================================================
+
+Predict serving (``repro.serve``) turns fitted estimators into a
+low-latency request loop over the same plan machinery:
+
+======================  ======================================================
+entry point             what it does
+======================  ======================================================
+``ModelRegistry``       named + versioned fitted models — ``register`` an
+``.register/.load``       in-process estimator or ``load`` a ``save_model``
+                          checkpoint (versions = checkpoint steps); params
+                          pinned on device, per-bucket predict plans
+                          AOT-compiled at load (``Plan.compile_aot``)
+``PredictServer``       micro-batches requests into declared geometry
+``.submit/.pump``         buckets (tail rows PAD_ZERO, results sliced back
+                          per request; bcoo stays sparse at fixed nse);
+                          every plan launch rides ``run_resilient``, and
+                          dispatch faults shed batching -> unbatched
+                          predict (request-level isolation)
+``serve.stats()``       request/latency/queue counters + the plan-cache
+                          discipline: steady state serves with ZERO XLA
+                          recompiles (``cache_hits == requests``)
 ======================  ======================================================
 
 Each claim in the tables above is machine-checked by ``repro.analysis``

@@ -243,13 +243,20 @@ def random_sparse(key, shape: Tuple[int, int], block_shape: Tuple[int, int],
     return DsArray(sp, grid, PAD_ZERO)
 
 
-def from_scipy(mat, block_shape: Tuple[int, int]) -> "DsArray":
+def from_scipy(mat, block_shape: Tuple[int, int],
+               nse: Optional[int] = None) -> "DsArray":
     """scipy.sparse matrix -> BCOO-blocked ds-array, without densifying.
 
     The paper loads CSVM datasets straight into CSR-blocked ds-arrays; here
     the COO triplets are bucketed by block (pure NumPy index math, touching
     only the nnz entries) and packed into the stacked BCOO with ``nse`` =
-    the max block nnz.
+    the max block nnz.  An explicit ``nse`` fixes the stored-entry capacity
+    instead (it must be >= the max block nnz — entries past the capacity
+    would be silently dropped, so callers declaring a capacity check
+    :func:`max_block_nnz` first): the serving layer packs every request
+    batch of one geometry bucket at the bucket's declared capacity, which
+    keeps the plan-cache leaf signature — and therefore the compiled
+    program — identical across batches with different nnz.
     """
     from repro.core.dsarray import DsArray, PAD_ZERO
     coo = mat.tocoo()
@@ -261,8 +268,24 @@ def from_scipy(mat, block_shape: Tuple[int, int]) -> "DsArray":
     order = np.argsort(cell, kind="stable")
     blocks = _pack_coo((coo.row[order] % bn).astype(np.int32),
                        (coo.col[order] % bm).astype(np.int32),
-                       coo.data[order], cell[order], gn, gm, bn, bm)
+                       coo.data[order], cell[order], gn, gm, bn, bm, nse)
     return DsArray(blocks, grid, PAD_ZERO)
+
+
+def max_block_nnz(mat, block_shape: Tuple[int, int]) -> int:
+    """Max nnz of any block of ``mat`` under ``block_shape`` (host-side
+    NumPy over the stored triplets only) — the guard a fixed-capacity
+    :func:`from_scipy` pack needs: a batch whose densest block exceeds the
+    declared bucket ``nse`` must fall back rather than truncate."""
+    coo = mat.tocoo()
+    coo.sum_duplicates()
+    if coo.nnz == 0:
+        return 0
+    n, m = coo.shape
+    grid = BlockGrid((n, m), tuple(block_shape))
+    gn, gm, bn, bm = grid.stacked_shape
+    cell = (coo.row // bn) * gm + coo.col // bm
+    return int(np.bincount(cell, minlength=gn * gm).max())
 
 
 def fetch_row_dense(a: "DsArray", i: int) -> jnp.ndarray:

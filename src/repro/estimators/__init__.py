@@ -23,10 +23,11 @@ from repro.estimators.forest import RandomForestClassifier
 from repro.estimators.linear import LinearRegression, Ridge
 
 
-def load_model(directory: str) -> BaseEstimator:
+def load_model(directory: str, version=None) -> BaseEstimator:
     """Reconstruct any saved model: the manifest names the class, the
-    registry (estimators exports, then ``repro.algorithms``) resolves it."""
-    return BaseEstimator.load_model(directory)
+    registry (estimators exports, then ``repro.algorithms``) resolves it.
+    ``version`` pins a checkpoint step (default: newest committed)."""
+    return BaseEstimator.load_model(directory, version=version)
 
 
 __all__ = [

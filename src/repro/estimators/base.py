@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import plan as _plan
 from repro.core.dsarray import DsArray, from_array
 from repro import checkpoint as _ckpt
 
@@ -221,30 +222,36 @@ class BaseEstimator:
             return True
         return False
 
-    def save_model(self, directory: str) -> str:
+    def save_model(self, directory: str, version: int = 0) -> str:
         """Persist params + fitted state through ``repro.checkpoint``
         (atomic commit; ``load_model`` restores with exact dtypes).  The
-        registry entry point for the ROADMAP's serving item: the manifest
-        records the estimator class so ``estimators.load_model(dir)``
-        reconstructs without knowing the type."""
+        registry entry point for the serving layer: the manifest records
+        the estimator class so ``estimators.load_model(dir)`` reconstructs
+        without knowing the type.  ``version`` maps onto the checkpoint
+        step, so one directory holds a version history and
+        ``serve.ModelRegistry`` serves any pinned version of it."""
         fitted = self._fitted_state()
         if not self._is_fitted(fitted):
             raise NotFittedError(
                 f"{type(self).__name__}: nothing fitted to save")
         arrays, meta = _pack_state(fitted)
         return _ckpt.save(
-            directory, 0, arrays,
+            directory, version, arrays,
             extra={"format": MODEL_FORMAT,
                    "estimator": type(self).__name__,
+                   "version": version,
                    "params": self.get_params(), "state": meta})
 
     @classmethod
-    def load_model(cls, directory: str) -> "BaseEstimator":
+    def load_model(cls, directory: str,
+                   version: Optional[int] = None) -> "BaseEstimator":
         """Reconstruct a fitted estimator saved by ``save_model``.  Call on
         the concrete class (checked against the manifest) or on
         ``BaseEstimator``/via ``estimators.load_model`` to dispatch through
-        the registry."""
-        step = _ckpt.latest_step(directory)
+        the registry.  ``version=None`` loads the newest committed version
+        in the directory."""
+        step = version if version is not None \
+            else _ckpt.latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no model checkpoint in {directory!r}")
         extra = _ckpt.manifest_extra(directory, step)
@@ -278,6 +285,40 @@ class BaseEstimator:
         if getattr(self, attr, None) is None:
             raise NotFittedError(
                 f"{type(self).__name__}: call fit before predict/score")
+
+    # -- predict-plan capture (the serving layer's entry point) --------------
+    def _predict_expr(self, xl):
+        """Record this estimator's predict on the lazy-lifted input ``xl``
+        (a ``LazyDsArray``) and return the recorded lazy result.
+
+        Estimators whose predict lowers through the lazy expression layer
+        implement this (linear models do); ``predict`` and
+        :meth:`predict_plan` both route through it, so a served plan
+        computes EXACTLY what direct ``predict`` computes — same recorded
+        structure, same compiled program, bit-identical outputs.  The
+        default raises ``NotImplementedError``: the serve layer then falls
+        back to eager ``predict`` (still geometry-bucketed, just without
+        an AOT-warmed plan).
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} has no recordable predict plan")
+
+    def has_predict_plan(self) -> bool:
+        """True when :meth:`_predict_expr` is overridden — i.e. predict
+        can be captured as a cacheable, AOT-compilable lazy plan."""
+        return type(self)._predict_expr is not BaseEstimator._predict_expr
+
+    def predict_plan(self, x) -> "_plan.Plan":
+        """``predict(x)`` captured as ONE optimized :class:`~repro.core.plan.Plan`
+        (not executed).  The serve layer records a plan per request batch —
+        structurally identical batches skip the optimizer
+        (``plan._OPT_CACHE``) and hit the compiled cache (``plan._CACHE``),
+        and :meth:`Plan.compile_aot` warms the compiled entry at model-load
+        time so no request pays first-call XLA compilation."""
+        with self._driver_scope():
+            x = self._validate_x(x)
+            lz = self._predict_expr(x.lazy())
+        return _plan.plan_for(lz)
 
     # -- input validation ----------------------------------------------------
     @staticmethod

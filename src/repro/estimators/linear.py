@@ -26,6 +26,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -181,18 +182,43 @@ class LinearRegression(BaseRegressor):
         self.solver_used_ = solver
         return self
 
+    def _weights_ds(self, block_cols: int) -> DsArray:
+        """``coef_`` as a device-pinned ``(m, 1)`` ds-array, cached per
+        column blocking AND per fitted-coefficient identity: the serving
+        hot path re-records predict per request batch, and reusing ONE leaf
+        array keeps the plan's alias structure stable (``_OPT_CACHE`` hits)
+        and skips a host->device transfer per request.  A refit (new
+        ``coef_`` object) naturally invalidates the cached entry."""
+        cache = self.__dict__.setdefault("_predict_cache", {})
+        key = (int(block_cols), id(self.coef_))
+        w = cache.get(key)
+        if w is None:
+            cache.clear()                    # one fit, one blocking at a time
+            w = from_array(jnp.asarray(self.coef_, jnp.float32).reshape(-1, 1),
+                           (block_cols, 1))
+            jax.block_until_ready(w.blocks)
+            cache[key] = w
+        return w
+
+    def _predict_expr(self, xl):
+        """``x @ coef_ + intercept_`` recorded on the lazy input: the
+        matmul is the sparse-native ``sp @ dense`` path for bcoo inputs,
+        and the whole expression is one cacheable plan (the serve layer's
+        AOT target)."""
+        out = xl @ self._weights_ds(xl.block_shape[1])
+        if self.intercept_ != 0.0:
+            out = out + float(self.intercept_)
+        return out
+
     def predict(self, x) -> DsArray:
-        """``x @ coef_ + intercept_`` as a new ``(n, 1)`` ds-array; the
-        matmul is the sparse-native ``sp @ dense`` path for bcoo inputs."""
+        """``x @ coef_ + intercept_`` as a new ``(n, 1)`` ds-array,
+        computed through the SAME recorded plan the serving layer caches
+        (``_predict_expr``), so direct and served predictions are
+        bit-identical and repeat predicts hit the structural plan cache."""
         self._check_fitted("coef_")
         with self._driver_scope():
             x = self._validate_x(x)
-            w = from_array(jnp.asarray(self.coef_, jnp.float32).reshape(-1, 1),
-                           (x.block_shape[1], 1))
-            out = x @ w
-            if self.intercept_ != 0.0:
-                out = out + float(self.intercept_)
-            return out
+            return plan.compute(self._predict_expr(x.lazy()))
 
 
 @dataclasses.dataclass

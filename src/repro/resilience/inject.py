@@ -32,6 +32,12 @@ site                  where / info keys
                       fits (``estimator=<class name>``, ``iteration=<n>``)
 ``io_load``           ``core.io`` loaders and ``checkpoint.restore``
                       (``source=<loader name>``)
+``serve_dispatch``    ``serve.server.PredictServer`` per dispatch attempt
+                      (``mode="batched"`` for a micro-batched plan launch,
+                      ``mode="single"`` for the shed-batching unbatched
+                      fallback; ``model=<name>``, ``requests=<n>``) — every
+                      serving recovery path (dispatch retry, batch shed,
+                      per-request isolation) is provable through it
 ====================  =====================================================
 
 Fault kinds and the errors they raise:

@@ -1,0 +1,49 @@
+"""repro.serve: low-latency predict serving over the plan layer.
+
+The fit side of the estimator subsystem is throughput work; serving is
+latency work.  This package closes the gap with four pieces, each leaning
+on machinery the repo already has:
+
+* :class:`ModelRegistry` (``registry``) — named + versioned fitted models,
+  loaded from ``save_model`` checkpoints, params pinned on device;
+* :class:`~repro.serve.compilecache.PredictCompileCache`
+  (``compilecache``) — per-(model, geometry) AOT compilation of predict
+  plans at model-load time, so steady-state serving replays warmed
+  executables with zero XLA recompiles;
+* ``batching`` — request micro-batching into declared geometry buckets:
+  payloads concatenate along the block-aligned batch dim, tails pad with
+  zeros, results slice back per request (dense and BCOO, no densifying);
+* :class:`PredictServer` (``server``) — submit/pump/serve_forever dispatch
+  that routes plan launches through ``resilience.run_resilient``, degrades
+  batched -> unbatched under injected ``serve_dispatch`` faults, and feeds
+  the :func:`stats` counters + latency percentiles.
+
+    reg = ModelRegistry()
+    reg.register("ridge", fitted, batch_sizes=(1, 8, 32))
+    srv = PredictServer(reg)
+    fut = srv.submit("ridge", rows)      # (r, n_features) ndarray or scipy
+    srv.pump()                           # or srv.start() for a thread
+    y = fut.result()                     # (r, 1), exact vs direct predict
+"""
+
+from repro.serve.batching import (BucketSpec, FORMAT_BCOO, FORMAT_DENSE,
+                                  GeometryBucket)
+from repro.serve.compilecache import PredictCompileCache
+from repro.serve.registry import ModelRegistry, ServedModel
+from repro.serve.server import PredictFuture, PredictServer
+from repro.serve.stats import latency_summary, reset_stats, stats
+
+__all__ = [
+    "BucketSpec",
+    "FORMAT_BCOO",
+    "FORMAT_DENSE",
+    "GeometryBucket",
+    "ModelRegistry",
+    "PredictCompileCache",
+    "PredictFuture",
+    "PredictServer",
+    "ServedModel",
+    "latency_summary",
+    "reset_stats",
+    "stats",
+]
