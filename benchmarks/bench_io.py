@@ -1,0 +1,116 @@
+"""Ingestion benchmark: streamed vs materialized load, time + peak host RAM.
+
+The paper's creation claim (§4.2.2) is that ds-arrays are built one
+block-row at a time so no process ever holds the full matrix.  This bench
+generates text / svmlight / npy fixtures of ``GN`` block rows, loads each
+through the streaming loader AND the one-shot materializing oracle, and
+measures tracemalloc peak host bytes for both — the streamed-vs-
+materialized peak-memory ratio is the headline number, next to the
+``costmodel.ingest_peak_ratio`` law prediction.  Wall-clock per load rides
+along so the streaming overhead stays visible.
+
+``run()`` fills ``JSON_RECORDS``; ``benchmarks/run.py`` dumps them to
+``BENCH_io.json`` (op, format, rows, cols, block_rows, us_per_call,
+peak_streamed, peak_materialized, ratio, blockrow_bytes, law_ratio).
+"""
+
+from __future__ import annotations
+
+import gc
+import os
+import tempfile
+import tracemalloc
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import Row, time_call
+from repro.core import costmodel
+from repro.core import io as rio
+from repro.core import sparse as sparse_mod
+from repro.core.dsarray import from_array
+
+JSON_RECORDS: List[Dict] = []
+
+GN = int(os.environ.get("REPRO_BENCH_IO_BLOCKROWS", "8"))
+BN, BM, M = 256, 128, 256
+N = GN * BN
+DENSITY = 0.1
+
+
+def _peak(fn: Callable) -> Tuple[float, object]:
+    """(tracemalloc peak bytes, result) of one warmed call."""
+    fn()                                    # warm jit / trace paths
+    gc.collect()
+    tracemalloc.start()
+    out = fn()
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    return float(peak), out
+
+
+def _fixtures(d: str):
+    rng = np.random.default_rng(0)
+    dense = rng.normal(size=(N, M)).astype(np.float32)
+    txt = os.path.join(d, "bench.txt")
+    np.savetxt(txt, dense, delimiter=",", fmt="%.4e")
+    npy = os.path.join(d, "bench.npy")
+    np.save(npy, dense)
+    import scipy.sparse as ssp
+    S = ssp.random(N, M, density=DENSITY, random_state=0, format="csr",
+                   dtype=np.float32)
+    svm = os.path.join(d, "bench.svm")
+    with open(svm, "w") as f:
+        for i in range(N):
+            row = S.getrow(i).tocoo()
+            f.write(f"{float(i % 2)} " + " ".join(
+                f"{c + 1}:{v:.4e}" for c, v in zip(row.col, row.data))
+                + "\n")
+    return txt, npy, svm, S
+
+
+def _record(fmt: str, us: float, peak_s: float, peak_m: float) -> None:
+    row_bytes = costmodel.ingest_blockrow_bytes(M // BM, BN, BM, 4)
+    JSON_RECORDS.append({
+        "op": "load_streamed", "format": fmt, "rows": N, "cols": M,
+        "block_rows": GN, "us_per_call": us,
+        "peak_streamed": peak_s, "peak_materialized": peak_m,
+        "ratio": peak_m / max(peak_s, 1.0),
+        "blockrow_bytes": row_bytes,
+        "law_ratio": costmodel.ingest_peak_ratio(
+            GN, M // BM, BN, BM, 4, 1 << 16)})
+
+
+def run() -> List[Row]:
+    JSON_RECORDS.clear()
+    rows: List[Row] = []
+    with tempfile.TemporaryDirectory() as d:
+        txt, npy, svm, S = _fixtures(d)
+        cases = [
+            ("txt",
+             lambda: rio.load_txt_file(txt, (BN, BM)),
+             lambda: rio.load_txt(txt, (BN, BM))),
+            ("svmlight",
+             lambda: rio.load_svmlight_file(svm, (BN, BM), n_features=M),
+             lambda: sparse_mod.from_scipy(S, (BN, BM))),
+            ("npy",
+             lambda: rio.load_npy_rows(npy, (BN, BM)),
+             lambda: from_array(np.load(npy), (BN, BM))),
+        ]
+        for fmt, streamed, materialized in cases:
+            peak_s, _ = _peak(streamed)
+            peak_m, _ = _peak(materialized)
+            us = time_call(streamed, warmup=0, iters=2)
+            _record(fmt, us, peak_s, peak_m)
+            rec = JSON_RECORDS[-1]
+            rows.append((
+                f"io/load_{fmt}_{N}x{M}", us,
+                f"peak_ratio={rec['ratio']:.1f}x;"
+                f"streamed_blockrows="
+                f"{peak_s / rec['blockrow_bytes']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -17,16 +17,16 @@ import os
 
 
 def main() -> None:
-    from benchmarks import (bench_als, bench_estimators, bench_kmeans,
-                            bench_lazy, bench_matmul, bench_serve,
-                            bench_shuffle, bench_slicing, bench_sparse,
-                            bench_transpose)
+    from benchmarks import (bench_als, bench_estimators, bench_io,
+                            bench_kmeans, bench_lazy, bench_matmul,
+                            bench_serve, bench_shuffle, bench_slicing,
+                            bench_sparse, bench_transpose)
     from benchmarks.common import emit
 
     print("name,us_per_call,derived")
     for mod in (bench_transpose, bench_als, bench_shuffle, bench_slicing,
                 bench_kmeans, bench_matmul, bench_lazy, bench_sparse,
-                bench_estimators, bench_serve):
+                bench_estimators, bench_serve, bench_io):
         emit(mod.run())
 
     out = os.environ.get("REPRO_BENCH_JSON", "BENCH_matmul.json")
@@ -53,6 +53,11 @@ def main() -> None:
     with open(serve_out, "w") as f:
         json.dump(bench_serve.JSON_RECORDS, f, indent=2)
     print(f"# wrote {serve_out} ({len(bench_serve.JSON_RECORDS)} records)")
+
+    io_out = os.environ.get("REPRO_BENCH_IO_JSON", "BENCH_io.json")
+    with open(io_out, "w") as f:
+        json.dump(bench_io.JSON_RECORDS, f, indent=2)
+    print(f"# wrote {io_out} ({len(bench_io.JSON_RECORDS)} records)")
 
 
 if __name__ == "__main__":

@@ -137,6 +137,33 @@ def _serve_predict() -> List["_plan.Plan"]:
     return _dedup(reg.warmed_plans())
 
 
+def _ingest_fit() -> List["_plan.Plan"]:
+    """A fit on a STREAMED array: write an svmlight file, load it through
+    the block-row-streaming loader (sparse x straight into a stacked BCOO,
+    the way the paper's CSVM datasets arrive), and lint the plans behind a
+    CascadeSVM fit on it — proving ingestion feeds the estimator layer
+    without densifying or breaking plan discipline."""
+    import os
+    import tempfile
+    from repro.core.io import load_svmlight_file
+    from repro.estimators import CascadeSVM
+    rng = np.random.default_rng(8)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "train.svm")
+        with open(path, "w") as f:
+            for i in range(64):
+                feats = rng.choice(8, size=3, replace=False) + 1
+                vals = rng.normal(size=3)
+                f.write(f"{float(i % 2)} " + " ".join(
+                    f"{c}:{v:.5f}" for c, v in sorted(zip(feats, vals)))
+                    + "\n")
+        x, y = load_svmlight_file(path, (16, 8), n_features=8,
+                                  chunk_bytes=256)
+    yv = np.asarray(y.collect()).ravel()
+    return _captured(lambda: CascadeSVM(max_iter=1, solver_iters=20,
+                                        sv_cap=16).fit(x, yv))
+
+
 SCENARIOS = [
     ("six-op-chain", _six_op_chain),
     ("quickstart", _quickstart),
@@ -146,6 +173,7 @@ SCENARIOS = [
     ("kmeans-fit", _kmeans_fit),
     ("pca-fit", _pca_fit),
     ("serve-predict", _serve_predict),
+    ("ingest-fit", _ingest_fit),
 ]
 
 

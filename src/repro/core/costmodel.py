@@ -501,3 +501,54 @@ def liveness_reorder_pays(naive_peak: float, ordered_peak: float,
     if ordered_peak <= 0:
         return False
     return naive_peak >= factor * ordered_peak
+
+
+# ---------------------------------------------------------------------------
+# Ingestion laws: peak HOST memory of the streaming loaders (paper §4.2.2).
+#
+# The paper's creation routines build a ds-array one block-row at a time so
+# no process holds the full matrix; the streaming loaders in ``core.io``
+# realize that bound and these laws predict it.  ``benchmarks/bench_io.py``
+# measures both sides with tracemalloc and records the ratio, and the
+# ``tests/test_io.py`` acceptance asserts the streamed peak stays under
+# ``INGEST_PEAK_FACTOR`` block-rows.
+# ---------------------------------------------------------------------------
+
+
+#: streamed-load acceptance bound, in units of one block-row's bytes: the
+#: block-row buffer + the transient host copy the device transfer makes +
+#: one raw chunk and its parsed slab.
+INGEST_PEAK_FACTOR = 3.0
+
+
+def ingest_blockrow_bytes(gm: int, bn: int, bm: int, e: int) -> float:
+    """Host bytes of one assembled dense block row (the streaming unit)."""
+    return float(gm) * bn * bm * e
+
+
+def ingest_txt_file_bytes(n: int, m: int, chars_per_value: int = 8) -> float:
+    """On-disk bytes of an (n, m) delimited text file — each value costs
+    its digits plus one separator, the text-inflation the one-shot parser
+    must additionally hold as pages."""
+    return float(n) * m * (chars_per_value + 1)
+
+
+def ingest_peak_host_bytes(gn: int, gm: int, bn: int, bm: int, e: int,
+                           chunk_bytes: int, streamed: bool = True) -> float:
+    """Predicted peak host bytes of a text/npy load.  Streamed: one raw
+    chunk + ~2 block-rows (the fill buffer and the transient copy made by
+    the host->device transfer).  Materialized: the full parsed (n, m)
+    array — ``gn`` block-rows — before blocking even starts."""
+    row = ingest_blockrow_bytes(gm, bn, bm, e)
+    if streamed:
+        return float(chunk_bytes) + 2.0 * row
+    return float(gn) * row
+
+
+def ingest_peak_ratio(gn: int, gm: int, bn: int, bm: int, e: int,
+                      chunk_bytes: int) -> float:
+    """Materialized/streamed peak-host-memory ratio — the law the
+    ``BENCH_io.json`` streamed-vs-materialized measurement should track;
+    grows linearly with the number of block rows."""
+    return (ingest_peak_host_bytes(gn, gm, bn, bm, e, chunk_bytes, False)
+            / ingest_peak_host_bytes(gn, gm, bn, bm, e, chunk_bytes, True))

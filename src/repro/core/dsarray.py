@@ -168,6 +168,33 @@ entry point             what it does
                           recompiles (``cache_hits == requests``)
 ======================  ======================================================
 
+Ingestion (``repro.core.io`` + ``core.readers``; paper §4.2.2 — arrays are
+built one block-row at a time, so no process ever holds the full matrix):
+
+==========================  ==================================================
+entry point                 what it does
+==========================  ==================================================
+``load_txt_file``           streaming delimited-text loader: line-aligned
+                              byte-range chunks (dask ``read_block`` idiom)
+                              fill one block-row buffer; peak host memory
+                              O(block-row), bitwise-equal to ``from_array``
+                              of the full parse
+``load_svmlight_file``      streaming svmlight -> ``(x, y)``; per-block-row
+                              COO triplets pack into ONE stacked BCOO at
+                              shared nse (``sparse.StackedBCOOBuilder``) —
+                              larger-than-dense-RAM sparse data never
+                              densifies
+``load_npy_rows``           memory-mapped ``.npy`` row range streamed block
+                              row by block row; untouched pages never fault
+                              in (density scan only under ``"auto"``)
+``load_npz_sparse``         scipy ``.npz`` -> BCOO ds-array (``from_scipy``)
+``save_blocks`` /           one file per block row, dense or sparse
+``load_blocks``               (data+indices+nse round-trip) — the spill /
+                              checkpoint format
+``save_npy``                dense global array; raises on bcoo (explicit
+                              ``todense()`` instead of a silent densify)
+==========================  ==================================================
+
 Each claim in the tables above is machine-checked by ``repro.analysis``
 (``analysis.check(plan_or_dsarray)``, CLI ``python -m repro.analysis``).
 Rule ids per op row:

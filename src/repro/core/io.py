@@ -1,9 +1,15 @@
 """Parallel-creation / IO routines for ds-arrays (paper §4.2.2).
 
-On PyCOMPSs these spawn one load task per block-row (files are parsed line by
-line); in SPMD the analogue is each host reading only the row-range of the
-file its shard needs.  ``load_npy_rows`` uses a memory-map so only touched
-pages are read — the same "never materialize centrally" property.
+On PyCOMPSs these spawn one load task per block-row (files are parsed line
+by line); in SPMD the analogue is each host reading only the row-range of
+the file its shard needs.  The streaming loaders (``load_txt_file``,
+``load_svmlight_file``) realize the paper's "no process ever holds the full
+matrix" claim literally: the file is read in line-aligned byte ranges
+(:mod:`repro.core.readers`), each range parses into at most one block row,
+and every completed block row moves to the device arena before the next is
+touched — peak HOST memory is O(block-row), not O(n·m), asserted with
+tracemalloc in ``tests/test_io.py``.  ``load_npy_rows`` streams block rows
+off a memory-map the same way, so only touched pages are read.
 """
 
 from __future__ import annotations
@@ -15,14 +21,18 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.core import costmodel
+from repro.core import costmodel, readers
+from repro.core.blocking import ceil_div
 from repro.core.dsarray import DsArray, from_array
 
 
 def _fire(site: str, **info) -> None:
     """Fault-injection hook (``repro.resilience.inject``): loaders raise an
-    injected ``IOLoadError`` before touching the file, so I/O-failure
-    handling is provable without unreadable fixtures on disk."""
+    injected ``IOLoadError`` before touching the file — and the streaming
+    loaders fire once per chunk (``block_row=<i>`` in the info), so
+    mid-stream I/O failure handling is provable without unreadable
+    fixtures on disk.  Loaders keep all assembly state in locals, so an
+    abort mid-stream leaves no partial state behind."""
     ri = sys.modules.get("repro.resilience.inject")
     if ri is not None:
         ri.maybe_fire(site, **info)
@@ -39,6 +49,8 @@ def from_array_auto(arr, block_shape: Tuple[int, int],
     value+index stream smaller than the dense tensor, so every streaming
     op moves fewer bytes).  This is the paper's "sparse datasets load into
     CSR-blocked ds-arrays" decision, made by a cost law instead of a flag.
+    Only ``"auto"`` pays the density scan — ``"dense"``/``"bcoo"`` never
+    touch the input beyond the blocking copy.
     """
     if block_format not in ("auto", "dense", "bcoo"):
         raise ValueError(f"unknown block_format {block_format!r}")
@@ -55,9 +67,180 @@ def from_array_auto(arr, block_shape: Tuple[int, int],
     return a.tosparse() if density < thr else a
 
 
+# ---------------------------------------------------------------------------
+# Streaming block-row assembly
+# ---------------------------------------------------------------------------
+
+
+def _blockrow_to_device(buf: np.ndarray, gm: int, bm: int):
+    """(bn, gm*bm) host block-row buffer -> (gm, bn, bm) device array."""
+    import jax.numpy as jnp
+    bn = buf.shape[0]
+    return jnp.asarray(buf.reshape(bn, gm, bm).transpose(1, 0, 2))
+
+
+def _stack_blockrows(blockrows, n: int, m: int,
+                     block_shape: Tuple[int, int]) -> DsArray:
+    """Stack streamed (gm, bn, bm) device block rows into a ds-array."""
+    import jax.numpy as jnp
+    from repro.core.blocking import BlockGrid
+    return DsArray(jnp.stack(blockrows, axis=0),
+                   BlockGrid((n, m), tuple(block_shape)))
+
+
+def load_txt_file(path: str, block_shape: Tuple[int, int],
+                  delimiter: str = ",", dtype=np.float32,
+                  n_features: Optional[int] = None,
+                  chunk_bytes: int = readers.DEFAULT_CHUNK_BYTES) -> DsArray:
+    """Streaming delimited-text loader (dislib ``load_txt_file`` surface).
+
+    The file is consumed in line-aligned byte ranges; each parses into a
+    ``(k, m)`` slab that fills the current ``(bn, gm*bm)`` block-row
+    buffer.  A full buffer converts to one device block row and a fresh
+    zero buffer takes its place, so the final partial block row is
+    zero-padded by construction (``pad_state`` stays PAD_ZERO).  Peak host
+    memory: one chunk + one parsed slab + ~2 block-row buffers (the device
+    copy is transient) — never the n×m matrix.  Bitwise-equal to
+    ``from_array(np.loadtxt(path), block_shape)``.
+    """
+    _fire("io_load", source="load_txt_file", path=path)
+    bn, bm = int(block_shape[0]), int(block_shape[1])
+    m = None if n_features is None else int(n_features)
+    gm = buf = None
+    fill = n = 0
+    blockrows = []
+    for chunk in readers.iter_line_chunks(path, chunk_bytes):
+        _fire("io_load", source="load_txt_file", path=path,
+              block_row=len(blockrows))
+        arr = readers.parse_txt_chunk(chunk, delimiter, dtype)
+        if arr is None:
+            continue
+        if m is None:
+            m = arr.shape[1]
+        if buf is None:
+            gm = max(1, ceil_div(m, bm))
+            buf = np.zeros((bn, gm * bm), dtype)
+        if arr.shape[1] != m:
+            raise ValueError(f"{path}: ragged row width {arr.shape[1]} "
+                             f"(expected {m})")
+        done = 0
+        while done < arr.shape[0]:
+            take = min(bn - fill, arr.shape[0] - done)
+            buf[fill:fill + take, :m] = arr[done:done + take]
+            fill += take
+            done += take
+            n += take
+            if fill == bn:
+                blockrows.append(_blockrow_to_device(buf, gm, bm))
+                buf = np.zeros((bn, gm * bm), dtype)
+                fill = 0
+    if fill:
+        blockrows.append(_blockrow_to_device(buf, gm, bm))
+    if not blockrows:
+        raise ValueError(f"{path}: no data rows")
+    return _stack_blockrows(blockrows, n, m, (bn, bm))
+
+
+def load_svmlight_file(path: str, block_shape: Tuple[int, int],
+                       n_features: int, store_sparse: bool = True,
+                       dtype=np.float32, zero_based: bool = False,
+                       nse: Optional[int] = None,
+                       chunk_bytes: int = readers.DEFAULT_CHUNK_BYTES,
+                       ) -> Tuple[DsArray, DsArray]:
+    """Streaming svmlight/libsvm loader -> ``(x, y)`` (dislib surface).
+
+    Each line-aligned chunk parses into COO triplets with chunk-local row
+    ids; triplets route into the current block row and every completed
+    block row is packed immediately — sparse rows through
+    :class:`repro.core.sparse.StackedBCOOBuilder` (one stacked BCOO at a
+    shared ``nse``, never densified), dense rows through a scatter into a
+    ``(bn, gm*bm)`` buffer.  Labels assemble the same way into an (n, 1)
+    dense ds-array with block shape ``(bn, 1)``.  Feature ids are 1-based
+    unless ``zero_based=True`` (the sklearn convention); an id outside
+    ``[0, n_features)`` after the shift raises, which catches a 0/1-based
+    mismatch instead of mispacking.  Peak host memory is O(block-row);
+    the sparse result is bitwise-equal to ``from_scipy`` of the same
+    triplets (same default nse = max block nnz).
+    """
+    _fire("io_load", source="load_svmlight_file", path=path)
+    from repro.core import sparse as sparse_mod
+    bn, bm = int(block_shape[0]), int(block_shape[1])
+    n_features = int(n_features)
+    gm = max(1, ceil_div(n_features, bm))
+    builder = sparse_mod.StackedBCOOBuilder(
+        n_features, (bn, bm), dtype, nse) if store_sparse else None
+    xbuf = None if store_sparse else np.zeros((bn, gm * bm), dtype)
+    pend = ([], [], [])                      # sparse: per-segment triplets
+    ybuf = np.zeros((bn, 1), dtype)
+    x_blockrows, y_blockrows = [], []
+    fill = n = 0
+
+    def _flush(k: int) -> None:
+        nonlocal xbuf, ybuf, pend
+        if store_sparse:
+            parts = [np.concatenate(p) if p else np.empty(0, np.int64)
+                     for p in pend[:2]]
+            vparts = np.concatenate(pend[2]) if pend[2] else \
+                np.empty(0, dtype)
+            builder.append_blockrow(parts[0], parts[1], vparts, k)
+            pend = ([], [], [])
+        else:
+            x_blockrows.append(_blockrow_to_device(xbuf, gm, bm))
+            xbuf = np.zeros((bn, gm * bm), dtype)
+        y_blockrows.append(_blockrow_to_device(ybuf, 1, 1))
+        ybuf = np.zeros((bn, 1), dtype)
+
+    for chunk in readers.iter_line_chunks(path, chunk_bytes):
+        _fire("io_load", source="load_svmlight_file", path=path,
+              block_row=n // bn)
+        labels, rows, cols, vals = readers.parse_svmlight_chunk(
+            chunk, dtype, zero_based)
+        if cols.size and int(cols.max()) >= n_features:
+            raise ValueError(
+                f"{path}: feature id {int(cols.max())} out of range for "
+                f"n_features={n_features} with zero_based={zero_based} "
+                f"(a 0-based file read as 1-based shifts ids past the end)")
+        k = len(labels)
+        done = 0
+        while done < k:
+            take = min(bn - fill, k - done)
+            lo = np.searchsorted(rows, done)
+            hi = np.searchsorted(rows, done + take)
+            if store_sparse:
+                pend[0].append(rows[lo:hi] - done + fill)
+                pend[1].append(cols[lo:hi])
+                pend[2].append(vals[lo:hi])
+            else:
+                xbuf[rows[lo:hi] - done + fill, cols[lo:hi]] = vals[lo:hi]
+            ybuf[fill:fill + take, 0] = labels[done:done + take]
+            fill += take
+            done += take
+            n += take
+            if fill == bn:
+                _flush(bn)
+                fill = 0
+    if fill:
+        _flush(fill)
+    if n == 0:
+        raise ValueError(f"{path}: no data rows")
+    if store_sparse:
+        x = builder.finalize()
+    else:
+        x = _stack_blockrows(x_blockrows, n, n_features, (bn, bm))
+    y = _stack_blockrows(y_blockrows, n, 1, (bn, 1))
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# Materializing loaders (small files / full-array paths)
+# ---------------------------------------------------------------------------
+
+
 def load_txt(path: str, block_shape: Tuple[int, int], delimiter: str = ",",
              dtype=np.float32, block_format: str = "dense") -> DsArray:
-    """Load a delimited text file into a ds-array (one parse per block-row)."""
+    """Load a delimited text file into a ds-array (single full-file parse —
+    prefer :func:`load_txt_file` for anything that does not trivially fit
+    in host memory)."""
     _fire("io_load", source="load_txt", path=path)
     data = np.loadtxt(path, delimiter=delimiter, dtype=dtype, ndmin=2)
     return from_array_auto(data, block_shape, block_format)
@@ -66,12 +249,34 @@ def load_txt(path: str, block_shape: Tuple[int, int], delimiter: str = ",",
 def load_npy_rows(path: str, block_shape: Tuple[int, int],
                   row_range: Optional[Tuple[int, int]] = None,
                   block_format: str = "dense") -> DsArray:
-    """Memory-mapped .npy load; reads only the requested row range."""
+    """Memory-mapped .npy load; reads only the requested row range.
+
+    The default dense path streams block rows straight off the map — each
+    ``(bn, m)`` slice copies into a block-row buffer and moves to the
+    device, so host memory stays O(block-row) and untouched pages are
+    never faulted in.  ``"auto"`` (density scan) and ``"bcoo"`` must read
+    the range in full and materialize it.
+    """
     _fire("io_load", source="load_npy_rows", path=path)
     mm = np.load(path, mmap_mode="r")
+    if mm.ndim == 1:
+        mm = mm.reshape(-1, 1)
     if row_range is not None:
         mm = mm[row_range[0]: row_range[1]]
-    return from_array_auto(np.asarray(mm), block_shape, block_format)
+    if block_format != "dense":
+        return from_array_auto(np.asarray(mm), block_shape, block_format)
+    bn, bm = int(block_shape[0]), int(block_shape[1])
+    n, m = mm.shape
+    if n == 0:
+        raise ValueError(f"{path}: empty row range")
+    gm = max(1, ceil_div(m, bm))
+    blockrows = []
+    for i in range(0, n, bn):
+        buf = np.zeros((bn, gm * bm), mm.dtype)
+        k = min(bn, n - i)
+        buf[:k, :m] = mm[i:i + k]
+        blockrows.append(_blockrow_to_device(buf, gm, bm))
+    return _stack_blockrows(blockrows, n, m, (bn, bm))
 
 
 def load_npz_sparse(path: str, block_shape: Tuple[int, int]) -> DsArray:
@@ -83,20 +288,55 @@ def load_npz_sparse(path: str, block_shape: Tuple[int, int]) -> DsArray:
     return sparse_mod.from_scipy(ssp.load_npz(path), block_shape)
 
 
+# ---------------------------------------------------------------------------
+# Spill / round-trip formats
+# ---------------------------------------------------------------------------
+
+
 def save_npy(path: str, a: DsArray) -> None:
+    """Write the dense global array.  BCOO ds-arrays raise — ``collect``
+    would densify the whole matrix silently; use :func:`save_blocks`
+    (sparse-aware) or ``a.todense()`` when the densification is meant."""
+    if a.block_format == "bcoo":
+        raise ValueError(
+            "save_npy writes the dense n x m array and would silently "
+            "densify a BCOO ds-array; use save_blocks(dirpath, a) for a "
+            "sparse-preserving spill, or save_npy(path, a.todense()) to "
+            "densify explicitly")
     np.save(path, np.asarray(a.collect()))
 
 
 def save_blocks(dirpath: str, a: DsArray) -> None:
-    """One file per block-row (what each PyCOMPSs worker / TPU host writes)."""
+    """One file per block-row (what each PyCOMPSs worker / TPU host
+    writes).  Dense arrays spill one ``blockrow_*.npy`` per block row;
+    BCOO arrays spill ``blockrow_*.data.npy`` + ``blockrow_*.indices.npy``
+    and record nse/flags in the metadata, so the round trip preserves the
+    block format without ever densifying."""
     os.makedirs(dirpath, exist_ok=True)
-    blocks = np.asarray(a.ensure_zero_pad().blocks)   # canonical on-disk form
+    a = a.ensure_zero_pad()
     meta = {"shape": list(a.shape), "block_shape": list(a.block_shape),
-            "stacked_grid": list(a.stacked_grid), "dtype": str(blocks.dtype)}
+            "stacked_grid": list(a.stacked_grid),
+            "format": a.block_format}
+    if a.block_format == "bcoo":
+        sp = a.blocks
+        data = np.asarray(sp.data)
+        indices = np.asarray(sp.indices)
+        meta.update(dtype=str(data.dtype), nse=int(sp.nse),
+                    indices_sorted=bool(sp.indices_sorted),
+                    unique_indices=bool(sp.unique_indices))
+        rows = [(f"blockrow_{i:05d}.data.npy", data[i]) for i in
+                range(data.shape[0])]
+        rows += [(f"blockrow_{i:05d}.indices.npy", indices[i]) for i in
+                 range(indices.shape[0])]
+    else:
+        blocks = np.asarray(a.blocks)   # canonical on-disk form
+        meta["dtype"] = str(blocks.dtype)
+        rows = [(f"blockrow_{i:05d}.npy", blocks[i]) for i in
+                range(blocks.shape[0])]
     with open(os.path.join(dirpath, "meta.json"), "w") as f:
         json.dump(meta, f)
-    for i in range(blocks.shape[0]):
-        np.save(os.path.join(dirpath, f"blockrow_{i:05d}.npy"), blocks[i])
+    for name, arr in rows:
+        np.save(os.path.join(dirpath, name), arr)
 
 
 def load_blocks(dirpath: str) -> DsArray:
@@ -107,8 +347,19 @@ def load_blocks(dirpath: str) -> DsArray:
     with open(os.path.join(dirpath, "meta.json")) as f:
         meta = json.load(f)
     gn = meta["stacked_grid"][0]
+    grid = BlockGrid(tuple(meta["shape"]), tuple(meta["block_shape"]))
+    if meta.get("format", "dense") == "bcoo":
+        from jax.experimental.sparse import BCOO
+        data = np.stack([np.load(os.path.join(
+            dirpath, f"blockrow_{i:05d}.data.npy")) for i in range(gn)])
+        indices = np.stack([np.load(os.path.join(
+            dirpath, f"blockrow_{i:05d}.indices.npy")) for i in range(gn)])
+        blocks = BCOO((jnp.asarray(data), jnp.asarray(indices)),
+                      shape=grid.stacked_shape,
+                      indices_sorted=meta.get("indices_sorted", False),
+                      unique_indices=meta.get("unique_indices", False))
+        return DsArray(blocks, grid)
     rows = [np.load(os.path.join(dirpath, f"blockrow_{i:05d}.npy"))
             for i in range(gn)]
     blocks = jnp.asarray(np.stack(rows, axis=0))
-    grid = BlockGrid(tuple(meta["shape"]), tuple(meta["block_shape"]))
     return DsArray(blocks, grid)

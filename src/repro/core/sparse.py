@@ -114,26 +114,48 @@ def _gather_dense_at(sp: BCOO, dense_blocks: jnp.ndarray) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def _pack_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
-              cell: np.ndarray, gn: int, gm: int, bn: int, bm: int,
-              nse: Optional[int] = None) -> BCOO:
-    """Bucket block-sorted COO triplets into the stacked BCOO (pure NumPy:
-    no XLA program per geometry).  ``cell`` = gi*gm + gj, non-decreasing;
-    ``rows``/``cols`` are block-local.  Short blocks pad with the
-    out-of-bounds (bn, bm) sentinel and zero data."""
-    counts = np.bincount(cell, minlength=gn * gm)
+def _pack_coo_arrays(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                     cell: np.ndarray, n_cells: int, bn: int, bm: int,
+                     nse: Optional[int] = None, check_nse: bool = True,
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Bucket block-sorted COO triplets into ``(data, indices)`` host arrays
+    of shape ``(n_cells, nse)`` / ``(n_cells, nse, 2)`` (pure NumPy: no XLA
+    program per geometry).  ``cell`` is non-decreasing; ``rows``/``cols``
+    are block-local.  Short cells pad with the out-of-bounds (bn, bm)
+    sentinel and zero data.  With ``check_nse`` an explicit capacity below
+    the real max cell nnz raises instead of silently dropping entries;
+    pre-checked hot paths (the serve batcher) opt out.
+    """
+    counts = np.bincount(cell, minlength=n_cells)
+    maxn = int(counts.max()) if counts.size else 0
     if nse is None:
-        nse = max(1, int(counts.max())) if counts.size else 1
+        nse = maxn
     nse = max(1, int(nse))
-    data = np.zeros((gn * gm, nse), dtype=vals.dtype)
-    indices = np.full((gn * gm, nse, 2), (bn, bm), dtype=np.int32)
+    if check_nse and maxn > nse:
+        raise ValueError(
+            f"nse={nse} cannot hold the densest block ({maxn} nnz); "
+            f"entries would be silently dropped.  Pass nse>=max_block_nnz "
+            f"or check_nse=False if the capacity was already verified.")
+    data = np.zeros((n_cells, nse), dtype=vals.dtype)
+    indices = np.full((n_cells, nse, 2), (bn, bm), dtype=np.int32)
     slot = np.arange(len(cell)) - np.repeat(
         np.concatenate([[0], np.cumsum(counts)[:-1]]), counts)
-    keep = slot < nse                  # explicit nse may truncate
+    keep = slot < nse                  # unchecked explicit nse may truncate
     cell, slot = cell[keep], slot[keep]
     data[cell, slot] = vals[keep]
     indices[cell, slot, 0] = rows[keep]
     indices[cell, slot, 1] = cols[keep]
+    return data, indices
+
+
+def _pack_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+              cell: np.ndarray, gn: int, gm: int, bn: int, bm: int,
+              nse: Optional[int] = None, check_nse: bool = False) -> BCOO:
+    """Bucket block-sorted COO triplets into the stacked BCOO (see
+    :func:`_pack_coo_arrays`).  ``cell`` = gi*gm + gj."""
+    data, indices = _pack_coo_arrays(rows, cols, vals, cell, gn * gm,
+                                     bn, bm, nse, check_nse)
+    nse = data.shape[1]
     return BCOO((jnp.asarray(data.reshape(gn, gm, nse)),
                  jnp.asarray(indices.reshape(gn, gm, nse, 2))),
                 shape=(gn, gm, bn, bm), indices_sorted=True,
@@ -244,19 +266,21 @@ def random_sparse(key, shape: Tuple[int, int], block_shape: Tuple[int, int],
 
 
 def from_scipy(mat, block_shape: Tuple[int, int],
-               nse: Optional[int] = None) -> "DsArray":
+               nse: Optional[int] = None,
+               check_nse: bool = True) -> "DsArray":
     """scipy.sparse matrix -> BCOO-blocked ds-array, without densifying.
 
     The paper loads CSVM datasets straight into CSR-blocked ds-arrays; here
     the COO triplets are bucketed by block (pure NumPy index math, touching
     only the nnz entries) and packed into the stacked BCOO with ``nse`` =
     the max block nnz.  An explicit ``nse`` fixes the stored-entry capacity
-    instead (it must be >= the max block nnz — entries past the capacity
-    would be silently dropped, so callers declaring a capacity check
-    :func:`max_block_nnz` first): the serving layer packs every request
-    batch of one geometry bucket at the bucket's declared capacity, which
-    keeps the plan-cache leaf signature — and therefore the compiled
-    program — identical across batches with different nnz.
+    instead: the serving layer packs every request batch of one geometry
+    bucket at the bucket's declared capacity, which keeps the plan-cache
+    leaf signature — and therefore the compiled program — identical across
+    batches with different nnz.  An explicit ``nse`` below the real max
+    block nnz raises ``ValueError`` (the bincount guard costs O(nnz));
+    pre-checked hot paths that already compared :func:`max_block_nnz`
+    against the capacity pass ``check_nse=False`` to skip the raise.
     """
     from repro.core.dsarray import DsArray, PAD_ZERO
     coo = mat.tocoo()
@@ -268,7 +292,8 @@ def from_scipy(mat, block_shape: Tuple[int, int],
     order = np.argsort(cell, kind="stable")
     blocks = _pack_coo((coo.row[order] % bn).astype(np.int32),
                        (coo.col[order] % bm).astype(np.int32),
-                       coo.data[order], cell[order], gn, gm, bn, bm, nse)
+                       coo.data[order], cell[order], gn, gm, bn, bm, nse,
+                       check_nse=check_nse)
     return DsArray(blocks, grid, PAD_ZERO)
 
 
@@ -286,6 +311,97 @@ def max_block_nnz(mat, block_shape: Tuple[int, int]) -> int:
     gn, gm, bn, bm = grid.stacked_shape
     cell = (coo.row // bn) * gm + coo.col // bm
     return int(np.bincount(cell, minlength=gn * gm).max())
+
+
+class StackedBCOOBuilder:
+    """Incremental stacked-BCOO assembly, one block row at a time.
+
+    The streaming svmlight loader hands each completed block row's COO
+    triplets here; they are bucketed by block column with the same pure
+    NumPy pack as :func:`from_scipy` (sorted by (row, col) inside each
+    block so ``indices_sorted`` holds) and moved to the device arena
+    immediately — host memory stays O(one block row's triplets), never
+    O(nnz of the file).
+
+    With ``nse=None`` (default) each appended row packs at its own max
+    block nnz and :meth:`finalize` pads every row up to the global max —
+    bit-identical capacity to the :func:`from_scipy` default.  An explicit
+    ``nse`` fixes the capacity up front and overflowing rows raise
+    ``ValueError`` at append time (no silent truncation mid-stream).
+    """
+
+    def __init__(self, m: int, block_shape: Tuple[int, int],
+                 dtype=np.float32, nse: Optional[int] = None):
+        self.bn, self.bm = int(block_shape[0]), int(block_shape[1])
+        self.m = int(m)
+        self.gm = max(1, ceil_div(self.m, self.bm))
+        self.dtype = np.dtype(dtype)
+        self.nse = None if nse is None else max(1, int(nse))
+        self.n_rows = 0                       # logical rows appended so far
+        self._data: list = []                 # per block row: jnp (gm, nse_i)
+        self._indices: list = []              # per block row: jnp (gm, nse_i, 2)
+
+    def append_blockrow(self, rows: np.ndarray, cols: np.ndarray,
+                        vals: np.ndarray, n_rows: int) -> None:
+        """Add one block row from triplets (``rows`` block-local in
+        [0, bn), ``cols`` global in [0, m), any order)."""
+        if not 0 < n_rows <= self.bn:
+            raise ValueError(f"n_rows={n_rows} outside (0, bn={self.bn}]")
+        rows = np.asarray(rows, np.int32)
+        cols = np.asarray(cols, np.int32)
+        vals = np.asarray(vals, self.dtype)
+        if cols.size and (int(cols.max()) >= self.m or int(cols.min()) < 0):
+            raise ValueError(
+                f"feature id {int(cols.max())} out of range for "
+                f"n_features={self.m} (0-based after shift — a 0-based "
+                f"file read as 1-based hits this)")
+        cell = cols // self.bm
+        # sort by (block, row, col) so indices_sorted holds (int64 key:
+        # gm*bn*bm can pass 2**31)
+        order = np.argsort(cell.astype(np.int64) * (self.bn * self.bm)
+                           + rows.astype(np.int64) * self.bm + cols % self.bm,
+                           kind="stable")
+        data, indices = _pack_coo_arrays(
+            rows[order], (cols % self.bm)[order], vals[order], cell[order],
+            self.gm, self.bn, self.bm, nse=self.nse, check_nse=True)
+        # copy=True: jnp.asarray would zero-copy an aligned host buffer,
+        # RETAINING one host array per block row — O(file) host memory.
+        # An owned device copy frees the host side immediately.
+        self._data.append(jnp.array(data, copy=True))
+        self._indices.append(jnp.array(indices, copy=True))
+        self.n_rows += int(n_rows)
+
+    def finalize(self) -> "DsArray":
+        """Stack the appended block rows into a BCOO ds-array of shape
+        ``(n_rows, m)``.  Per-row capacities pad up to the target nse on
+        device (data pads with zeros, indices with the OOB sentinel, so
+        sortedness and the pad invariant are preserved)."""
+        from repro.core.dsarray import DsArray, PAD_ZERO
+        if not self._data:
+            raise ValueError("no block rows appended")
+        target = self.nse if self.nse is not None else \
+            max(1, max(d.shape[1] for d in self._data))
+        sentinel = jnp.asarray([self.bn, self.bm], jnp.int32)
+        data_rows, index_rows = [], []
+        for d, ix in zip(self._data, self._indices):
+            pad = target - d.shape[1]
+            if pad:
+                d = jnp.concatenate(
+                    [d, jnp.zeros((self.gm, pad), d.dtype)], axis=1)
+                ix = jnp.concatenate(
+                    [ix, jnp.broadcast_to(sentinel, (self.gm, pad, 2))],
+                    axis=1)
+            data_rows.append(d)
+            index_rows.append(ix)
+        blocks = BCOO((jnp.stack(data_rows), jnp.stack(index_rows)),
+                      shape=(len(data_rows), self.gm, self.bn, self.bm),
+                      indices_sorted=True, unique_indices=True)
+        grid = BlockGrid((self.n_rows, self.m), (self.bn, self.bm))
+        if grid.stacked_shape[0] != len(data_rows):
+            raise ValueError(
+                f"appended {len(data_rows)} block rows but {self.n_rows} "
+                f"logical rows need {grid.stacked_shape[0]}")
+        return DsArray(blocks, grid, PAD_ZERO)
 
 
 def fetch_row_dense(a: "DsArray", i: int) -> jnp.ndarray:

@@ -31,7 +31,11 @@ site                  where / info keys
 ``fit_iteration``     each outer iteration of the checkpointable estimator
                       fits (``estimator=<class name>``, ``iteration=<n>``)
 ``io_load``           ``core.io`` loaders and ``checkpoint.restore``
-                      (``source=<loader name>``)
+                      (``source=<loader name>``); the streaming loaders
+                      (``load_txt_file``/``load_svmlight_file``) also fire
+                      once per chunk with ``block_row=<i>``, so mid-stream
+                      failures are injectable — an abort leaves no partial
+                      state (assembly is all-local)
 ``serve_dispatch``    ``serve.server.PredictServer`` per dispatch attempt
                       (``mode="batched"`` for a micro-batched plan launch,
                       ``mode="single"`` for the shed-batching unbatched

@@ -219,7 +219,8 @@ def assemble(payloads: Sequence, bucket: GeometryBucket) -> Optional[DsArray]:
     shape = (bucket.block_rows, bucket.n_features)
     if _sparse.max_block_nnz(batch, shape) > bucket.nse:
         return None
-    return _sparse.from_scipy(batch, shape, nse=bucket.nse)
+    # capacity just verified above — skip from_scipy's own overflow guard
+    return _sparse.from_scipy(batch, shape, nse=bucket.nse, check_nse=False)
 
 
 def split_rows(rows: np.ndarray, sizes: Sequence[int]) -> List[np.ndarray]:

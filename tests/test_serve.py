@@ -522,3 +522,77 @@ def test_future_timeout():
     with pytest.raises(TimeoutError):
         f.result(timeout=0.01)
     assert not f.done()
+
+
+# ---------------------------------------------------------------------------
+# AOT input donation (Plan.compile_aot donate_argnums)
+# ---------------------------------------------------------------------------
+
+
+def test_compile_aot_accepts_donate_argnums(ridge):
+    """Regression: ``Plan.compile_aot`` had no ``donate_argnums`` — the
+    serve warm path could not mark the packed request batch donatable, so
+    on accelerators every predict paid an extra output allocation."""
+    plan_mod.clear_cache()
+    x = from_array(jnp.asarray(_rows(4)), (4, N_FEATURES))
+    p = ridge.predict_plan(x)
+    donate = tuple(i for i, leaf in enumerate(p.leaves)
+                   if getattr(leaf, "value", None) is x)
+    assert donate, "the batch leaf must appear in the plan's leaves"
+    assert p.compile_aot(donate_argnums=donate) is True
+    # idempotent: the donated executable is cached under the same key
+    assert p.compile_aot(donate_argnums=donate) is False
+
+
+def test_donated_warm_serving_output_unchanged(ridge):
+    """With ``donate_inputs=True`` (the register default), the warmed
+    executables consume the packed batch — served outputs stay bitwise
+    equal to direct predict and the steady-state stream still adds zero
+    plan-cache misses / opt runs / AOT compiles."""
+    from repro.serve.compilecache import representative_input
+
+    plan_mod.clear_cache()
+    reg = _registry(ridge)
+    model = reg.get("m")
+    assert model.cache.donate_inputs
+    # the donation map finds the batch leaf for every declared bucket
+    for bucket in model.cache.spec.buckets():
+        x = representative_input(bucket)
+        p = ridge.predict_plan(x)
+        assert model.cache._donate_argnums(p, x) != ()
+        # never the fitted-parameter leaves: only leaves holding x itself
+        for i in model.cache._donate_argnums(p, x):
+            assert p.leaves[i].value is x
+
+    srv = serve.PredictServer(reg)
+    warm = plan_mod.cache_stats()
+    batches, served = [], []
+    for i in range(5):
+        rows = _rows(1 + (i % 3), seed=40 + i)
+        f = srv.submit("m", rows)
+        srv.pump()
+        batches.append(rows)
+        served.append(f.result())
+    after = plan_mod.cache_stats()
+    assert after["misses"] == warm["misses"]
+    assert after["opt_runs"] == warm["opt_runs"]
+    assert after["aot_compiles"] == warm["aot_compiles"]
+    # direct predict runs at natural geometry (own plans), so only after
+    # the frozen-stats window closes
+    for rows, got in zip(batches, served):
+        assert np.array_equal(got, _direct_dense(ridge, rows))
+
+
+def test_donation_opt_out_warms_without_aliasing(ridge):
+    from repro.serve.compilecache import (PredictCompileCache,
+                                          representative_input)
+
+    plan_mod.clear_cache()
+    spec = BucketSpec(N_FEATURES, batch_sizes=(4,), block_rows=4)
+    cache = PredictCompileCache(ridge, spec, donate_inputs=False)
+    bucket = spec.buckets()[0]
+    x = representative_input(bucket)
+    p = ridge.predict_plan(x)
+    assert cache._donate_argnums(p, x) == ()
+    assert cache.warm() == 1
+    assert cache.warm() == 0
