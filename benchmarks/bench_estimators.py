@@ -25,7 +25,7 @@ from typing import Dict, List
 import jax
 import numpy as np
 
-from benchmarks.common import Row, time_call
+from benchmarks.common import Row, obs_fields, time_call
 from repro.core import from_array, plan, random_sparse
 from repro.estimators import CascadeSVM, Ridge
 
@@ -46,6 +46,7 @@ def _record(estimator: str, op: str, size: int, density: float, us: float,
         "opt_skips": cache.get("opt_skips", 0),
         "plan_hits": cache.get("hits", 0),
         "plan_misses": cache.get("misses", 0),
+        **obs_fields(),
     })
 
 

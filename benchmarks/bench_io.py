@@ -24,7 +24,7 @@ from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
-from benchmarks.common import Row, time_call
+from benchmarks.common import Row, obs_fields, time_call
 from repro.core import costmodel
 from repro.core import io as rio
 from repro.core import sparse as sparse_mod
@@ -78,7 +78,7 @@ def _record(fmt: str, us: float, peak_s: float, peak_m: float) -> None:
         "ratio": peak_m / max(peak_s, 1.0),
         "blockrow_bytes": row_bytes,
         "law_ratio": costmodel.ingest_peak_ratio(
-            GN, M // BM, BN, BM, 4, 1 << 16)})
+            GN, M // BM, BN, BM, 4, 1 << 16), **obs_fields()})
 
 
 def run() -> List[Row]:

@@ -26,7 +26,7 @@ import jax
 import numpy as np
 
 import repro
-from benchmarks.common import Row, time_call
+from benchmarks.common import Row, obs_fields, time_call
 from repro.core import costmodel, from_array, plan
 
 # filled by run(); dumped by benchmarks/run.py as BENCH_lazy.json
@@ -44,7 +44,7 @@ def _chain(a):
 def _record(op: str, size: int, us: float, speedup: float = 0.0) -> None:
     JSON_RECORDS.append({"op": op, "size": size, "us_per_call": us,
                          "backend": jax.default_backend(),
-                         "speedup": round(speedup, 3)})
+                         "speedup": round(speedup, 3), **obs_fields()})
 
 
 def run() -> List[Row]:

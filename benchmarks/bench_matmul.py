@@ -22,7 +22,7 @@ from typing import Dict, List
 import jax
 import numpy as np
 
-from benchmarks.common import Row, time_call
+from benchmarks.common import Row, obs_fields, time_call
 from repro.core import costmodel, from_array
 from repro.kernels.matmul.ops import local_matmul
 
@@ -38,7 +38,8 @@ def _record(op: str, size: int, us: float, backend: str) -> None:
     the cross-PR perf trajectory."""
     JSON_RECORDS.append({"op": op, "size": size, "us_per_call": us,
                          "backend": backend,
-                         "interpret": backend == "interpret"})
+                         "interpret": backend == "interpret",
+                         **obs_fields()})
 
 
 def _gemm_rows(size: int, block: int, iters: int) -> List[Row]:

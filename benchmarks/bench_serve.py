@@ -24,7 +24,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.common import Row
+from benchmarks.common import Row, obs_fields
 from repro.core import from_array, plan
 import repro.serve as serve
 
@@ -71,7 +71,8 @@ def _record(mode: str, fmt: str, batch: int, us_p50: float, us_p99: float,
             rps: float, extra: Dict) -> None:
     JSON_RECORDS.append({
         "mode": mode, "format": fmt, "batch": batch, "features": FEATURES,
-        "p50_us": us_p50, "p99_us": us_p99, "requests_per_s": rps, **extra})
+        "p50_us": us_p50, "p99_us": us_p99, "requests_per_s": rps, **extra,
+        **obs_fields()})
 
 
 def _stream(srv, fmt: str, batch: int, count: int) -> Dict[str, float]:

@@ -26,7 +26,7 @@ from typing import Dict, List
 import jax
 import numpy as np
 
-from benchmarks.common import Row, time_call
+from benchmarks.common import Row, obs_fields, time_call
 from repro.core import costmodel, from_array, random_sparse
 from repro.core import sparse as sparse_mod
 from repro.core.dsarray import matmul_ta
@@ -44,7 +44,8 @@ SWEEP_DENSITIES = (0.002, 0.005, 0.01, 0.05, 0.1, 0.2, 0.35, 0.5)
 def _record(op: str, size: int, density: float, us: float, backend: str,
             nse: int) -> None:
     JSON_RECORDS.append({"op": op, "size": size, "density": density,
-                         "us_per_call": us, "backend": backend, "nse": nse})
+                         "us_per_call": us, "backend": backend, "nse": nse,
+                         **obs_fields()})
 
 
 def _mk(size: int, density: float, block: int):

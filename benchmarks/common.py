@@ -32,3 +32,20 @@ def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
 def emit(rows: List[Row]) -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+#: the registry slice every BENCH_*.json record embeds — the cache/retry
+#: discipline behind a timing, so a perf regression in the trajectory can
+#: be read against recompiles/retries without re-running anything
+_OBS_KEYS = ("plan.hits", "plan.misses", "plan.launches", "plan.opt_runs",
+             "plan.opt_skips", "plan.eager_launches", "plan.aot_compiles",
+             "resilience.retries", "resilience.degradations")
+
+
+def obs_fields() -> dict:
+    """``{"obs": {...}}`` for merging into a JSON record via ``**``."""
+    from repro import obs
+
+    snap = obs.snapshot("plan")
+    snap.update(obs.snapshot("resilience"))
+    return {"obs": {k: int(snap.get(k, 0)) for k in _OBS_KEYS}}

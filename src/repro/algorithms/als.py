@@ -29,7 +29,8 @@ import numpy as np
 from repro.core.dsarray import DsArray, from_array, random_array
 from repro.core.dataset_baseline import Dataset
 from repro.core.structural import gram
-from repro.estimators.base import BaseEstimator, _FitCheckpoint, _fire
+from repro.estimators.base import BaseEstimator, _FitCheckpoint, \
+    _fire, _iter_span
 
 
 def _solve_gram_ds(y: DsArray, reg: float) -> jnp.ndarray:
@@ -103,17 +104,18 @@ class ALS(BaseEstimator):
         for it in range(start_it, self.max_iter + 1):
             _fire("fit_iteration", estimator=type(self).__name__,
                   iteration=it)
-            u, v = self._step(r, rt, u, v)
-            done = False
-            if self.check_convergence:
-                err = self._rmse(r, u, v)
-                done = abs(prev - err) < self.tol
-                prev = err
-            if ckpt is not None:
-                ckpt.save(it, {"u": u, "v": v, "prev": float(prev),
-                               "done": bool(done)})
-            if done:
-                break
+            with _iter_span(self, it):
+                u, v = self._step(r, rt, u, v)
+                done = False
+                if self.check_convergence:
+                    err = self._rmse(r, u, v)
+                    done = abs(prev - err) < self.tol
+                    prev = err
+                if ckpt is not None:
+                    ckpt.save(it, {"u": u, "v": v, "prev": float(prev),
+                                   "done": bool(done)})
+                if done:
+                    break
         self.u_, self.v_, self.n_iter_ = u, v, it
         return self
 

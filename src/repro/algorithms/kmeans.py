@@ -25,7 +25,8 @@ from jax.experimental.sparse import BCOO
 
 from repro.core.dsarray import DsArray, from_array
 from repro.core.dataset_baseline import Dataset
-from repro.estimators.base import BaseEstimator, _FitCheckpoint, _fire
+from repro.estimators.base import BaseEstimator, _FitCheckpoint, \
+    _fire, _iter_span
 
 
 def _row_sq_norms(x: DsArray) -> jnp.ndarray:
@@ -249,9 +250,15 @@ class KMeans(BaseEstimator):
                                  np.random.default_rng(self.seed), row_valid,
                                  x_sq)
         if checkpoint_dir is None and resume is None:
-            # clean path: the device-resident jitted while_loop, untouched
-            centers, _, iters = _kmeans_run(x.blocks, init, row_valid, x_sq,
-                                            m, self.tol, self.max_iter)
+            # clean path: the device-resident jitted while_loop, untouched —
+            # the iterations live inside ONE launch, so the trace gets one
+            # fit.loop span instead of per-iteration fit.iteration spans
+            from repro.obs import tracing as _tracing
+            with _tracing.span("fit.loop", estimator=type(self).__name__,
+                               max_iter=self.max_iter):
+                centers, _, iters = _kmeans_run(x.blocks, init, row_valid,
+                                                x_sq, m, self.tol,
+                                                self.max_iter)
             self.centers_ = centers[:, :m]
             self.n_iter_ = int(iters)
             return self
@@ -275,13 +282,14 @@ class KMeans(BaseEstimator):
             for it in range(start_it, self.max_iter + 1):
                 _fire("fit_iteration", estimator=type(self).__name__,
                       iteration=it)
-                centers, shift = _kmeans_step(x.blocks, centers, row_valid,
-                                              x_sq, m)
-                done = bool(shift <= self.tol)
-                if ckpt is not None:
-                    ckpt.save(it, {"centers": centers, "done": done})
-                if done:
-                    break
+                with _iter_span(self, it):
+                    centers, shift = _kmeans_step(x.blocks, centers, row_valid,
+                                                  x_sq, m)
+                    done = bool(shift <= self.tol)
+                    if ckpt is not None:
+                        ckpt.save(it, {"centers": centers, "done": done})
+                    if done:
+                        break
         self.centers_ = centers[:, :m]
         self.n_iter_ = it
         return self

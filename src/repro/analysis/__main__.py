@@ -164,6 +164,32 @@ def _ingest_fit() -> List["_plan.Plan"]:
                                         sv_cap=16).fit(x, yv))
 
 
+def _traced_fit() -> List["_plan.Plan"]:
+    """A KMeans fit recorded UNDER TRACING: proves instrumentation changes
+    no plan structure (the same rules stay clean on the captured plans —
+    including ``costmodel-drift`` at its default tolerance) and that the
+    trace itself round-trips as Chrome trace-event JSON with spans in it."""
+    import json
+    import os
+    import tempfile
+    from repro import obs
+    from repro.algorithms.kmeans import KMeans
+    rng = np.random.default_rng(9)
+    x = from_array(rng.normal(size=(64, 4)).astype(np.float32), (16, 4))
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "trace.json")
+        with obs.trace_to(path):
+            plans = _captured(lambda: KMeans(n_clusters=3, max_iter=2,
+                                             seed=0).fit(x))
+        with open(path) as f:
+            trace = json.load(f)
+    events = trace["traceEvents"]
+    assert events, "tracing a KMeans fit produced no spans"
+    assert all(e.get("ph") == "X" and "ts" in e and "dur" in e
+               for e in events), "malformed trace events"
+    return plans
+
+
 SCENARIOS = [
     ("six-op-chain", _six_op_chain),
     ("quickstart", _quickstart),
@@ -174,6 +200,7 @@ SCENARIOS = [
     ("pca-fit", _pca_fit),
     ("serve-predict", _serve_predict),
     ("ingest-fit", _ingest_fit),
+    ("traced-fit", _traced_fit),
 ]
 
 

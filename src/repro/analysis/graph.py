@@ -35,6 +35,7 @@ class PlanView:
         self._ids: Optional[Dict[int, str]] = None
         self._jaxpr = None
         self._hlo: Optional[str] = None
+        self._profile = None
 
     # -- coercion ------------------------------------------------------------
     @classmethod
@@ -112,3 +113,15 @@ class PlanView:
         if self._hlo is None:
             self._hlo = self.plan.lowered().compile().as_text()
         return self._hlo
+
+    # -- profile plane -------------------------------------------------------
+    def profile(self):
+        """Per-node measured-vs-predicted cost records
+        (:class:`repro.obs.profiler.ProfileReport`) — costs one per-node
+        EXECUTION of the plan, so rules should declare ``"profile"`` in
+        ``needs``.  The whole-plan fused timing and XLA memory analysis are
+        skipped: the drift check only needs the byte pairs."""
+        if self._profile is None:
+            from repro.obs.profiler import profile as _profile
+            self._profile = _profile(self.plan, fused=False, compiled=False)
+        return self._profile

@@ -17,6 +17,9 @@ Rule ids, one line each:
 ``recompile-hazard``      recordings whose plan-cache key cannot be stable
 ``peak-hbm-liveness``     naive vs liveness-minimized peak HBM (info; warn
                           when reordering saves >= 2x)
+``costmodel-drift``       measured per-node output bytes stay within the
+                          costmodel byte laws' tolerance (pays one per-node
+                          execution — the "profile" plane)
 """
 
 from __future__ import annotations
@@ -368,3 +371,31 @@ class PeakHbmLiveness(Rule):
                 data=data)]
         return [self.finding(
             "plan", str(rep), severity="info", data=data)]
+
+
+@register
+class CostmodelDrift(Rule):
+    """Execute the plan node by node (``obs.profile``) and flag any node
+    whose MEASURED output bytes land outside the costmodel byte laws'
+    tolerance (``costmodel.COSTMODEL_DRIFT_FACTOR``).  The laws are exact
+    for both block representations, so drift means a representation or a
+    law changed without the other — every liveness/fusion/bucket decision
+    derived from the stale side is then wrong.  This is the expensive rule
+    (one per-node execution), declared as its own ``"profile"`` plane."""
+
+    id = "costmodel-drift"
+    severity = "warn"
+    needs = ("plan", "profile")
+
+    def run(self, view: PlanView) -> List[Finding]:
+        out: List[Finding] = []
+        for rec in view.profile().drifting():
+            out.append(self.finding(
+                rec.site,
+                f"measured output {rec.measured_bytes:,} bytes vs "
+                f"costmodel-predicted {rec.predicted_bytes:,} "
+                f"({rec.ratio:.2f}x) — beyond the "
+                f"{costmodel.COSTMODEL_DRIFT_FACTOR}x drift tolerance; "
+                "the byte law and the block representation disagree",
+                data=(rec.measured_bytes, rec.predicted_bytes)))
+        return out

@@ -503,6 +503,28 @@ def liveness_reorder_pays(naive_peak: float, ordered_peak: float,
     return naive_peak >= factor * ordered_peak
 
 
+#: tolerated measured/predicted byte ratio per plan node before the
+#: ``costmodel-drift`` analysis rule fires.  The byte laws above are exact
+#: for the two block representations (dense stacked tensor, stacked BCOO
+#: values + 2-D int32 indices), so on main the measured footprint matches
+#: the prediction bit for bit and any drift means a representation or law
+#: changed without the other — the factor only absorbs backend-padded
+#: layouts, not modeling error.
+COSTMODEL_DRIFT_FACTOR = 1.25
+
+
+def costmodel_drift_ok(predicted_bytes: float, measured_bytes: float,
+                       factor: float = COSTMODEL_DRIFT_FACTOR) -> bool:
+    """Is one node's measured output footprint within the cost model's
+    tolerance?  Symmetric in direction: both a law UNDER-predicting (hides
+    an OOM the liveness analysis would have caught) and OVER-predicting
+    (peak-HBM lints fire spuriously) count as drift."""
+    if predicted_bytes <= 0 or measured_bytes <= 0:
+        return predicted_bytes == measured_bytes
+    ratio = measured_bytes / predicted_bytes
+    return (1.0 / factor) <= ratio <= factor
+
+
 # ---------------------------------------------------------------------------
 # Ingestion laws: peak HOST memory of the streaming loaders (paper §4.2.2).
 #

@@ -195,6 +195,44 @@ entry point                 what it does
                               ``todense()`` instead of a silent densify)
 ==========================  ==================================================
 
+Observability (``repro.obs``): one telemetry surface over every layer
+above — tracing is OFF by default and allocation-free while off, so the
+hot paths are byte-identical to the uninstrumented code:
+
+==========================  ==================================================
+entry point                 what it does
+==========================  ==================================================
+``obs.trace_to(path)``      arm tracing for a ``with`` block and export the
+                              captured spans as Chrome trace-event JSON
+                              (``chrome://tracing`` / Perfetto-loadable);
+                              ``obs.summary()`` renders the same spans as an
+                              aggregated terminal tree
+``obs.span/@obs.traced``    the span primitives the instrumented sites use;
+                              spans fence with ``block_until_ready`` so they
+                              time device work, not dispatch.  Span names:
+                              ``plan.optimize`` / ``plan.aot_compile`` /
+                              ``plan.launch``; ``fit.loop`` /
+                              ``fit.iteration``; ``resilience.rung`` (one per
+                              attempt, failures tagged ``error=``);
+                              ``serve.submit`` / ``serve.batch`` /
+                              ``serve.dispatch`` / ``serve.slice``;
+                              ``ingest.load`` / ``ingest.chunk``
+``obs.registry``            the process-wide Counter/Gauge/Histogram
+                              registry; ``plan.cache_stats()``,
+                              ``resilience.stats()`` and ``serve.stats()``
+                              are views over it (metric names ``plan.*``,
+                              ``resilience.*``, ``serve.*``, ``gemm.*`` —
+                              all increments locked, safe from server
+                              worker threads)
+``obs.snapshot()``          flat ``{metric: value}`` across the registry
+``obs.reset_all()``           (benchmarks embed a slice of it per record);
+                              reset zeroes every metric + the trace buffer
+``obs.profile(plan)``       per-node measured wall time + actual output
+                              bytes vs the ``costmodel`` byte laws; nodes
+                              beyond ``COSTMODEL_DRIFT_FACTOR`` feed the
+                              ``costmodel-drift`` analysis rule
+==========================  ==================================================
+
 Each claim in the tables above is machine-checked by ``repro.analysis``
 (``analysis.check(plan_or_dsarray)``, CLI ``python -m repro.analysis``).
 Rule ids per op row:

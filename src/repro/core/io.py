@@ -24,6 +24,7 @@ import numpy as np
 from repro.core import costmodel, readers
 from repro.core.blocking import ceil_div
 from repro.core.dsarray import DsArray, from_array
+from repro.obs import tracing as _tracing
 
 
 def _fire(site: str, **info) -> None:
@@ -104,41 +105,46 @@ def load_txt_file(path: str, block_shape: Tuple[int, int],
     ``from_array(np.loadtxt(path), block_shape)``.
     """
     _fire("io_load", source="load_txt_file", path=path)
-    bn, bm = int(block_shape[0]), int(block_shape[1])
-    m = None if n_features is None else int(n_features)
-    gm = buf = None
-    fill = n = 0
-    blockrows = []
-    for chunk in readers.iter_line_chunks(path, chunk_bytes):
-        _fire("io_load", source="load_txt_file", path=path,
-              block_row=len(blockrows))
-        arr = readers.parse_txt_chunk(chunk, delimiter, dtype)
-        if arr is None:
-            continue
-        if m is None:
-            m = arr.shape[1]
-        if buf is None:
-            gm = max(1, ceil_div(m, bm))
-            buf = np.zeros((bn, gm * bm), dtype)
-        if arr.shape[1] != m:
-            raise ValueError(f"{path}: ragged row width {arr.shape[1]} "
-                             f"(expected {m})")
-        done = 0
-        while done < arr.shape[0]:
-            take = min(bn - fill, arr.shape[0] - done)
-            buf[fill:fill + take, :m] = arr[done:done + take]
-            fill += take
-            done += take
-            n += take
-            if fill == bn:
-                blockrows.append(_blockrow_to_device(buf, gm, bm))
-                buf = np.zeros((bn, gm * bm), dtype)
-                fill = 0
-    if fill:
-        blockrows.append(_blockrow_to_device(buf, gm, bm))
-    if not blockrows:
-        raise ValueError(f"{path}: no data rows")
-    return _stack_blockrows(blockrows, n, m, (bn, bm))
+    with _tracing.span("ingest.load", source="load_txt_file", path=path):
+        bn, bm = int(block_shape[0]), int(block_shape[1])
+        m = None if n_features is None else int(n_features)
+        gm = buf = None
+        fill = n = 0
+        blockrows = []
+        for chunk in readers.iter_line_chunks(path, chunk_bytes):
+            _fire("io_load", source="load_txt_file", path=path,
+                  block_row=len(blockrows))
+            with _tracing.span("ingest.chunk", source="load_txt_file",
+                               block_row=len(blockrows),
+                               chunk_bytes=len(chunk)):
+                arr = readers.parse_txt_chunk(chunk, delimiter, dtype)
+                if arr is None:
+                    continue
+                if m is None:
+                    m = arr.shape[1]
+                if buf is None:
+                    gm = max(1, ceil_div(m, bm))
+                    buf = np.zeros((bn, gm * bm), dtype)
+                if arr.shape[1] != m:
+                    raise ValueError(
+                        f"{path}: ragged row width {arr.shape[1]} "
+                        f"(expected {m})")
+                done = 0
+                while done < arr.shape[0]:
+                    take = min(bn - fill, arr.shape[0] - done)
+                    buf[fill:fill + take, :m] = arr[done:done + take]
+                    fill += take
+                    done += take
+                    n += take
+                    if fill == bn:
+                        blockrows.append(_blockrow_to_device(buf, gm, bm))
+                        buf = np.zeros((bn, gm * bm), dtype)
+                        fill = 0
+        if fill:
+            blockrows.append(_blockrow_to_device(buf, gm, bm))
+        if not blockrows:
+            raise ValueError(f"{path}: no data rows")
+        return _stack_blockrows(blockrows, n, m, (bn, bm))
 
 
 def load_svmlight_file(path: str, block_shape: Tuple[int, int],
@@ -190,45 +196,51 @@ def load_svmlight_file(path: str, block_shape: Tuple[int, int],
         y_blockrows.append(_blockrow_to_device(ybuf, 1, 1))
         ybuf = np.zeros((bn, 1), dtype)
 
-    for chunk in readers.iter_line_chunks(path, chunk_bytes):
-        _fire("io_load", source="load_svmlight_file", path=path,
-              block_row=n // bn)
-        labels, rows, cols, vals = readers.parse_svmlight_chunk(
-            chunk, dtype, zero_based)
-        if cols.size and int(cols.max()) >= n_features:
-            raise ValueError(
-                f"{path}: feature id {int(cols.max())} out of range for "
-                f"n_features={n_features} with zero_based={zero_based} "
-                f"(a 0-based file read as 1-based shifts ids past the end)")
-        k = len(labels)
-        done = 0
-        while done < k:
-            take = min(bn - fill, k - done)
-            lo = np.searchsorted(rows, done)
-            hi = np.searchsorted(rows, done + take)
-            if store_sparse:
-                pend[0].append(rows[lo:hi] - done + fill)
-                pend[1].append(cols[lo:hi])
-                pend[2].append(vals[lo:hi])
-            else:
-                xbuf[rows[lo:hi] - done + fill, cols[lo:hi]] = vals[lo:hi]
-            ybuf[fill:fill + take, 0] = labels[done:done + take]
-            fill += take
-            done += take
-            n += take
-            if fill == bn:
-                _flush(bn)
-                fill = 0
-    if fill:
-        _flush(fill)
-    if n == 0:
-        raise ValueError(f"{path}: no data rows")
-    if store_sparse:
-        x = builder.finalize()
-    else:
-        x = _stack_blockrows(x_blockrows, n, n_features, (bn, bm))
-    y = _stack_blockrows(y_blockrows, n, 1, (bn, 1))
-    return x, y
+    with _tracing.span("ingest.load", source="load_svmlight_file",
+                       path=path, sparse=store_sparse):
+        for chunk in readers.iter_line_chunks(path, chunk_bytes):
+            _fire("io_load", source="load_svmlight_file", path=path,
+                  block_row=n // bn)
+            with _tracing.span("ingest.chunk", source="load_svmlight_file",
+                               block_row=n // bn, chunk_bytes=len(chunk)):
+                labels, rows, cols, vals = readers.parse_svmlight_chunk(
+                    chunk, dtype, zero_based)
+                if cols.size and int(cols.max()) >= n_features:
+                    raise ValueError(
+                        f"{path}: feature id {int(cols.max())} out of range "
+                        f"for n_features={n_features} with "
+                        f"zero_based={zero_based} (a 0-based file read as "
+                        f"1-based shifts ids past the end)")
+                k = len(labels)
+                done = 0
+                while done < k:
+                    take = min(bn - fill, k - done)
+                    lo = np.searchsorted(rows, done)
+                    hi = np.searchsorted(rows, done + take)
+                    if store_sparse:
+                        pend[0].append(rows[lo:hi] - done + fill)
+                        pend[1].append(cols[lo:hi])
+                        pend[2].append(vals[lo:hi])
+                    else:
+                        xbuf[rows[lo:hi] - done + fill,
+                             cols[lo:hi]] = vals[lo:hi]
+                    ybuf[fill:fill + take, 0] = labels[done:done + take]
+                    fill += take
+                    done += take
+                    n += take
+                    if fill == bn:
+                        _flush(bn)
+                        fill = 0
+        if fill:
+            _flush(fill)
+        if n == 0:
+            raise ValueError(f"{path}: no data rows")
+        if store_sparse:
+            x = builder.finalize()
+        else:
+            x = _stack_blockrows(x_blockrows, n, n_features, (bn, bm))
+        y = _stack_blockrows(y_blockrows, n, 1, (bn, 1))
+        return x, y
 
 
 # ---------------------------------------------------------------------------

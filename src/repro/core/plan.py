@@ -55,6 +55,8 @@ from repro.core import expr as _expr
 from repro.core.dsarray import DsArray
 from repro.core.expr import (ArrayLeaf, Blockwise, Expr, Leaf, MatMul,
                              Transpose, _is_ds, _is_sparse)
+from repro.obs import metrics as _metrics
+from repro.obs import tracing as _tracing
 
 # ---------------------------------------------------------------------------
 # Optimizer
@@ -378,20 +380,21 @@ _CACHE: "OrderedDict[tuple, callable]" = OrderedDict()
 # repeat recordings of an unchanged DAG skip canonicalize/CSE/fuse entirely
 _OPT_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
 _CACHE_MAX = 256
-_STATS = {"hits": 0, "misses": 0, "launches": 0,
-          "opt_runs": 0, "opt_skips": 0, "eager_launches": 0,
-          "aot_compiles": 0}
+# cache-discipline counters, registered as "plan.*" in the obs registry
+# (obs.snapshot() sees them; cache_stats() below stays the local view)
+_STATS = _metrics.CounterGroup(
+    "plan", ("hits", "misses", "launches", "opt_runs", "opt_skips",
+             "eager_launches", "aot_compiles"))
 
 
 def cache_stats() -> Dict[str, int]:
-    return dict(_STATS)
+    return _STATS.as_dict()
 
 
 def clear_cache() -> None:
     _CACHE.clear()
     _OPT_CACHE.clear()
-    _STATS.update(hits=0, misses=0, launches=0, opt_runs=0, opt_skips=0,
-                  eager_launches=0, aot_compiles=0)
+    _STATS.reset()
 
 
 def _fire(site: str, **info) -> None:
@@ -447,7 +450,7 @@ class Plan:
             cached = None
         if cached is not None:
             _OPT_CACHE.move_to_end(pre_key)
-            _STATS["opt_skips"] += 1
+            _STATS.inc("opt_skips")
             self.key, positions, stats = cached
             self.stats = dict(stats)
             self.leaves = [raw_leaves[p] for p in positions]
@@ -465,8 +468,12 @@ class Plan:
         return self._raw_roots
 
     def _optimize_now(self, pre_key=None, raw_leaves=None) -> None:
-        _STATS["opt_runs"] += 1
-        opt_roots, self.stats = optimize(self._raw_roots)
+        _STATS.inc("opt_runs")
+        with _tracing.span("plan.optimize",
+                           roots=len(self._raw_roots)) as sp:
+            opt_roots, self.stats = optimize(self._raw_roots)
+            sp.set(nodes_before=self.stats["nodes_before"],
+                   nodes_after=self.stats["nodes_after"])
         self.key, self.leaves = _plan_key(opt_roots)
         self._roots = opt_roots
         self.stats["n_inputs"] = len(self.leaves)
@@ -556,12 +563,14 @@ class Plan:
         if cached is not None:
             _CACHE.move_to_end(self.key)
             return False
-        with _expr.suspend_lazy():
-            compiled = jax.jit(
-                self._make_run(),
-                donate_argnums=tuple(donate_argnums)).lower(
-                *self.leaf_values()).compile()
-        _STATS["aot_compiles"] += 1
+        with _tracing.span("plan.aot_compile", inputs=len(self.leaves),
+                           donated=len(tuple(donate_argnums))):
+            with _expr.suspend_lazy():
+                compiled = jax.jit(
+                    self._make_run(),
+                    donate_argnums=tuple(donate_argnums)).lower(
+                    *self.leaf_values()).compile()
+        _STATS.inc("aot_compiles")
         _CACHE[self.key] = compiled
         while len(_CACHE) > _CACHE_MAX:
             _CACHE.popitem(last=False)
@@ -570,16 +579,26 @@ class Plan:
     def execute(self) -> tuple:
         _fire("plan_execute", mode="fused")
         compiled = _CACHE.get(self.key)
-        if compiled is None:
-            _STATS["misses"] += 1
+        cached = compiled is not None
+        if not cached:
+            _STATS.inc("misses")
             compiled = jax.jit(self._make_run())
             _CACHE[self.key] = compiled
             while len(_CACHE) > _CACHE_MAX:
                 _CACHE.popitem(last=False)
         else:
-            _STATS["hits"] += 1
+            _STATS.inc("hits")
             _CACHE.move_to_end(self.key)
-        _STATS["launches"] += 1
+        _STATS.inc("launches")
+        if _tracing.enabled():
+            # fence inside the span so it measures device work, not async
+            # dispatch; the disabled path below stays byte-identical
+            with _tracing.span("plan.launch", mode="fused", cached=cached,
+                               inputs=len(self.leaves)):
+                with _expr.suspend_lazy():
+                    out = compiled(*self.leaf_values())
+                jax.block_until_ready(out)
+            return out
         with _expr.suspend_lazy():
             return compiled(*self.leaf_values())
 
@@ -596,8 +615,17 @@ class Plan:
         reassociation.  Never cached — this is the emergency path.
         """
         _fire("plan_execute", mode=backend or "eager")
-        _STATS["eager_launches"] += 1
+        _STATS.inc("eager_launches")
         run = self._make_run()
+        if _tracing.enabled():
+            with _tracing.span("plan.launch", mode=backend or "eager",
+                               inputs=len(self.leaves)):
+                out = self._run_eager(run, backend)
+                jax.block_until_ready(out)
+            return out
+        return self._run_eager(run, backend)
+
+    def _run_eager(self, run, backend: Optional[str]) -> tuple:
         if backend is None:
             with _expr.suspend_lazy():
                 return run(*self.leaf_values())

@@ -53,6 +53,15 @@ def _fire(site: str, **info) -> None:
         ri.maybe_fire(site, **info)
 
 
+def _iter_span(est, iteration: int):
+    """One ``fit.iteration`` trace span per outer fit-loop pass (the no-op
+    singleton when tracing is off) — every host-driven fit loop wraps its
+    body in this, next to its ``_fire("fit_iteration", ...)`` hook."""
+    from repro.obs import tracing as _tracing
+    return _tracing.span("fit.iteration", estimator=type(est).__name__,
+                         iteration=iteration)
+
+
 # ---------------------------------------------------------------------------
 # Fitted-state (de)serialization over the trailing-underscore convention
 # ---------------------------------------------------------------------------

@@ -47,7 +47,8 @@ import numpy as np
 from repro.core.blocking import ceil_div
 from repro.core.dsarray import DsArray, from_array
 from repro.core import sparse as sparse_mod
-from repro.estimators.base import BaseClassifier, _FitCheckpoint, _fire
+from repro.estimators.base import BaseClassifier, _FitCheckpoint, \
+    _fire, _iter_span
 
 _SV_EPS = 1e-6           # dual weight below which a vector is not an SV
 
@@ -301,69 +302,70 @@ class CascadeSVM(BaseClassifier):
         for it in range(start_it, self.max_iter + 1):
             _fire("fit_iteration", estimator=type(self).__name__,
                   iteration=it)
-            # level 0: every chunk (data, multiplicity 1 each) + the
-            # fed-back global SV slot (model copies; static cap).  Each
-            # chunk's dense basis is a block-aligned slice of the stacked
-            # BCOO (x never densified) scattered on the host per node and
-            # released right after its solve — peak driver memory is ONE
-            # chunk, not the whole data matrix
-            sets = []
-            for r0, r1 in bounds:
-                cb = sparse_mod.rows_to_dense(x[r0:r1]).astype(np.float32)
-                cy = ypm[r0:r1]
-                b = np.concatenate([cb, fb_rows])
-                yy = np.concatenate([cy, fb_y])
-                mult = np.concatenate([np.ones(len(cb), np.float32),
-                                       fb_mult])
-                is_data = np.concatenate([np.ones(len(cb), bool),
-                                          np.zeros(self.sv_cap, bool)])
-                sets.append(self._node_solve(b, yy, mult, is_data, gamma))
-            # merge tree: arity-way concats of capped SV sets (all model
-            # copies — cross-chunk duplicates collapse without accumulating)
-            while len(sets) > 1:
-                nxt = []
-                for i in range(0, len(sets), self.cascade_arity):
-                    grp = sets[i: i + self.cascade_arity]
-                    if len(grp) == 1:
-                        nxt.append(grp[0])
-                        continue
-                    b = np.concatenate([g[0] for g in grp])
-                    yy = np.concatenate([g[1] for g in grp])
-                    mult = np.concatenate([g[3] for g in grp])
-                    is_data = np.zeros(len(b), bool)
-                    nxt.append(self._node_solve(b, yy, mult, is_data, gamma))
-                sets = nxt
-            rows, yy, aa, mm = sets[0]
-            keep = aa > _SV_EPS * self.c
-            self.sv_, self.sv_y_, self.dual_coef_ = rows, yy, aa
-            self.intercept_ = float((aa * yy).sum())   # b of the K+1 dual
-            self.n_sv_ = int(keep.sum())
-            self.n_iter_ = it
-            # global convergence: hinge objective over ALL data through the
-            # one recorded kernel-block plan (cache-hit after iteration 1)
-            dec = self._decision_values(xl, x, x_sq)
-            obj = float(np.maximum(0.0, 1.0 - ypm * dec).sum())
-            # no convergence verdict until there is a previous objective to
-            # compare against (inf <= tol*inf would stop every fit at it=1)
-            if np.isfinite(prev_obj) and \
-                    abs(prev_obj - obj) <= self.tol * max(1.0, abs(prev_obj)):
-                self.converged_ = True
-            else:
-                prev_obj = obj
-                fb_rows, fb_y, fb_mult = rows, yy, mm
-            if ckpt is not None:
-                # commit AFTER the state advance, so the newest committed
-                # iteration fully determines every later one
-                ckpt.save(it, {
-                    "fb_rows": fb_rows, "fb_y": fb_y, "fb_mult": fb_mult,
-                    "prev_obj": float(prev_obj),
-                    "sv": self.sv_, "sv_y": self.sv_y_,
-                    "dual_coef": self.dual_coef_,
-                    "intercept": float(self.intercept_),
-                    "n_sv": int(self.n_sv_), "n_iter": int(self.n_iter_),
-                    "converged": bool(self.converged_)})
-            if self.converged_:
-                break
+            with _iter_span(self, it):
+                # level 0: every chunk (data, multiplicity 1 each) + the
+                # fed-back global SV slot (model copies; static cap).  Each
+                # chunk's dense basis is a block-aligned slice of the stacked
+                # BCOO (x never densified) scattered on the host per node and
+                # released right after its solve — peak driver memory is ONE
+                # chunk, not the whole data matrix
+                sets = []
+                for r0, r1 in bounds:
+                    cb = sparse_mod.rows_to_dense(x[r0:r1]).astype(np.float32)
+                    cy = ypm[r0:r1]
+                    b = np.concatenate([cb, fb_rows])
+                    yy = np.concatenate([cy, fb_y])
+                    mult = np.concatenate([np.ones(len(cb), np.float32),
+                                           fb_mult])
+                    is_data = np.concatenate([np.ones(len(cb), bool),
+                                              np.zeros(self.sv_cap, bool)])
+                    sets.append(self._node_solve(b, yy, mult, is_data, gamma))
+                # merge tree: arity-way concats of capped SV sets (all model
+                # copies — cross-chunk duplicates collapse without accumulating)
+                while len(sets) > 1:
+                    nxt = []
+                    for i in range(0, len(sets), self.cascade_arity):
+                        grp = sets[i: i + self.cascade_arity]
+                        if len(grp) == 1:
+                            nxt.append(grp[0])
+                            continue
+                        b = np.concatenate([g[0] for g in grp])
+                        yy = np.concatenate([g[1] for g in grp])
+                        mult = np.concatenate([g[3] for g in grp])
+                        is_data = np.zeros(len(b), bool)
+                        nxt.append(self._node_solve(b, yy, mult, is_data, gamma))
+                    sets = nxt
+                rows, yy, aa, mm = sets[0]
+                keep = aa > _SV_EPS * self.c
+                self.sv_, self.sv_y_, self.dual_coef_ = rows, yy, aa
+                self.intercept_ = float((aa * yy).sum())   # b of the K+1 dual
+                self.n_sv_ = int(keep.sum())
+                self.n_iter_ = it
+                # global convergence: hinge objective over ALL data through the
+                # one recorded kernel-block plan (cache-hit after iteration 1)
+                dec = self._decision_values(xl, x, x_sq)
+                obj = float(np.maximum(0.0, 1.0 - ypm * dec).sum())
+                # no convergence verdict until there is a previous objective to
+                # compare against (inf <= tol*inf would stop every fit at it=1)
+                if np.isfinite(prev_obj) and \
+                        abs(prev_obj - obj) <= self.tol * max(1.0, abs(prev_obj)):
+                    self.converged_ = True
+                else:
+                    prev_obj = obj
+                    fb_rows, fb_y, fb_mult = rows, yy, mm
+                if ckpt is not None:
+                    # commit AFTER the state advance, so the newest committed
+                    # iteration fully determines every later one
+                    ckpt.save(it, {
+                        "fb_rows": fb_rows, "fb_y": fb_y, "fb_mult": fb_mult,
+                        "prev_obj": float(prev_obj),
+                        "sv": self.sv_, "sv_y": self.sv_y_,
+                        "dual_coef": self.dual_coef_,
+                        "intercept": float(self.intercept_),
+                        "n_sv": int(self.n_sv_), "n_iter": int(self.n_iter_),
+                        "converged": bool(self.converged_)})
+                if self.converged_:
+                    break
         return self
 
     # -- inference -----------------------------------------------------------

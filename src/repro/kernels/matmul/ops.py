@@ -31,6 +31,16 @@ from jax.experimental.sparse import BCOO
 
 from repro.core.blocking import round_up
 from repro.kernels.matmul.kernel import matmul_padded, stacked_matmul
+from repro.obs import metrics as _metrics
+
+# backend-dispatch decisions ("gemm.dispatch_*" in obs.snapshot()).  These
+# count DECISIONS, not launches: inside a jitted plan body the dispatch
+# (like its `_fire` hook) runs once at trace time — a span here would time
+# tracing, not device work, so GEMM telemetry is counters only and per-op
+# device time is the profiler's job (obs.profile).
+_DISPATCHES = _metrics.CounterGroup(
+    "gemm", ("dispatch_pallas", "dispatch_einsum", "dispatch_interpret",
+             "dispatch_sparse"))
 
 
 def _fire(site: str, **info) -> None:
@@ -131,12 +141,14 @@ def local_matmul(a: jnp.ndarray, b: jnp.ndarray, *, out_dtype=None,
     out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
     if isinstance(a, BCOO):
         _fire("gemm_dispatch", mode="sparse")
+        _DISPATCHES.inc("dispatch_sparse")
         return _sparse_local_matmul(a, b, out_dtype=out_dtype,
                                     transpose_a=transpose_a)
     if isinstance(b, BCOO):
         b = b.todense()         # dense @ sp: right operand densifies
     mode = gemm_backend(bn, bk, bm, jnp.dtype(a.dtype), backend)
     _fire("gemm_dispatch", mode=mode)
+    _DISPATCHES.inc(f"dispatch_{mode}")
     if mode == "einsum":
         preferred = None
         if jnp.issubdtype(a.dtype, jnp.floating):

@@ -1,0 +1,199 @@
+"""Cost-model-attributed plan profiling: predicted vs measured, per node.
+
+Every optimization decision in the repo — blockwise fusion, liveness
+reordering, GEMM backend dispatch, serve bucket padding — is justified by
+the ``costmodel`` byte/flop laws, but until now nothing ever checked the
+laws against reality.  :func:`profile` closes the loop: it executes a
+plan's optimized DAG node by node (the same child-first emission order the
+fused body evaluates in, each ``lower`` fenced with ``block_until_ready``)
+and pairs, per node,
+
+* **measured wall time** of that node's dispatch;
+* **measured bytes** of its actual output buffers (dense stacked tensor
+  ``.nbytes``; stacked BCOO ``data.nbytes + indices.nbytes``; scalar
+  avals by shape x itemsize);
+* **predicted bytes** from the ``costmodel`` laws the liveness analysis
+  uses (``analysis.liveness.node_output_bytes`` ->
+  ``costmodel.node_live_bytes``).
+
+The report also times the FUSED whole-plan execution (so per-node dispatch
+cost vs one-launch cost is visible — the paper's fusion claim, measured)
+and, where the backend supports it, attaches the compiled artifact's own
+``memory_analysis()`` numbers for the whole program.
+
+Nodes whose measured/predicted ratio falls outside
+``costmodel.COSTMODEL_DRIFT_FACTOR`` are *drifting*; the ``costmodel-drift``
+analysis rule turns them into findings, making the cost model a checked
+contract instead of documentation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core import costmodel, expr as _expr, plan as _plan
+from repro.core.dsarray import DsArray
+from repro.core.expr import ArrayLeaf, Expr, Leaf
+
+
+def _as_plan(target) -> "_plan.Plan":
+    if isinstance(target, _plan.Plan):
+        return target
+    items = target if isinstance(target, (list, tuple)) else [target]
+    roots = []
+    for t in items:
+        if isinstance(t, (_expr.LazyDsArray, _expr.LazyScalar)):
+            roots.append(t.expr)
+        elif isinstance(t, Expr):
+            roots.append(t)
+        elif isinstance(t, DsArray):
+            roots.append(_expr.Leaf(t))
+        else:
+            raise TypeError(f"cannot profile {type(t).__name__}: expected "
+                            "a Plan, lazy expression, Expr or DsArray")
+    return _plan.Plan(roots)
+
+
+def _measured_bytes(val) -> int:
+    """Actual bytes of one node's output buffers."""
+    if isinstance(val, DsArray):
+        val = val.blocks
+    if hasattr(val, "data") and hasattr(val, "indices"):       # BCOO
+        return int(val.data.nbytes) + int(val.indices.nbytes)
+    if hasattr(val, "nbytes"):
+        return int(val.nbytes)
+    return int(np.asarray(val).nbytes)
+
+
+def _block(val) -> None:
+    jax.block_until_ready(val)
+
+
+@dataclasses.dataclass
+class NodeProfile:
+    """One plan node's measured-vs-predicted record."""
+
+    site: str                  # "Kind[key]#nID", the analysis site label
+    kind: str                  # node class name
+    time_s: float              # fenced wall time of this node's dispatch
+    measured_bytes: int        # actual output buffer bytes
+    predicted_bytes: int       # costmodel law prediction for the same node
+
+    @property
+    def ratio(self) -> float:
+        if self.predicted_bytes <= 0:
+            return float("inf") if self.measured_bytes else 1.0
+        return self.measured_bytes / self.predicted_bytes
+
+    def within(self, factor: Optional[float] = None) -> bool:
+        return costmodel.costmodel_drift_ok(
+            self.predicted_bytes, self.measured_bytes,
+            factor if factor is not None
+            else costmodel.COSTMODEL_DRIFT_FACTOR)
+
+
+@dataclasses.dataclass
+class ProfileReport:
+    """Per-node records + whole-plan timings for one profiled execution."""
+
+    nodes: List[NodeProfile]
+    eager_total_s: float                 # sum of per-node dispatch times
+    fused_time_s: Optional[float]        # one fenced compiled execution
+    compiled: Dict[str, int]             # XLA memory_analysis(), if exposed
+
+    def drifting(self, factor: Optional[float] = None) -> List[NodeProfile]:
+        return [n for n in self.nodes if not n.within(factor)]
+
+    def __str__(self) -> str:
+        lines = [f"{'node':<44}{'time':>10}{'measured':>14}"
+                 f"{'predicted':>14}{'ratio':>8}"]
+        for n in self.nodes:
+            lines.append(f"{n.site[:43]:<44}{n.time_s * 1e3:>8.2f}ms"
+                         f"{n.measured_bytes:>14,}{n.predicted_bytes:>14,}"
+                         f"{n.ratio:>8.2f}")
+        lines.append(f"per-node total {self.eager_total_s * 1e3:.2f}ms"
+                     + (f"; fused {self.fused_time_s * 1e3:.2f}ms"
+                        if self.fused_time_s is not None else ""))
+        if self.compiled:
+            lines.append("compiled: " + ", ".join(
+                f"{k}={v:,}" for k, v in self.compiled.items()))
+        drift = self.drifting()
+        lines.append(f"{len(drift)} node(s) beyond "
+                     f"{costmodel.COSTMODEL_DRIFT_FACTOR}x drift tolerance"
+                     if drift else "all nodes within drift tolerance")
+        return "\n".join(lines)
+
+
+def _compiled_memory(plan: "_plan.Plan") -> Dict[str, int]:
+    """Whole-program memory analysis from the compiled artifact, where the
+    backend exposes it (CPU PJRT often does not — then {})."""
+    try:
+        mem = plan.lowered().compile().memory_analysis()
+        out = {}
+        for field, key in (
+                ("argument_size_in_bytes", "argument_bytes"),
+                ("output_size_in_bytes", "output_bytes"),
+                ("temp_size_in_bytes", "temp_bytes"),
+                ("generated_code_size_in_bytes", "generated_code_bytes")):
+            v = getattr(mem, field, None)
+            if v is not None:
+                out[key] = int(v)
+        return out
+    except Exception:                                    # noqa: BLE001
+        return {}
+
+
+def profile(target, *, fused: bool = True,
+            compiled: bool = True) -> ProfileReport:
+    """Predicted-vs-measured cost report for one plan execution.
+
+    ``fused=False`` skips the whole-plan compiled timing, ``compiled=False``
+    skips the XLA memory analysis (both cost a compile; the
+    ``costmodel-drift`` rule only needs the per-node byte pairs, so it
+    passes both off).
+    """
+    # imported here, not at module top: liveness imports core.plan, which
+    # imports repro.obs — the package namespace must finish loading first
+    from repro.analysis.liveness import node_output_bytes
+
+    p = _as_plan(target)
+    order = _plan.emission_order(p.roots)
+    ids = {id(n): f"n{i}" for i, n in enumerate(order)}
+    memo: Dict[int, object] = {}
+    records: List[NodeProfile] = []
+    with _expr.suspend_lazy():
+        for node in order:
+            if isinstance(node, Leaf):
+                memo[id(node)] = node.value
+                continue
+            if isinstance(node, ArrayLeaf):
+                memo[id(node)] = node.value
+                continue
+            args = [memo[id(c)] for c in node.children]
+            t0 = time.perf_counter()
+            out = node.lower(*args)
+            _block(out)
+            dt = time.perf_counter() - t0
+            memo[id(node)] = out
+            records.append(NodeProfile(
+                site=f"{node.describe()}#{ids[id(node)]}",
+                kind=type(node).__name__,
+                time_s=dt,
+                measured_bytes=_measured_bytes(out),
+                predicted_bytes=int(node_output_bytes(node))))
+    fused_s = None
+    if fused:
+        p.execute()                      # warm: compile outside the timing
+        t0 = time.perf_counter()
+        _block(p.execute())
+        fused_s = time.perf_counter() - t0
+    return ProfileReport(
+        nodes=records,
+        eager_total_s=sum(r.time_s for r in records),
+        fused_time_s=fused_s,
+        compiled=_compiled_memory(p) if compiled else {})

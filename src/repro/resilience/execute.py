@@ -42,6 +42,8 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 
 from repro.core import expr as _expr
 from repro.core import plan as _plan
+from repro.obs import metrics as _metrics
+from repro.obs import tracing as _tracing
 from repro.resilience import inject as _inject
 from repro.resilience.guards import NumericalDivergence, guard_finite, \
     poison_block
@@ -135,19 +137,23 @@ class RetryPolicy:
                    self.max_backoff)
 
 
-_STATS = {"executions": 0, "retries": 0, "degradations": 0,
-          "recoveries": 0, "guard_failures": 0}
+# registered as "resilience.*" in the obs registry; CounterGroup.inc is a
+# LOCKED increment — these counters are hit from PredictServer worker
+# threads, where the old dict's bare `+=` read-modify-write lost updates
+_STATS = _metrics.CounterGroup(
+    "resilience", ("executions", "retries", "degradations", "recoveries",
+                   "guard_failures"))
 
 
 def stats() -> Dict[str, int]:
     """Counters since the last :func:`reset_stats` — the resilience
     analogue of ``plan.cache_stats()``; tests assert the clean path shows
     zero retries/degradations and each chaos test shows its recovery."""
-    return dict(_STATS)
+    return _STATS.as_dict()
 
 
 def reset_stats() -> None:
-    _STATS.update({k: 0 for k in _STATS})
+    _STATS.reset()
 
 
 # ---------------------------------------------------------------------------
@@ -190,20 +196,24 @@ def run_resilient(*exprs, policy: Optional[RetryPolicy] = None,
         raise ValueError(f"unknown guard {guard!r} (want None or 'finite')")
     pol = policy or RetryPolicy()
     p = _as_plan(exprs)
-    _STATS["executions"] += 1
+    _STATS.inc("executions")
     rung_i = 0
     attempts = 0
     recovered = False
     while True:
         rung = pol.ladder[rung_i]
         try:
-            out = _execute_rung(p, rung)
+            # one span per ATTEMPT (failed ones carry an "error" attr), so
+            # a trace shows every rung the ladder walked, not just the win
+            with _tracing.span("resilience.rung", rung=rung,
+                               attempt=attempts):
+                out = _execute_rung(p, rung)
             break
         except Exception as exc:                         # noqa: BLE001
             kind = pol.classify(exc)
             if kind == TRANSIENT and attempts < pol.max_retries:
                 attempts += 1
-                _STATS["retries"] += 1
+                _STATS.inc("retries")
                 recovered = True
                 d = pol.delay(attempts)
                 if d > 0.0:
@@ -212,12 +222,12 @@ def run_resilient(*exprs, policy: Optional[RetryPolicy] = None,
             if kind == OOM and rung_i + 1 < len(pol.ladder):
                 rung_i += 1
                 attempts = 0
-                _STATS["degradations"] += 1
+                _STATS.inc("degradations")
                 recovered = True
                 continue
             raise
     if recovered:
-        _STATS["recoveries"] += 1
+        _STATS.inc("recoveries")
     # post-op poison (chaos for the guards): armed specs write NaN/Inf into
     # a named block coordinate of a named root
     for spec in _inject.poison_matches("plan_result"):
@@ -230,6 +240,6 @@ def run_resilient(*exprs, policy: Optional[RetryPolicy] = None,
         try:
             guard_finite(*out)
         except NumericalDivergence:
-            _STATS["guard_failures"] += 1
+            _STATS.inc("guard_failures")
             raise
     return out[0] if len(out) == 1 else out

@@ -38,6 +38,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import tracing as _tracing
 from repro.resilience.execute import RetryPolicy, TRANSIENT, run_resilient
 from repro.serve import batching as _batching
 from repro.serve import stats as _stats
@@ -128,16 +129,17 @@ class PredictServer:
         """Enqueue one request (rows for ``name``) and return its future.
         Payload validation happens here — a malformed request raises at
         submit instead of poisoning a batch."""
-        model = self.registry.get(name, version)
-        payload, n, fmt = model.normalize(payload)
-        pend = _Pending(model=model, payload=payload, n_rows=n, fmt=fmt,
-                        future=PredictFuture())
-        with self._wake:
-            self._queue.append(pend)
-            _stats.bump("requests")
-            _stats.observe_queue_depth(len(self._queue))
-            self._wake.notify()
-        return pend.future
+        with _tracing.span("serve.submit", model=name):
+            model = self.registry.get(name, version)
+            payload, n, fmt = model.normalize(payload)
+            pend = _Pending(model=model, payload=payload, n_rows=n, fmt=fmt,
+                            future=PredictFuture())
+            with self._wake:
+                self._queue.append(pend)
+                _stats.bump("requests")
+                _stats.observe_queue_depth(len(self._queue))
+                self._wake.notify()
+            return pend.future
 
     # -- dispatch loop -------------------------------------------------------
     def pump(self) -> int:
@@ -218,9 +220,14 @@ class PredictServer:
         shed = False
         while True:
             try:
-                _fire("serve_dispatch", mode="batched", model=model.name,
-                      requests=len(chunk))
-                outs = self._predict_batched(model, fmt, chunk)
+                # one span per dispatch ATTEMPT — transient retries each
+                # leave their own (error-tagged) span in the trace
+                with _tracing.span("serve.dispatch", mode="batched",
+                                   model=model.name, requests=len(chunk),
+                                   attempt=attempts):
+                    _fire("serve_dispatch", mode="batched", model=model.name,
+                          requests=len(chunk))
+                    outs = self._predict_batched(model, fmt, chunk)
                 break
             except Exception as exc:                     # noqa: BLE001
                 if self.policy.classify(exc) == TRANSIENT \
@@ -256,7 +263,9 @@ class PredictServer:
         bucket = model.spec.bucket_for(total, fmt)
         if bucket is None:
             return None
-        x = _batching.assemble([p.payload for p in chunk], bucket)
+        with _tracing.span("serve.batch", model=model.name,
+                           requests=len(chunk), rows=total):
+            x = _batching.assemble([p.payload for p in chunk], bucket)
         if x is None:                                   # nse overflow
             return None
         if model.plan_backed:
@@ -266,8 +275,9 @@ class PredictServer:
         else:
             out = model.estimator.predict(x)
             _stats.bump("eager_requests", len(chunk))
-        rows = np.asarray(out.collect())
-        return _batching.split_rows(rows, [p.n_rows for p in chunk])
+        with _tracing.span("serve.slice", requests=len(chunk)):
+            rows = np.asarray(out.collect())
+            return _batching.split_rows(rows, [p.n_rows for p in chunk])
 
     def _serve_single(self, model: ServedModel,
                       chunk: List[_Pending]) -> None:
@@ -277,9 +287,12 @@ class PredictServer:
             attempts = 0
             while True:
                 try:
-                    _fire("serve_dispatch", mode="single", model=model.name,
-                          requests=1)
-                    rows = model.predict_direct(p.payload)
+                    with _tracing.span("serve.dispatch", mode="single",
+                                       model=model.name, requests=1,
+                                       attempt=attempts):
+                        _fire("serve_dispatch", mode="single",
+                              model=model.name, requests=1)
+                        rows = model.predict_direct(p.payload)
                     _stats.bump("single_dispatches")
                     p.future._finish(rows)
                     break

@@ -1,98 +1,84 @@
 """Request-level serving observability: counters + latency percentiles.
 
 The observability surface ``resilience.stats()`` established, extended to
-the serving loop: module-level counters that stay ALL ZERO until a server
-runs, a bounded per-request latency reservoir, and a ``stats()`` snapshot
-combining both.  Tests and benchmarks assert the steady-state contract on
-these numbers — ``cache_hits == requests`` for in-bucket geometries, zero
-``batch_sheds``/``dispatch_retries`` on clean runs, every recovery path
-bumping exactly its own counter under injected faults.
+the serving loop — and, since the ``repro.obs`` registry landed, a VIEW
+over it: every counter here is an ``obs`` Counter registered as
+``"serve.<name>"``, the queue watermarks are Gauges, and the bounded
+per-request latency reservoir is a Histogram (``"serve.latency_s"``).
+``stats()``/``latency_summary()`` keep their exact historical shapes
+(key order, plain ints, nearest-rank percentile math), so every test and
+benchmark asserting the steady-state contract — ``cache_hits ==
+requests`` for in-bucket geometries, zero ``batch_sheds``/
+``dispatch_retries`` on clean runs, every recovery path bumping exactly
+its own counter under injected faults — reads the same numbers as before
+the migration.  All increments take the registry lock: these paths run on
+``PredictServer.start()`` worker threads.
 """
 
 from __future__ import annotations
 
-import threading
-from collections import deque
 from typing import Dict
 
-_COUNTERS = {
-    # request lifecycle
-    "requests": 0,            # submitted
-    "responses": 0,           # completed successfully
-    "failures": 0,            # completed with an error
-    # micro-batching
-    "batches": 0,             # batched dispatches executed
-    "batched_requests": 0,    # requests served via a batched dispatch
-    "single_dispatches": 0,   # requests served via the unbatched fallback
-    # plan-cache discipline (the zero-recompile acceptance)
-    "cache_hits": 0,          # requests whose plan hit a warmed compiled entry
-    "cache_misses": 0,        # requests whose plan had to compile at serve time
-    "eager_requests": 0,      # requests served by estimators without a plan
-    # resilience / degradation
-    "bucket_fallbacks": 0,    # no declared bucket fit (size or nse overflow)
-    "batch_sheds": 0,         # batched dispatch abandoned -> unbatched path
-    "dispatch_retries": 0,    # transient serve_dispatch retries
-    # queue gauges
-    "queue_depth": 0,
-    "queue_depth_peak": 0,
-}
+from repro.obs import metrics as _metrics
 
-_LOCK = threading.Lock()
-_LATENCIES = deque(maxlen=4096)   # seconds, per completed request
+_COUNTER_NAMES = (
+    # request lifecycle
+    "requests",            # submitted
+    "responses",           # completed successfully
+    "failures",            # completed with an error
+    # micro-batching
+    "batches",             # batched dispatches executed
+    "batched_requests",    # requests served via a batched dispatch
+    "single_dispatches",   # requests served via the unbatched fallback
+    # plan-cache discipline (the zero-recompile acceptance)
+    "cache_hits",          # requests whose plan hit a warmed compiled entry
+    "cache_misses",        # requests whose plan had to compile at serve time
+    "eager_requests",      # requests served by estimators without a plan
+    # resilience / degradation
+    "bucket_fallbacks",    # no declared bucket fit (size or nse overflow)
+    "batch_sheds",         # batched dispatch abandoned -> unbatched path
+    "dispatch_retries",    # transient serve_dispatch retries
+)
+
+_COUNTERS = _metrics.CounterGroup("serve", _COUNTER_NAMES)
+_QUEUE_DEPTH = _metrics.registry.gauge("serve.queue_depth")
+_QUEUE_PEAK = _metrics.registry.gauge("serve.queue_depth_peak")
+_LATENCY = _metrics.registry.histogram("serve.latency_s", maxlen=4096)
 
 
 def bump(name: str, n: int = 1) -> None:
-    with _LOCK:
-        _COUNTERS[name] += n
+    _COUNTERS.inc(name, n)
 
 
 def observe_queue_depth(depth: int) -> None:
-    with _LOCK:
-        _COUNTERS["queue_depth"] = depth
-        if depth > _COUNTERS["queue_depth_peak"]:
-            _COUNTERS["queue_depth_peak"] = depth
+    _QUEUE_DEPTH.set(depth)
+    _QUEUE_PEAK.set_max(depth)
 
 
 def record_latency(seconds: float) -> None:
-    with _LOCK:
-        _LATENCIES.append(seconds)
-
-
-def _percentile(sorted_vals, q: float) -> float:
-    if not sorted_vals:
-        return 0.0
-    i = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
-    return sorted_vals[i]
+    _LATENCY.observe(seconds)
 
 
 def latency_summary() -> Dict[str, float]:
     """p50/p99/mean/max over the latency reservoir, in milliseconds."""
-    with _LOCK:
-        vals = sorted(_LATENCIES)
-    if not vals:
-        return {"count": 0, "p50_ms": 0.0, "p99_ms": 0.0,
-                "mean_ms": 0.0, "max_ms": 0.0}
-    return {
-        "count": len(vals),
-        "p50_ms": _percentile(vals, 0.50) * 1e3,
-        "p99_ms": _percentile(vals, 0.99) * 1e3,
-        "mean_ms": sum(vals) / len(vals) * 1e3,
-        "max_ms": vals[-1] * 1e3,
-    }
+    s = _LATENCY.summary(scale=1e3)
+    return {"count": s["count"], "p50_ms": s["p50"], "p99_ms": s["p99"],
+            "mean_ms": s["mean"], "max_ms": s["max"]}
 
 
 def stats() -> Dict[str, object]:
     """Counters since the last :func:`reset_stats`, plus the latency
     summary under ``"latency"`` — the serving analogue of
     ``resilience.stats()`` / ``plan.cache_stats()``."""
-    with _LOCK:
-        out: Dict[str, object] = dict(_COUNTERS)
+    out: Dict[str, object] = _COUNTERS.as_dict()
+    out["queue_depth"] = _QUEUE_DEPTH.value
+    out["queue_depth_peak"] = _QUEUE_PEAK.value
     out["latency"] = latency_summary()
     return out
 
 
 def reset_stats() -> None:
-    with _LOCK:
-        for k in _COUNTERS:
-            _COUNTERS[k] = 0
-        _LATENCIES.clear()
+    _COUNTERS.reset()
+    _QUEUE_DEPTH.reset()
+    _QUEUE_PEAK.reset()
+    _LATENCY.reset()

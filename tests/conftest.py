@@ -185,3 +185,21 @@ def _repro_debug_invariants(request):
             os.environ["REPRO_DEBUG"] = prev
     else:
         yield
+
+
+# ---------------------------------------------------------------------------
+# Telemetry hygiene: every test starts with zeroed counters and an empty
+# trace buffer.  One obs.reset_all() replaces the per-module autouse
+# fixtures that used to hand-reset serve/resilience stats in their own
+# test files (plan compiled caches are storage, not telemetry — tests that
+# need a cold cache still call plan.clear_cache() themselves).
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(autouse=True)
+def _obs_reset():
+    from repro import obs
+    obs.reset_all()
+    yield
+    obs.reset_all()
+    obs.disable()

@@ -46,11 +46,8 @@ def _mats(rng, n=8, k=12, m=6, bs=((4, 4), (4, 3))):
             (x @ y) * 2.0 + 1.0)
 
 
-@pytest.fixture(autouse=True)
-def _fresh_stats():
-    R.reset_stats()
-    yield
-    R.reset_stats()
+# counter hygiene is the session-wide autouse obs.reset_all() fixture in
+# conftest.py — no per-module reset needed
 
 
 # ---------------------------------------------------------------------------

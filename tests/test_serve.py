@@ -67,11 +67,8 @@ def ridge():
     return _fit_ridge()
 
 
-@pytest.fixture(autouse=True)
-def _clean_counters():
-    serve.reset_stats()
-    yield
-    serve.reset_stats()
+# counter hygiene is the session-wide autouse obs.reset_all() fixture in
+# conftest.py — no per-module reset needed
 
 
 def _registry(est, **kw):
